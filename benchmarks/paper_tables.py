@@ -1,0 +1,155 @@
+"""Reproductions of every NPE table/figure (deliverable d).
+
+One function per paper artifact; each returns rows and prints a compact
+CSV.  benchmarks/run.py drives them all.  Paper-quoted values are printed
+alongside ours with the deviation, so faithfulness is auditable in the
+output itself.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import cycles as cy
+from repro.core.overlay import (NPEHardware, NVU_ROUTINES,
+                                PAPER_TABLE3_CYCLES, nvu_cycles)
+
+
+def table2() -> List[Dict]:
+    """Throughput requirements (paper Table 2): exact analytic reproduction."""
+    hw = NPEHardware(vrwidth=1024)
+    rows = cy.throughput_requirements(hw, cy.BertShape(seq=512), bits=16)
+    paper = {"softmax": (8192, 32, 5.0), "layernorm_a": (147456, 2.7, 7.5),
+             "gelu": (589824, 2.7, 30.0), "layernorm_b": (589824, 0.7, 30.0)}
+    out = []
+    for k, r in rows.items():
+        pb, pt, pp = paper[k]
+        out.append(dict(nonlinearity=k, budget=int(r["budget"]),
+                        throughput=round(r["throughput"], 2),
+                        pct_cycles=round(100 * r["pct"], 1),
+                        paper_budget=pb, paper_throughput=pt, paper_pct=pp))
+    return out
+
+
+def table3() -> List[Dict]:
+    """NVU throughput (paper Table 3): our microprogram cycle model vs the
+    paper's measured values (the paper numbers feed downstream figures)."""
+    out = []
+    for vr in (256, 512, 1024, 2048):
+        hw = NPEHardware(vrwidth=vr)
+        for routine in ("softmax", "layernorm", "gelu"):
+            model = NVU_ROUTINES[routine](hw, 512)
+            paper = PAPER_TABLE3_CYCLES[vr][routine]
+            out.append(dict(vrwidth=vr, routine=routine,
+                            model_cycles=model, paper_cycles=paper,
+                            deviation_pct=round(100 * (model - paper) / paper)))
+    return out
+
+
+def table4() -> List[Dict]:
+    """Overlap-relaxed throughput requirements (paper Table 4)."""
+    hw = NPEHardware(vrwidth=1024)
+    got = cy.optimized_requirements(hw)
+    paper = {64: (0.92, 2.6, 0.6, 2.6), 128: (1.79, 2.6, 0.6, 2.6),
+             256: (3.39, 2.6, 0.6, 2.6), 512: (6.29, 2.6, 0.6, 2.6)}
+    out = []
+    for s, r in got.items():
+        ps, pa, pb, pg = paper[s]
+        out.append(dict(seq=s, softmax=round(r["softmax"], 2),
+                        ln_a=round(r["layernorm_a"], 2),
+                        ln_b=round(r["layernorm_b"], 2),
+                        gelu=round(r["gelu"], 2),
+                        paper_softmax=ps))
+    return out
+
+
+def fig5() -> List[Dict]:
+    """Inference-time overhead vs NVU width (paper Fig 5)."""
+    out = []
+    for s in (64, 128, 256, 512):
+        base = cy.inference_cycles(NPEHardware(vrwidth=2048),
+                                   cy.BertShape(seq=s), 16)["total_cycles"]
+        row = dict(seq=s)
+        for vr in (256, 512, 1024):
+            c = cy.inference_cycles(NPEHardware(vrwidth=vr),
+                                    cy.BertShape(seq=s), 16)["total_cycles"]
+            row[f"nvu{vr}_overhead_pct"] = round(100 * (c - base) / base, 1)
+        out.append(row)
+    return out
+
+
+def fig6() -> List[Dict]:
+    """BERT inference latency, 8/16-bit MMU x NVU width (paper Fig 6)."""
+    out = []
+    for bits in (8, 16):
+        for vr in (256, 512, 1024, 2048):
+            hw = NPEHardware(vrwidth=vr)
+            row = dict(mmu_bits=bits, vrwidth=vr)
+            for s in (64, 128, 256, 512):
+                row[f"s{s}_ms"] = round(
+                    cy.inference_time_ms(hw, cy.BertShape(seq=s), bits), 2)
+            out.append(row)
+    return out
+
+
+def table7() -> List[Dict]:
+    """Device comparison (paper Table 7).  NPE rows from our cycle model at
+    seq 64 (the FTRANS benchmark length — reverse-engineered in
+    tests/test_cycles.py to <1%); CPU/GPU/FTRANS rows quoted from paper."""
+    hw = NPEHardware(vrwidth=1024)
+    npe16 = cy.throughput_inf_s(hw, cy.BertShape(seq=64), 16)
+    npe8 = cy.throughput_inf_s(hw, cy.BertShape(seq=64), 8)
+    rows = [
+        dict(device="i7-8700k (paper)", inf_s=3.76, dsp=None, power_w=80),
+        dict(device="RTX 5000 (paper)", inf_s=57.46, dsp=None, power_w=120),
+        dict(device="FTRANS VCU118 (paper)", inf_s=101.79, dsp=6840,
+             power_w=25),
+        dict(device="NPE 16-bit (ours)", inf_s=round(npe16, 2), dsp=2020,
+             power_w=20, paper_value=73.69),
+        dict(device="NPE 8-bit (ours)", inf_s=round(npe8, 2), dsp=2020,
+             power_w=20, paper_value=135.14),
+    ]
+    for r in rows:
+        if r.get("dsp"):
+            r["inf_s_per_dsp"] = round(r["inf_s"] / r["dsp"], 4)
+    return rows
+
+
+def npe_accuracy() -> List[Dict]:
+    """Paper §5.5 accuracy simulation: float vs NPE BERT agreement, swept
+    over MMU width and PWL segment count."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import registry
+
+    cfg = get_config("bert_base", smoke=True)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                                cfg.vocab_size)
+    ref = np.asarray(registry.apply(cfg, params, tokens, remat=False),
+                     np.float32)
+    out = []
+    for bits in (8, 16):
+        for seg in (8, 16, 32):
+            c = cfg.with_npe(quant_bits=bits, segments=seg)
+            got = np.asarray(registry.apply(c, params, tokens, remat=False),
+                             np.float32)
+            out.append(dict(
+                mmu_bits=bits, pwl_segments=seg,
+                top1_agreement=round(float(
+                    (ref.argmax(-1) == got.argmax(-1)).mean()), 4),
+                logit_corr=round(float(
+                    np.corrcoef(ref.ravel(), got.ravel())[0, 1]), 5),
+                mean_abs_err=round(float(np.abs(ref - got).mean()), 4)))
+    return out
+
+
+ALL = {
+    "table2_throughput_requirements": table2,
+    "table3_nvu_throughput": table3,
+    "table4_optimized_requirements": table4,
+    "fig5_overhead": fig5,
+    "fig6_inference_ms": fig6,
+    "table7_device_comparison": table7,
+    "sec5_5_npe_accuracy": npe_accuracy,
+}

@@ -1,0 +1,90 @@
+"""Benchmark driver: paper tables + kernel microbenches + roofline summary.
+
+Prints one CSV block per paper table (name,us_per_call,derived columns) and
+a wall-clock microbench of every Pallas kernel (interpret mode on CPU —
+numbers validate plumbing, not TPU perf; TPU perf is the §Roofline story).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+
+def _print_table(name: str, rows):
+    print(f"\n### {name}")
+    if not rows:
+        print("(empty)")
+        return
+    cols = list(dict.fromkeys(k for r in rows for k in r))
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+
+
+def bench_kernels(quick: bool = False):
+    """Microbenchmark each Pallas kernel vs its jnp oracle (interpret)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    from repro.core import pwl
+
+    key = jax.random.PRNGKey(0)
+    m, n, k = (256, 256, 256) if quick else (512, 512, 512)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(key, (k, n)) / (k ** 0.5)
+    q = jax.random.normal(key, (1, 4, m, 64))
+    kv = jax.random.normal(key, (1, 2, m, 64))
+
+    cases = {
+        "pwl_eval_kernel": lambda: ops.pwl_activation(x, "gelu"),
+        "pwl_eval_ref": lambda: ref.pwl_eval(x, pwl.get_table("gelu", 16)),
+        "quant_matmul_kernel": lambda: ops.quant_matmul(
+            x, w, block_m=min(256, m), block_n=128, block_k=128),
+        "softmax_kernel": lambda: ops.softmax(x),
+        "softmax_ref": lambda: ref.nvu_softmax(x),
+        "layernorm_kernel": lambda: ops.layernorm(x, jnp.ones((k,)),
+                                                  jnp.zeros((k,))),
+        "flash_attention_kernel": lambda: ops.flash_attention(
+            q, kv, kv, use_pwl=True, block_q=128, block_kv=128),
+        "attention_ref": lambda: ref.attention(q, kv, kv, use_pwl=False),
+    }
+    rows = []
+    for name, fn in cases.items():
+        fn()   # warmup/compile
+        reps = 3 if quick else 5
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        us = 1e6 * (time.perf_counter() - t0) / reps
+        rows.append(dict(name=name, us_per_call=round(us, 1),
+                         derived="interpret-mode-on-CPU"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_tables
+    for name, fn in paper_tables.ALL.items():
+        t0 = time.perf_counter()
+        rows = fn()
+        dt = time.perf_counter() - t0
+        _print_table(f"{name}  ({dt:.2f}s)", rows)
+
+    if not args.skip_kernels:
+        _print_table("kernel_microbench", bench_kernels(args.quick))
+
+    # roofline summary (if the dry-run sweep has produced results)
+    if Path("results/roofline.md").exists():
+        print("\n### roofline (regenerate with `python -m benchmarks.roofline`)")
+        print(Path("results/roofline.md").read_text())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Demonstrates the full production loop on CPU: synthetic data pipeline,
+jit'd microbatched train step, async checkpointing, fault injection +
+automatic rewind-recovery, and (optionally) the paper's NPE mode.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--npe]
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.config import FaultConfig, ModelConfig, OptimizerConfig
+from repro.launch.train import Trainer, make_run
+
+
+def model_100m() -> ModelConfig:
+    """A ~100M dense transformer (glm4-family block structure)."""
+    return ModelConfig(
+        name="lm_100m", family="dense", num_layers=8, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=8192, attention="full", norm="rmsnorm",
+        activation="silu", mlp_type="gated", rope="standard",
+        max_position=4096, subquadratic=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--npe", action="store_true",
+                    help="train THROUGH the quantized MMU + PWL NVU")
+    ap.add_argument("--inject-crash", type=int, default=150,
+                    help="simulate a node failure at this step (-1: off)")
+    args = ap.parse_args()
+
+    run = make_run("glm4_9b", smoke=True, steps=args.steps,
+                   batch=args.batch, seq=args.seq,
+                   ckpt_dir="/tmp/repro_train_lm",
+                   fault=FaultConfig(inject_crash_at_step=args.inject_crash,
+                                     max_restarts=2),
+                   opt=OptimizerConfig(lr=1e-3, warmup_steps=20,
+                                       decay_steps=args.steps))
+    cfg = model_100m()
+    if args.npe:
+        cfg = cfg.with_npe(quant_bits=8, segments=16)
+    run = dataclasses.replace(run, model=cfg)
+    from repro.models import registry
+    print(f"model: {registry.param_count(cfg)/1e6:.1f}M params, "
+          f"npe={cfg.npe_quant}")
+
+    out = Trainer(run).train()
+    losses = [h["loss"] for h in out["history"]]
+    first, last = np.mean(losses[:20]), np.mean(losses[-20:])
+    print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({out['restarts']} restart(s), "
+          f"{len(out['fault_events'])} fault event(s))")
+    assert last < first, "loss must decrease on the synthetic LM task"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

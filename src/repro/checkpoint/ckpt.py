@@ -1,0 +1,146 @@
+"""Checkpointing: manifest + per-leaf npz, async save, reshard-on-restore.
+
+Layout:
+    <dir>/step_000123/manifest.json     {step, leaves: {key: {shape,dtype}}}
+    <dir>/step_000123/arrays.npz        key -> np array
+    <dir>/LATEST                        "step_000123"
+
+Commit protocol: write into step_XXXX.tmp, fsync, atomic rename, then
+update LATEST — a crash mid-save never corrupts the latest checkpoint.
+Async mode snapshots to host memory synchronously (cheap) and writes on a
+background thread so the train loop overlaps I/O with compute.
+
+Restore computes shardings from the *current* mesh/rules, so the same
+checkpoint restores onto a different topology (elastic restart,
+runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_like(template, flat: dict):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # --- save ---------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        """Snapshot to host, then commit (async if configured)."""
+        self.wait()                      # one in-flight save at a time
+        host = {k: np.asarray(jax.device_get(v))
+                for k, v in _flatten(tree).items()}
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, extra or {})
+
+    def _write(self, step: int, host: dict, extra: dict):
+        name = f"step_{step:08d}"
+        tmp = self.dir / (name + ".tmp")
+        final = self.dir / name
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        # numpy's npz cannot store ml_dtypes (bf16 etc.) — save a uint view
+        # and restore via the manifest dtype
+        storable = {
+            k: (v.view(np.uint16) if v.dtype.name == "bfloat16" else v)
+            for k, v in host.items()}
+        np.savez(tmp / "arrays.npz", **storable)
+        manifest = {
+            "step": step,
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+            **extra,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        latest_tmp = self.dir / "LATEST.tmp"
+        latest_tmp.write_text(name)
+        os.replace(latest_tmp, self.dir / "LATEST")
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(p for p in self.dir.glob("step_*") if p.is_dir())
+        for old in steps[:-self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --- restore ------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        latest = self.dir / "LATEST"
+        if not latest.exists():
+            return None
+        return int(latest.read_text().strip().split("_")[1])
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[Any, int]:
+        """Restore into the structure of `template`; if `shardings` is
+        given (pytree of NamedSharding matching template) every leaf is
+        device_put with it — this is the elastic reshard path."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        with np.load(path / "arrays.npz") as z:
+            flat = {}
+            for k in z.files:
+                arr = z[k]
+                if manifest["leaves"].get(k, {}).get("dtype") == "bfloat16":
+                    import ml_dtypes
+                    arr = arr.view(ml_dtypes.bfloat16)
+                flat[k] = arr
+        tree = _unflatten_like(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree, step

@@ -1,0 +1,256 @@
+"""Configuration system for the NPE reproduction framework.
+
+Three config layers:
+  * ModelConfig  — architecture definition (one per assigned arch + BERT).
+  * ShapeConfig  — an (input-shape, step-kind) cell from the assignment.
+  * MeshConfig   — distribution topology + logical-axis sharding profile.
+  * RunConfig    — everything a launcher needs (model, shape, mesh, train/serve
+                   hyperparameters, NPE-mode switches).
+
+All configs are frozen dataclasses so they can be hashed into jit static
+arguments and serialized into checkpoints / dry-run reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 1
+    # every `interleave`-th layer is MoE (1 = every layer, 2 = alternating).
+    interleave: int = 1
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    # router softmax / sigmoid (llama4 uses sigmoid for top-1)
+    router_act: str = "softmax"
+    # expert-parallel compute layout (EXPERIMENTS.md §Perf iteration #8):
+    #   token_split — dispatch buffer keeps batch data-sharded (small
+    #                 experts, cheap weight gathers: granite)
+    #   dsplit      — batch replicated + embed data-sharded in the expert
+    #                 region; weights fully resident (XXL experts: llama4)
+    ep_layout: str = "token_split"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective SSM (hymba) / RWKV6 head parameters."""
+    state_dim: int = 16
+    conv_dim: int = 4
+    expand: int = 2
+    dt_rank: int = 0           # 0 => ceil(d_model / 16)
+    head_size: int = 64        # rwkv6 head size
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm | bert
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention structure ---
+    attention: str = "full"     # full | sliding | local_global | none
+    window: int = 4096          # sliding-window size where applicable
+    global_every: int = 6       # local_global: layer l is global iff (l+1) % global_every == 0
+    causal: bool = True
+
+    # --- norms / activations / blocks ---
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    norm_bias: bool = False
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    activation: str = "silu"    # silu | gelu | relu2
+    mlp_type: str = "gated"     # gated (SwiGLU/GeGLU) | plain
+    parallel_block: bool = False  # command-r style: attn and mlp in parallel
+    qk_norm: bool = False
+    logit_softcap: float = 0.0
+
+    # --- positions ---
+    rope: str = "standard"      # standard | mrope | none | learned
+    rope_theta: float = 10000.0
+    max_position: int = 131072
+
+    # --- family extensions ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encoder_layers: int = 0      # encdec only
+    decoder_layers: int = 0
+    encoder_seq: int = 1500      # whisper audio frames after conv stub
+    frontend: str = "none"       # none | audio_stub | vision_stub
+    num_patches: int = 256       # vlm: patch embeddings per sample (stub)
+    tie_embeddings: bool = False
+
+    # --- numerics ---
+    dtype: str = "bfloat16"
+
+    # --- NPE overlay mode (the paper's technique) ---
+    npe_quant: bool = False      # int8 quantized matmuls (MMU)
+    npe_quant_bits: int = 8      # 8 or 16 (paper evaluates both MMU variants)
+    npe_pwl: bool = False        # unified PWL nonlinearity engine (NVU)
+    npe_pwl_segments: int = 16   # segments per PWL table
+
+    # --- long-context applicability (DESIGN.md §4) ---
+    subquadratic: bool = False   # True iff long_500k is runnable
+
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    def with_npe(self, quant_bits: int = 8, segments: int = 16) -> "ModelConfig":
+        """Enable the paper's technique (quantized MMU + PWL NVU)."""
+        return dataclasses.replace(
+            self, npe_quant=True, npe_quant_bits=quant_bits,
+            npe_pwl=True, npe_pwl_segments=segments)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (reported in DESIGN/EXPERIMENTS)."""
+        from repro.models import registry
+        return registry.param_count(self)
+
+
+# ---------------------------------------------------------------------------
+# Input-shape cells
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str                   # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                   # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+# smoke-scale variants used by tests (same code paths, tiny extents)
+SMOKE_SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 64, 2),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 64, 2),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 64, 2),
+    "long_500k": ShapeConfig("long_500k", "decode", 128, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# Mesh / sharding configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Topology + sharding profile.
+
+    axis_sizes/axis_names describe the physical mesh.  `profile` selects a
+    logical-axis rule set in repro.sharding.rules:
+      * "tp"       — params sharded on model axis only (small/medium models)
+      * "fsdp"     — params additionally sharded over data (ZeRO-3 style)
+      * "sp"       — sequence/KV-cache parallel over data (long-context decode)
+    """
+    axis_names: Tuple[str, ...] = ("data", "model")
+    axis_sizes: Tuple[int, ...] = (16, 16)
+    profile: str = "tp"
+    # ICI/DCN hints for roofline (per-axis link bandwidth class)
+    dcn_axes: Tuple[str, ...] = ("pod",)
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.axis_sizes:
+            n *= s
+        return n
+
+    def describe(self) -> str:
+        return "x".join(f"{n}={s}" for n, s in zip(self.axis_names, self.axis_sizes))
+
+
+SINGLE_POD = MeshConfig(("data", "model"), (16, 16))
+MULTI_POD = MeshConfig(("pod", "data", "model"), (2, 16, 16))
+SMOKE_MESH = MeshConfig(("data", "model"), (1, 1))
+
+
+# ---------------------------------------------------------------------------
+# Run configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    schedule: str = "cosine"      # cosine | linear | constant
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    zero1: bool = True            # shard optimizer state over data axis
+    moment_dtype: str = "float32" # float32 | bfloat16 (memory relief for XXL)
+    grad_compression: str = "none"  # none | int8_ef (error-feedback int8 DP all-reduce)
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str = "/tmp/repro_ckpt"
+    interval: int = 50
+    keep: int = 3
+    async_save: bool = True
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    max_restarts: int = 3
+    nan_is_failure: bool = True
+    # simulated fault injection for tests/examples
+    inject_nan_at_step: int = -1
+    inject_crash_at_step: int = -1
+    step_deadline_sec: float = 0.0   # >0 enables straggler watchdog
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig
+    optimizer: OptimizerConfig = OptimizerConfig()
+    checkpoint: CheckpointConfig = CheckpointConfig()
+    fault: FaultConfig = FaultConfig()
+    seed: int = 0
+    steps: int = 100
+    log_every: int = 10
+    microbatch: int = 0           # >0 enables gradient accumulation
+    remat: str = "block"          # none | block | full
+    param_dtype: str = "float32"  # master params
+
+
+def to_json(cfg: Any) -> str:
+    def default(o: Any):
+        if dataclasses.is_dataclass(o):
+            return dataclasses.asdict(o)
+        raise TypeError(f"not serializable: {o!r}")
+    return json.dumps(cfg, default=default, indent=2, sort_keys=True)

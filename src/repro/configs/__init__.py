@@ -1,0 +1,76 @@
+"""Architecture registry: the 10 assigned configs + the paper's BERT.
+
+Every config records its public source and pads the vocab to a multiple of
+256 so the vocab dimension shards on 16-way tensor-parallel meshes; the
+true vocabulary size is kept for loss masking.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "command_r_plus_104b",
+    "starcoder2_3b",
+    "gemma3_27b",
+    "glm4_9b",
+    "qwen2_vl_7b",
+    "granite_moe_1b_a400m",
+    "llama4_maverick_400b_a17b",
+    "rwkv6_3b",
+    "hymba_1_5b",
+    "whisper_base",
+    "bert_base",          # the paper's own network
+]
+
+# Reduced-scale variants for smoke tests live next to each config.
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    name = name.replace("-", "_")
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke) for a in ARCH_IDS}
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    """Pad vocab so it shards 16-way; exact sizes already divisible by 16
+    are kept (the padding is recorded vs the true vocab in each config)."""
+    if v % 16 == 0:
+        return v
+    return -(-v // multiple) * multiple
+
+
+def shrink(cfg: ModelConfig, **over) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests: few layers, narrow
+    width, tiny vocab — identical code paths."""
+    import dataclasses
+    from repro.config import MoEConfig
+    d = dict(
+        num_layers=min(cfg.num_layers, 2),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2),
+        head_dim=32,
+        d_ff=64 if cfg.moe else 256,
+        vocab_size=512,
+        max_position=4096,
+        window=min(cfg.window, 32),
+        global_every=2 if cfg.attention == "local_global" else cfg.global_every,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        decoder_layers=min(cfg.decoder_layers, 2),
+        encoder_seq=min(cfg.encoder_seq, 64),
+        num_patches=min(cfg.num_patches, 16),
+    )
+    if cfg.moe:
+        d["moe"] = dataclasses.replace(cfg.moe, num_experts=4,
+                                       top_k=min(cfg.moe.top_k, 2))
+    d.update(over)
+    return dataclasses.replace(cfg, **d)

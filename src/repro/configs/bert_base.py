@@ -1,0 +1,22 @@
+"""BERT-base [arXiv:1810.04805] — the paper's own benchmark network
+(L=12, A=12, H=768).  Post-norm encoder, learned positions, GELU.
+Encoder-only: no decode step; decode/long shapes are N/A.
+`config().with_npe()` is the paper's NPE configuration (int8 MMU +
+PWL NVU) validated in tests/test_npe_accuracy.py."""
+from repro.config import ModelConfig
+from repro.configs import pad_vocab, shrink
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="bert_base", family="bert",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+        head_dim=64, d_ff=3072, vocab_size=pad_vocab(30522),
+        attention="full", causal=False, norm="layernorm", norm_bias=True,
+        qkv_bias=True, mlp_bias=True, activation="gelu",
+        mlp_type="plain", rope="learned", max_position=32768,  # structural: real BERT caps at 512
+        tie_embeddings=True, subquadratic=False)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(config(), max_position=256)

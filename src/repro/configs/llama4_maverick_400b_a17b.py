@@ -1,0 +1,26 @@
+"""Llama-4 Maverick 400B-A17B [hf:meta-llama/Llama-4-Maverick-17B-128E;
+assigned].  MoE every SECOND layer (interleave=2): 128 routed experts
+top-1 + 1 shared expert (d_ff=8192 each); dense SwiGLU layers between.
+Sigmoid router.  GQA 40H/kv8, RMSNorm.  Early-fusion multimodality is a
+frontend stub (text backbone assigned).  Assigned config is plain GQA ->
+long_500k skipped."""
+from repro.config import ModelConfig, MoEConfig
+from repro.configs import pad_vocab, shrink
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4_maverick_400b_a17b", family="moe",
+        num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+        head_dim=128, d_ff=8192, vocab_size=pad_vocab(202048),
+        attention="full", norm="rmsnorm", activation="silu",
+        mlp_type="gated", rope="standard", rope_theta=500000.0,
+        max_position=131072,
+        moe=MoEConfig(num_experts=128, top_k=1, interleave=2,
+                      shared_expert=True, router_act="sigmoid",
+                      ep_layout="dsplit"),
+        subquadratic=False)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(config())

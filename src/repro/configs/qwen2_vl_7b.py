@@ -1,0 +1,22 @@
+"""Qwen2-VL-7B [arXiv:2409.12191; hf:Qwen/Qwen2-VL-7B-Instruct].
+VLM: transformer backbone with M-RoPE (3-section rotary over t/h/w
+position ids) + dynamic-resolution vision frontend STUBBED per the
+assignment — input_specs() provides precomputed patch embeddings.
+Pure full attention -> long_500k skipped."""
+from repro.config import ModelConfig
+from repro.configs import pad_vocab, shrink
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2_vl_7b", family="vlm",
+        num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4,
+        head_dim=128, d_ff=18944, vocab_size=pad_vocab(152064),
+        attention="full", norm="rmsnorm", qkv_bias=True,
+        activation="silu", mlp_type="gated", rope="mrope",
+        rope_theta=1e6, max_position=131072,
+        frontend="vision_stub", num_patches=256, subquadratic=False)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(config())

@@ -1,0 +1,23 @@
+"""Whisper-base [arXiv:2212.04356].  Encoder-decoder; conv audio
+frontend STUBBED per the assignment (input_specs() provides 1500 frame
+embeddings).  Decoder positions table sized for the assigned 32k decode
+shape (structural adaptation; real Whisper caps text at 448 — noted in
+DESIGN.md).  Decoder is full attention -> long_500k skipped."""
+from repro.config import ModelConfig
+from repro.configs import pad_vocab, shrink
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper_base", family="encdec",
+        num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+        head_dim=64, d_ff=2048, vocab_size=pad_vocab(51865),
+        encoder_layers=6, decoder_layers=6, encoder_seq=1500,
+        attention="full", norm="layernorm", norm_bias=True,
+        qkv_bias=True, mlp_bias=True, activation="gelu",
+        mlp_type="plain", rope="learned", max_position=32768,
+        frontend="audio_stub", tie_embeddings=True, subquadratic=False)
+
+
+def smoke_config() -> ModelConfig:
+    return shrink(config(), max_position=256)

@@ -1,0 +1,91 @@
+"""Multi-precision fixed-point arithmetic simulation — paper §4.1.3 / §5.5.
+
+The NVU operates on 8/16/32/64-bit fixed-point numbers ("Q-format": `bits`
+total including sign, `frac` fractional bits).  We *simulate* that datapath
+to model quantization error end to end, exactly as the paper's software
+simulation does ("our simulations take into account ... the data
+quantization at each intermediate step").
+
+Hardware adaptation note (DESIGN.md §2): the container/TPU has no cheap
+int64, so wide intermediates are carried in float64, which represents
+integers exactly up to 2^53.  Every operation explicitly *rounds to the
+target grid and saturates to the target range*, so the simulation is
+bit-faithful for all formats whose intermediate products fit in 53 bits
+(covers the paper's Q16/Q32 paths; the few Q64 accumulations are modeled
+with 53-bit precision and the residual modeling error is recorded in
+tests/test_fixedpoint.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class QFormat:
+    bits: int   # total bits, including sign
+    frac: int   # fractional bits
+
+    @property
+    def scale(self) -> float:
+        return float(2.0 ** self.frac)
+
+    @property
+    def max_val(self) -> float:
+        return (2.0 ** (self.bits - 1) - 1) / self.scale
+
+    @property
+    def min_val(self) -> float:
+        return -(2.0 ** (self.bits - 1)) / self.scale
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.scale
+
+    def __str__(self) -> str:
+        return f"Q{self.bits}.{self.frac}"
+
+
+# The formats the NVU datapath uses (paper §6.5: 8/16/32/64-bit).
+Q8_4 = QFormat(8, 4)
+Q16_8 = QFormat(16, 8)      # activations entering the NVU (MMU output)
+Q16_12 = QFormat(16, 12)
+Q32_16 = QFormat(32, 16)    # intermediate arithmetic
+Q32_24 = QFormat(32, 24)
+Q64_32 = QFormat(64, 32)    # variance accumulations (53-bit-exact model)
+
+
+def quantize(x: jnp.ndarray, qf: QFormat) -> jnp.ndarray:
+    """Round-to-nearest-even onto the Q-grid, saturate, return float carrier.
+
+    The returned array holds exact multiples of 2^-frac (the dequantized
+    value), which is how every downstream jnp op consumes it.
+    """
+    x64 = x.astype(jnp.float64) if x.dtype == jnp.float64 else x.astype(jnp.float32)
+    scaled = jnp.round(x64 * qf.scale)
+    lo = -(2.0 ** (qf.bits - 1))
+    hi = 2.0 ** (qf.bits - 1) - 1
+    return jnp.clip(scaled, lo, hi) / qf.scale
+
+
+def fixed_add(a, b, out: QFormat):
+    return quantize(a + b, out)
+
+
+def fixed_sub(a, b, out: QFormat):
+    return quantize(a - b, out)
+
+
+def fixed_mul(a, b, out: QFormat):
+    return quantize(a * b, out)
+
+
+def fixed_sum(x, axis, out: QFormat):
+    """Vector-reduction add (the VCU adder tree) with wide accumulation."""
+    return quantize(jnp.sum(x.astype(jnp.float32), axis=axis, keepdims=True), out)
+
+
+def fixed_mean(x, axis, out: QFormat):
+    n = x.shape[axis]
+    return quantize(jnp.sum(x.astype(jnp.float32), axis=axis, keepdims=True) / n, out)

@@ -1,0 +1,274 @@
+"""The NVU — unified nonlinearity engine (paper §4, §6) at the jnp level.
+
+Every nonlinear function in every supported architecture is computed with
+ONE mechanism: continuous piecewise-linear approximation (repro.core.pwl)
+plus generic vector arithmetic (add / mul / reduce / max) — no dedicated
+exp, divide, or sqrt units.  This module is the pure-jnp engine; the
+Pallas kernels in repro.kernels are the fused fast paths and use this as
+their oracle.
+
+Two operating modes:
+  * float mode  (default)  — PWL approximation in f32; the TPU-native mode.
+  * fixed mode  (`fixed=True`) — every intermediate is quantized to the
+    NVU's multi-precision Q-formats (paper §4.1.3), modeling the FPGA
+    datapath bit-for-bit (see repro.core.fixedpoint for the 53-bit caveat).
+
+Range handling (paper: "normalization and range limiting of the fixed point
+input and subsequent denormalization of the output"):
+  * bounded-input functions (exp after max-subtract, gelu, sigmoid, ...) are
+    clamped to the table interval;
+  * scale-free functions (1/x, 1/sqrt(x)) are *mantissa-normalized*: the
+    input is decomposed x = m * 2^e with m in [0.25, 1), the PWL table is
+    evaluated on m, and the result is denormalized by an exact power of two.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fp
+from repro.core import pwl
+
+
+# ---------------------------------------------------------------------------
+# PWL evaluation (Algorithm 1 + 2, vectorized)
+# ---------------------------------------------------------------------------
+
+def pwl_eval(x: jnp.ndarray, table: pwl.PWLTable) -> jnp.ndarray:
+    """Evaluate a CPWL table.
+
+    Segment lookup is the TPU-idiomatic priority encoder (DESIGN.md §2):
+        seg(x) = sum_i 1[x >= knot_i]   over the interior knots
+    — a handful of fully-data-parallel vector compares, instead of the
+    paper's Algorithm 2 serial scan.  Coefficients are then fetched with
+    jnp.take (the Pallas kernel uses a one-hot matmul for the same fetch).
+    Inputs outside [knot_0, knot_N] evaluate on the boundary segments'
+    lines, i.e. linear extrapolation of the edge segments.
+    """
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    interior = table.knots[1:-1]                      # (S-1,)
+    seg = jnp.sum(xf[..., None] >= interior, axis=-1).astype(jnp.int32)
+    slope = jnp.take(table.slopes, seg)
+    icept = jnp.take(table.intercepts, seg)
+    return (slope * xf + icept).astype(dt)
+
+
+def pwl_eval_clamped(x: jnp.ndarray, table: pwl.PWLTable) -> jnp.ndarray:
+    """Evaluate with range limiting (clamp to the table interval)."""
+    xf = jnp.clip(x.astype(jnp.float32), table.knots[0], table.knots[-1])
+    return pwl_eval(xf, table).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mantissa normalization for scale-free functions
+# ---------------------------------------------------------------------------
+
+def _normalize_pow4(x: jnp.ndarray):
+    """Decompose positive x = m * 4^p with m in [0.25, 1).
+
+    Using powers of 4 keeps sqrt's denormalization exact: rsqrt(4^p) = 2^-p.
+    On the FPGA this is a leading-zero count + shift; on TPU we use frexp
+    (exponent extraction, one VPU op).
+    """
+    m, e = jnp.frexp(x.astype(jnp.float32))           # x = m * 2^e, m in [0.5,1)
+    odd = (e % 2) != 0
+    m = jnp.where(odd, m * 0.5, m)                    # -> m in [0.25, 1)
+    e = jnp.where(odd, e + 1, e)
+    p = e // 2
+    return m, p
+
+
+def nvu_reciprocal(x: jnp.ndarray, segments: int = 16) -> jnp.ndarray:
+    """1/x for x > 0 via mantissa-normalized PWL (no divider unit)."""
+    t = pwl.get_table("recip", segments)
+    m, e = jnp.frexp(x.astype(jnp.float32))
+    # m in [0.5, 1) but recip table spans [0.25, 1); fine.
+    r = pwl_eval_clamped(m, t)
+    return (jnp.ldexp(r, -e)).astype(x.dtype)
+
+
+def nvu_rsqrt(x: jnp.ndarray, segments: int = 16) -> jnp.ndarray:
+    """1/sqrt(x) for x > 0 via power-of-4 normalized PWL (no sqrt unit)."""
+    t = pwl.get_table("rsqrt", segments)
+    m, p = _normalize_pow4(x)
+    r = pwl_eval_clamped(m, t)
+    return jnp.ldexp(r, -p).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Elementwise nonlinearities
+# ---------------------------------------------------------------------------
+
+def _elementwise(name: str, extrapolate: bool):
+    """Bounded (saturating) functions clamp to the table interval; functions
+    with asymptotically *linear* tails (gelu, silu, softplus) extrapolate the
+    edge segments, which is exact in the limit."""
+    def f(x: jnp.ndarray, segments: int = 16, fixed: bool = False) -> jnp.ndarray:
+        t = pwl.get_table(name, segments)
+        ev = pwl_eval if extrapolate else pwl_eval_clamped
+        if fixed:
+            xq = fp.quantize(x, fp.Q16_8)
+            y = ev(xq, t)
+            return fp.quantize(y, fp.Q16_8).astype(x.dtype)
+        return ev(x, t)
+    f.__name__ = f"nvu_{name}"
+    return f
+
+
+nvu_gelu = _elementwise("gelu", extrapolate=True)
+nvu_tanh = _elementwise("tanh", extrapolate=False)
+nvu_sigmoid = _elementwise("sigmoid", extrapolate=False)
+nvu_silu = _elementwise("silu", extrapolate=True)
+nvu_erf = _elementwise("erf", extrapolate=False)
+nvu_softplus = _elementwise("softplus", extrapolate=True)
+nvu_exp_neg_exp = _elementwise("exp_neg_exp", extrapolate=False)  # rwkv6 decay
+
+
+def nvu_relu2(x: jnp.ndarray, segments: int = 16, fixed: bool = False):
+    """ReLU² needs no table: max and multiply are native NVU vector ops
+    (paper §4.1.2: 'use adders, multipliers, etc. for the remainder')."""
+    r = jnp.maximum(x, 0)
+    y = r * r
+    if fixed:
+        y = fp.quantize(y, fp.Q16_8).astype(x.dtype)
+    return y
+
+
+def nvu_exp(x: jnp.ndarray, segments: int = 16) -> jnp.ndarray:
+    """exp for x <= 0 (softmax operands after max-subtraction).
+
+    LSQ-refined nodal values can dip a hair below zero where exp ~ 0; the
+    result is floored at 0 with the VCU's native max op so softmax outputs
+    stay nonnegative."""
+    return jnp.maximum(pwl_eval_clamped(x, pwl.get_table("exp", segments)), 0)
+
+
+# ---------------------------------------------------------------------------
+# Composite routines (the NVU "microprograms")
+# ---------------------------------------------------------------------------
+
+def nvu_softmax(x: jnp.ndarray, axis: int = -1, segments: int = 16,
+                fixed: bool = False,
+                where: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Softmax: vector max -> subtract -> PWL exp -> vector sum -> PWL recip.
+
+    Matches the NVU microprogram: reductions on the VCU adder tree, the
+    scalar 1/sum on the SCU concurrently with the next vector op (§6.6).
+    """
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if where is not None:
+        xf = jnp.where(where, xf, -jnp.inf)
+    m = jnp.max(xf, axis=axis, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)            # all-masked rows
+    z = xf - m
+    if fixed:
+        z = fp.quantize(jnp.clip(z, -18.0, 0.0), fp.Q16_8)
+    e = nvu_exp(z, segments)
+    if where is not None:
+        e = jnp.where(where, e, 0.0)
+    if fixed:
+        e = fp.quantize(e, fp.Q16_12)
+        s = fp.fixed_sum(e, axis, fp.Q32_16)
+    else:
+        s = jnp.sum(e, axis=axis, keepdims=True)
+    out = e * nvu_reciprocal(jnp.maximum(s, 1e-30), segments)
+    if fixed:
+        out = fp.quantize(out, fp.Q16_12)
+    return out.astype(dt)
+
+
+def nvu_layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: Optional[jnp.ndarray],
+                  eps: float = 1e-5, axis: int = -1, segments: int = 16,
+                  fixed: bool = False) -> jnp.ndarray:
+    """LayerNorm with mean/var on the adder tree and PWL rsqrt (paper §6.6:
+    'inner product followed by 1/sqrt(x) ... while maintaining full
+    throughput')."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if fixed:
+        xf = fp.quantize(xf, fp.Q16_8)
+    mu = jnp.mean(xf, axis=axis, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=axis, keepdims=True)
+    if fixed:
+        mu = fp.quantize(mu, fp.Q32_16)
+        var = fp.quantize(var, fp.Q32_16)
+    inv = nvu_rsqrt(var + eps, segments)
+    y = (xf - mu) * inv
+    if fixed:
+        y = fp.quantize(y, fp.Q16_12)
+    y = y * gamma.astype(jnp.float32)
+    if beta is not None:
+        y = y + beta.astype(jnp.float32)
+    if fixed:
+        y = fp.quantize(y, fp.Q16_8)
+    return y.astype(dt)
+
+
+def nvu_rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6,
+                axis: int = -1, segments: int = 16,
+                fixed: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if fixed:
+        xf = fp.quantize(xf, fp.Q16_8)
+    ms = jnp.mean(jnp.square(xf), axis=axis, keepdims=True)
+    if fixed:
+        ms = fp.quantize(ms, fp.Q32_16)
+    y = xf * nvu_rsqrt(ms + eps, segments)
+    if fixed:
+        y = fp.quantize(y, fp.Q16_12)
+    y = y * gamma.astype(jnp.float32)
+    if fixed:
+        y = fp.quantize(y, fp.Q16_8)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch used by the model zoo
+# ---------------------------------------------------------------------------
+
+_EXACT = {
+    "gelu": lambda x: jax.nn.gelu(x, approximate=False),
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    "softplus": jax.nn.softplus,
+    "exp_neg_exp": lambda x: jnp.exp(-jnp.exp(x)),
+    "erf": jax.lax.erf,
+}
+
+_NVU = {
+    "gelu": nvu_gelu,
+    "silu": nvu_silu,
+    "tanh": nvu_tanh,
+    "sigmoid": nvu_sigmoid,
+    "relu2": nvu_relu2,
+    "softplus": nvu_softplus,
+    "exp_neg_exp": nvu_exp_neg_exp,
+    "erf": nvu_erf,
+}
+
+
+def activation(name: str, use_pwl: bool, segments: int = 16):
+    """Return the activation callable — exact or via the unified engine."""
+    if use_pwl:
+        fn = _NVU[name]
+        return lambda x: fn(x, segments=segments)
+    return _EXACT[name]
+
+
+def softmax(x, axis=-1, use_pwl=False, segments: int = 16, where=None):
+    if use_pwl:
+        return nvu_softmax(x, axis=axis, segments=segments, where=where)
+    if where is not None:
+        x = jnp.where(where, x, -jnp.inf)
+    out = jax.nn.softmax(x, axis=axis)
+    if where is not None:
+        out = jnp.where(where, out, 0.0)
+    return out

@@ -1,0 +1,256 @@
+"""Continuous piecewise-linear (CPWL) function approximation — paper §4.2.
+
+This module builds the approximation *tables* (knot samples x_0..x_N and
+nodal values v(x_0)..v(x_N), paper Fig. 2 / Algorithm 1).  Table construction
+happens once, offline, in numpy; evaluation (`repro.core.nvu`,
+`repro.kernels.pwl_eval`) is pure JAX / Pallas.
+
+Segmentation strategies (paper §4.2.2):
+  * uniform           — equal-width segments (paper: simple but needs many)
+  * adaptive          — greedy max-error bisection => non-uniform segments
+                        concentrated where curvature is high (the paper's
+                        choice, after Berjón et al. [3] / Lee et al. [16])
+  * adaptive+lsq      — same knots, nodal values refined by least squares on
+                        a dense grid (CPWL is linear in its nodal values, so
+                        this is the *optimal* continuous fit for fixed knots)
+
+The paper reports that "even sub-optimal segmentation can result in no
+accuracy loss for BERT inference"; tests/test_pwl.py quantifies max-error for
+all three strategies and EXPERIMENTS.md §Paper-validation records them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class PWLTable(NamedTuple):
+    """Knot samples + nodal values, plus precomputed slope/intercept form.
+
+    Evaluation (Algorithm 1):  v(x) ~= (1-d) v(x_{i-1}) + d v(x_i)
+    is algebraically  slope_i * x + intercept_i  on segment i; the kernels
+    use the slope/intercept form (one FMA after segment lookup, exactly what
+    the NVU datapath does after its priority encoder).
+    """
+    knots: jnp.ndarray        # (S+1,) float32, strictly increasing
+    values: jnp.ndarray       # (S+1,) float32
+    slopes: jnp.ndarray       # (S,)   float32
+    intercepts: jnp.ndarray   # (S,)   float32
+
+    @property
+    def num_segments(self) -> int:
+        return self.slopes.shape[0]
+
+
+def _mk_table(knots: np.ndarray, values: np.ndarray) -> PWLTable:
+    knots = np.asarray(knots, np.float64)
+    values = np.asarray(values, np.float64)
+    dx = np.diff(knots)
+    if np.any(dx <= 0):
+        raise ValueError("knots must be strictly increasing")
+    slopes = np.diff(values) / dx
+    intercepts = values[:-1] - slopes * knots[:-1]
+    # Tables are stored as NUMPY arrays on purpose: tables get built lazily
+    # (lru_cache) — possibly inside a jit trace, where jnp.asarray would
+    # return a *tracer* and poison the cache.  numpy arrays are concrete
+    # forever and every jnp op consumes them as constants.
+    return PWLTable(
+        np.asarray(knots, np.float32),
+        np.asarray(values, np.float32),
+        np.asarray(slopes, np.float32),
+        np.asarray(intercepts, np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+def uniform_table(fn: Callable[[np.ndarray], np.ndarray], lo: float, hi: float,
+                  segments: int) -> PWLTable:
+    knots = np.linspace(lo, hi, segments + 1)
+    return _mk_table(knots, fn(knots))
+
+
+def _seg_err(fn, a: float, b: float, grid: int = 64) -> float:
+    """Max |f - line| on [a,b] for the chord interpolant."""
+    xs = np.linspace(a, b, grid)
+    fa, fb = fn(np.array([a]))[0], fn(np.array([b]))[0]
+    line = fa + (fb - fa) * (xs - a) / max(b - a, 1e-300)
+    return float(np.max(np.abs(fn(xs) - line)))
+
+
+def adaptive_table(fn: Callable[[np.ndarray], np.ndarray], lo: float, hi: float,
+                   segments: int, lsq_refine: bool = True,
+                   grid: int = 4096) -> PWLTable:
+    """Non-uniform segmentation by greedy error bisection (paper §4.2.2).
+
+    Start with one segment and repeatedly split the segment whose chord
+    interpolant has the largest max error, until `segments` segments exist.
+    This concentrates knots in high-curvature regions and leaves large
+    nearly-linear regions (the tails of GELU, sqrt away from 0, ...) as
+    single wide segments — the non-uniform advantage the paper describes.
+    """
+    if segments < 1:
+        raise ValueError("need >= 1 segment")
+    knots = [float(lo), float(hi)]
+    errs = [_seg_err(fn, lo, hi)]
+    while len(errs) < segments:
+        i = int(np.argmax(errs))
+        a, b = knots[i], knots[i + 1]
+        # split at the point of max deviation rather than the midpoint —
+        # this converges measurably faster for asymmetric curvature.
+        xs = np.linspace(a, b, 65)[1:-1]
+        fa, fb = fn(np.array([a]))[0], fn(np.array([b]))[0]
+        line = fa + (fb - fa) * (xs - a) / (b - a)
+        m = float(xs[int(np.argmax(np.abs(fn(xs) - line)))])
+        knots.insert(i + 1, m)
+        errs[i:i + 1] = [_seg_err(fn, a, m), _seg_err(fn, m, b)]
+    karr = np.array(knots)
+    values = fn(karr)
+    if lsq_refine:
+        values = _lsq_nodal_values(fn, karr, grid)
+    return _mk_table(karr, values)
+
+
+def _lsq_nodal_values(fn, knots: np.ndarray, grid: int) -> np.ndarray:
+    """Optimal nodal values for fixed knots by least squares.
+
+    A CPWL function is a linear combination of hat basis functions, so the
+    best continuous fit on a dense grid is a (small, well-conditioned)
+    linear least-squares solve — the cheap version of Berjón et al.'s
+    optimal-partition construction.
+    """
+    xs = np.linspace(knots[0], knots[-1], grid)
+    n = len(knots)
+    seg = np.clip(np.searchsorted(knots, xs, side="right") - 1, 0, n - 2)
+    d = (xs - knots[seg]) / (knots[seg + 1] - knots[seg])
+    basis = np.zeros((grid, n))
+    basis[np.arange(grid), seg] = 1.0 - d
+    basis[np.arange(grid), seg + 1] += d
+    sol, *_ = np.linalg.lstsq(basis, fn(xs), rcond=None)
+    return sol
+
+
+def table_max_error(fn, table: PWLTable, grid: int = 65536,
+                    lo: Optional[float] = None, hi: Optional[float] = None) -> float:
+    """Max |f - pwl| over [lo, hi] (default: the table's core interval,
+    excluding guard segments)."""
+    knots = np.asarray(table.knots, np.float64)
+    if lo is None:
+        lo = knots[1] if knots[0] <= -_GUARD else knots[0]
+    if hi is None:
+        hi = knots[-2] if knots[-1] >= _GUARD else knots[-1]
+    xs = np.linspace(lo, hi, grid)
+    approx = eval_pwl_np(table, xs)
+    return float(np.max(np.abs(fn(xs) - approx)))
+
+
+def eval_pwl_np(table: PWLTable, x: np.ndarray) -> np.ndarray:
+    """Numpy evaluation (used for table QA only; JAX eval lives in nvu.py)."""
+    knots = np.asarray(table.knots, np.float64)
+    slopes = np.asarray(table.slopes, np.float64)
+    icepts = np.asarray(table.intercepts, np.float64)
+    seg = np.clip(np.searchsorted(knots, x, side="right") - 1, 0,
+                  len(slopes) - 1)
+    return slopes[seg] * x + icepts[seg]
+
+
+# ---------------------------------------------------------------------------
+# Standard function tables (built lazily, cached)
+# ---------------------------------------------------------------------------
+
+# Evaluation interval per function.  Inputs are clamped (paper: "range
+# limiting") to these intervals; each is chosen so clamping error is below
+# the PWL error itself for the consuming operation:
+#   exp:   softmax operands are <= 0 after max-subtraction; exp(-18) ~ 1.5e-8
+#   gelu:  |GELU(x) - x| < 1e-8 for x > 6; |GELU(x)| < 1e-8 for x < -6
+#   recip/rsqrt: mantissa-normalized inputs in [0.25, 1) (paper:
+#          "normalization ... and subsequent denormalization")
+import math as _math
+
+_erf_np = np.vectorize(_math.erf, otypes=[np.float64])
+
+_FUNCS: dict[str, tuple[Callable, float, float]] = {
+    "exp": (np.exp, -18.0, 0.0),
+    "gelu": (lambda x: 0.5 * x * (1 + _erf_np(x / np.sqrt(2.0))), -6.0, 6.0),
+    "erf": (_erf_np, -4.0, 4.0),
+    "tanh": (np.tanh, -5.0, 5.0),
+    "sigmoid": (lambda x: 1 / (1 + np.exp(-x)), -12.0, 12.0),
+    "silu": (lambda x: x / (1 + np.exp(-x)), -12.0, 12.0),
+    "softplus": (lambda x: np.log1p(np.exp(-np.abs(x))) + np.maximum(x, 0), -14.0, 14.0),
+    "recip": (lambda x: 1.0 / x, 0.25, 1.0),
+    "rsqrt": (lambda x: 1.0 / np.sqrt(x), 0.25, 1.0),
+    "sqrt": (np.sqrt, 0.25, 1.0),
+    "relu2": (lambda x: np.maximum(x, 0.0) ** 2, -4.0, 4.0),
+    # rwkv6 decay: w = exp(-exp(x)); a *composite* nonlinearity tabulated
+    # directly — the unified-engine extensibility claim in action.
+    "exp_neg_exp": (lambda x: np.exp(-np.exp(np.clip(x, -40, 20))), -8.0, 3.0),
+}
+
+
+# Tail behavior outside the core interval (paper: "range limiting").  Each
+# side is either "sat" (function saturates: guard segment is flat at the
+# boundary value) or "asym" (function approaches a linear asymptote: guard
+# segment interpolates to the exact function value at +-GUARD).  Guard
+# segments make range limiting *part of the table*, so kernels stay branch-
+# free.  Functions evaluated only on normalized mantissas need no guards.
+_GUARD = 65536.0
+_TAILS: dict[str, Optional[tuple[str, str]]] = {
+    "exp": ("sat", "sat"),            # softmax operands <= 0; exp(-18)~0
+    "gelu": ("sat", "asym"),          # ->0 on the left, ->x on the right
+    "erf": ("sat", "sat"),
+    "tanh": ("sat", "sat"),
+    "sigmoid": ("sat", "sat"),
+    "silu": ("sat", "asym"),
+    "softplus": ("sat", "asym"),
+    "recip": None,                    # mantissa-normalized input
+    "rsqrt": None,
+    "sqrt": None,
+    "relu2": None,                    # exact via vector ops; table unused
+    "exp_neg_exp": ("sat", "sat"),
+}
+
+
+def _add_guards(table: PWLTable, f, tails: tuple[str, str]) -> PWLTable:
+    knots = np.asarray(table.knots, np.float64)
+    values = np.asarray(table.values, np.float64)
+    left, right = tails
+    lv = values[0] if left == "sat" else float(f(np.array([-_GUARD]))[0])
+    rv = values[-1] if right == "sat" else float(f(np.array([_GUARD]))[0])
+    knots = np.concatenate([[-_GUARD], knots, [_GUARD]])
+    values = np.concatenate([[lv], values, [rv]])
+    return _mk_table(knots, values)
+
+
+@lru_cache(maxsize=None)
+def get_table(name: str, segments: int = 16, strategy: str = "adaptive+lsq") -> PWLTable:
+    """Default strategy is adaptive+lsq: chord interpolation of *convex*
+    functions (exp!) has single-signed error, which accumulates coherently
+    in softmax's sum reduction (measured +24% worst-case sum error on
+    128-wide rows).  LSQ-refined nodal values oscillate in sign and cancel;
+    see EXPERIMENTS.md §Paper-validation."""
+    if name not in _FUNCS:
+        raise KeyError(f"no PWL function {name!r}; have {sorted(_FUNCS)}")
+    fn, lo, hi = _FUNCS[name]
+    f = lambda x: np.asarray(fn(np.asarray(x, np.float64)), np.float64)
+    if strategy == "uniform":
+        t = uniform_table(f, lo, hi, segments)
+    elif strategy == "adaptive":
+        t = adaptive_table(f, lo, hi, segments, lsq_refine=False)
+    elif strategy == "adaptive+lsq":
+        t = adaptive_table(f, lo, hi, segments, lsq_refine=True)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    tails = _TAILS.get(name)
+    if tails is not None:
+        t = _add_guards(t, f, tails)
+    return t
+
+
+def available_functions() -> list[str]:
+    return sorted(_FUNCS)

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: flash attention with optional PWL-exp (NVU mode).
+
+The attention analogue of the paper's overlap insight (§7.2.1): on NPE the
+softmax for head i hides under independent matmuls; on TPU the same hiding
+happens *inside* the kernel — the VPU computes the online-softmax update of
+block j while the MXU contracts block j+1.  The exp (and final reciprocal)
+can be routed through the unified PWL engine, making the whole attention
+op "NVU-pure": no transcendental unit required.
+
+Streaming (FlashAttention-2 style) over KV blocks with running max/sum in
+VMEM scratch.  Supports causal masking, sliding windows (starcoder2,
+gemma3 local layers, hymba), and GQA via the kv-head index map.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pwl_eval import pwl_tile
+from repro.kernels.nvu_softmax import recip_via_pwl
+
+NEG_BIG = -1e30
+
+
+def _exp_fn(z, exp_tab_ref, segments: int, use_pwl: bool):
+    if use_pwl:
+        return jnp.maximum(pwl_tile(jnp.maximum(z, -18.0), exp_tab_ref, segments), 0.0)
+    return jnp.exp(z)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, exp_tab_ref, recip_tab_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  kv_steps: int, block_q: int, block_kv: int, scale: float,
+                  causal: bool, window: int, exp_segments: int,
+                  recip_segments: int, use_pwl: bool):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_BIG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    kv_start = kj * block_kv
+
+    # visibility: does this kv block intersect this q block's mask at all?
+    run = True
+    if causal:
+        run = kv_start <= q_start + block_q - 1
+    if window > 0:
+        run = jnp.logical_and(run, kv_start + block_kv - 1 >= q_start - window + 1) \
+            if causal else run
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale         # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                 # (bkv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + q_start
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + kv_start
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+        if window > 0:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, NEG_BIG)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        # rescale previous accumulator; exp via the unified PWL engine
+        corr = _exp_fn(m_prev - m_new, exp_tab_ref, exp_segments, use_pwl)
+        p = _exp_fn(s - m_new, exp_tab_ref, exp_segments, use_pwl)
+        p = jnp.where(mask, p, 0.0)
+        l_new = corr * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = corr * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kj == kv_steps - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        if use_pwl:
+            inv = recip_via_pwl(l, recip_tab_ref, recip_segments)
+        else:
+            inv = 1.0 / l
+        o_ref[0] = (acc_scr[...] * inv).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    exp_table: jnp.ndarray, recip_table: jnp.ndarray,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None, use_pwl: bool = True,
+                    block_q: int = 256, block_kv: int = 256,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); GQA when Hq > Hkv.
+
+    window > 0 enables sliding-window attention (causal only): key j is
+    visible to query i iff i - window < j <= i.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0 and sq % block_q == 0 and skv % block_kv == 0
+    group = hq // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    kv_steps = skv // block_kv
+    kernel = functools.partial(
+        _flash_kernel, kv_steps=kv_steps, block_q=block_q, block_kv=block_kv,
+        scale=scale, causal=causal, window=window,
+        exp_segments=int(exp_table.shape[1]) - 1,
+        recip_segments=int(recip_table.shape[1]) - 1, use_pwl=use_pwl)
+    bh = b * hq
+    qr = q.reshape(bh, sq, d)
+    kr = k.reshape(b * hkv, skv, d)
+    vr = v.reshape(b * hkv, skv, d)
+
+    def kv_index(bhi, qi, kj):
+        # map flattened q-head index -> kv-head index (GQA)
+        return (bhi // (hq * 1) * hkv + (bhi % hq) // group, kj, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, sq // block_q, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bhi, qi, kj: (bhi, qi, 0)),
+            pl.BlockSpec((1, block_kv, d), kv_index),
+            pl.BlockSpec((1, block_kv, d), kv_index),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bhi, qi, kj: (bhi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr, exp_table, recip_table)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: NVU layernorm / rmsnorm with PWL rsqrt.
+
+Paper §6.6: "the NVU is capable of performing an inner product followed by
+the 1/sqrt(x) operation for layer normalization variance calculations while
+maintaining full throughput."  Here the mean/variance reductions run on the
+VPU and 1/sqrt comes from the PWL engine with power-of-4 mantissa
+normalization (exact exponent handling via integer ops, like the softmax
+reciprocal — no sqrt unit).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pwl_eval import pwl_tile
+
+
+def rsqrt_via_pwl(v, rsqrt_tab_ref, num_segments: int):
+    """1/sqrt(v) for v > 0: v = m * 4^p, m in [0.25, 1) => pwl(m) * 2^-p."""
+    bits = jax.lax.bitcast_convert_type(v.astype(jnp.float32), jnp.int32)
+    e_biased = jnp.right_shift(bits, 23) & 0xFF       # e = e_biased - 126
+    e = e_biased - 126
+    odd = jnp.bitwise_and(e, 1)                       # force even exponent
+    e_even = e + odd                                  # m in [0.25, 1)
+    mant = (bits & 0x007FFFFF) | (126 << 23)
+    m = jax.lax.bitcast_convert_type(mant, jnp.float32)  # [0.5, 1)
+    m = jnp.where(odd == 1, m * 0.5, m)               # [0.25, 1)
+    r = pwl_tile(m, rsqrt_tab_ref, num_segments)
+    p = jnp.right_shift(e_even, 1)
+    pow_bits = jnp.left_shift(jnp.clip(127 - p, 1, 254), 23)
+    scale = jax.lax.bitcast_convert_type(pow_bits, jnp.float32)
+    return r * scale
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, tab_ref, o_ref, *,
+                      num_segments: int, eps: float, rms_only: bool):
+    x = x_ref[...].astype(jnp.float32)
+    if rms_only:
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        xc = x
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        xc = x - mu
+        var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    inv = rsqrt_via_pwl(var + eps, tab_ref, num_segments)
+    y = xc * inv * g_ref[...]
+    if not rms_only:
+        y = y + b_ref[...]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def nvu_layernorm_rows(x: jnp.ndarray, gamma: jnp.ndarray,
+                       beta: Optional[jnp.ndarray], rsqrt_table: jnp.ndarray,
+                       eps: float = 1e-5, block_rows: int = 256,
+                       rms_only: bool = False,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Normalize rows of a 2D array (rows pre-padded to block multiples)."""
+    m, n = x.shape
+    assert m % block_rows == 0
+    if beta is None:
+        beta = jnp.zeros((n,), jnp.float32)
+    kernel = functools.partial(_layernorm_kernel,
+                               num_segments=int(rsqrt_table.shape[1]) - 1,
+                               eps=eps, rms_only=rms_only)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, gamma.reshape(1, n).astype(jnp.float32),
+      beta.reshape(1, n).astype(jnp.float32), rsqrt_table)

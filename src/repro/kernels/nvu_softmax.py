@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: NVU softmax — max, PWL-exp, sum, PWL-reciprocal.
+
+The NVU softmax microprogram (paper §6, Table 3) on the VPU.  The
+denominator's reciprocal uses the paper's mantissa-normalization: the f32
+sum is decomposed into exponent and mantissa with *integer bit ops* (the
+TPU equivalent of the FPGA's leading-zero detector), the PWL reciprocal
+table is evaluated on the mantissa in [0.5, 1), and the exponent is
+re-applied exactly — no divide unit anywhere.
+
+Rows are processed in (block_rows, N) tiles: one tile holds whole rows so
+the two reductions stay in VMEM.  Long-row / streaming softmax lives in
+flash_attention.py (online variant).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pwl_eval import pwl_tile
+
+NEG_BIG = -1e30
+
+
+def recip_via_pwl(s, recip_tab_ref, num_segments: int):
+    """1/s for s > 0: mantissa-normalized PWL, integer exponent ops.
+
+    s = m * 2^e with m in [0.5, 1)  =>  1/s = pwl_recip(m) * 2^-e.
+    frexp/ldexp are done with raw f32 bit manipulation so the kernel only
+    needs integer add/shift/and — all native VPU ops.
+    """
+    bits = jax.lax.bitcast_convert_type(s.astype(jnp.float32), jnp.int32)
+    # biased exponent field; e_biased - 126 = frexp exponent
+    e_biased = jnp.right_shift(bits, 23) & 0xFF
+    mant = (bits & 0x007FFFFF) | (126 << 23)          # mantissa with exp 2^-1
+    m = jax.lax.bitcast_convert_type(mant, jnp.float32)   # in [0.5, 1)
+    r = pwl_tile(m, recip_tab_ref, num_segments)
+    # multiply by 2^-e = 2^-(e_biased-126): exponent field 127 - e
+    pow_bits = jnp.left_shift(jnp.clip(253 - e_biased, 1, 254), 23)
+    scale = jax.lax.bitcast_convert_type(pow_bits, jnp.float32)
+    return r * scale
+
+
+def _softmax_kernel(x_ref, exp_tab_ref, recip_tab_ref, o_ref, *,
+                    exp_segments: int, recip_segments: int, causal_offset: int):
+    x = x_ref[...].astype(jnp.float32)
+    if causal_offset >= 0:
+        rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        base = pl.program_id(0) * x.shape[0] + causal_offset
+        x = jnp.where(cols <= rows + base, x, NEG_BIG)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    z = jnp.maximum(x - m, -18.0)                     # range limiting
+    e = jnp.maximum(pwl_tile(z, exp_tab_ref, exp_segments), 0.0)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    inv = recip_via_pwl(jnp.maximum(s, 1e-30), recip_tab_ref, recip_segments)
+    o_ref[...] = (e * inv).astype(o_ref.dtype)
+
+
+def nvu_softmax_rows(x: jnp.ndarray, exp_table: jnp.ndarray,
+                     recip_table: jnp.ndarray, block_rows: int = 256,
+                     causal: bool = False,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Row softmax over the last dim of a 2D array (rows pre-padded)."""
+    m, n = x.shape
+    assert m % block_rows == 0
+    kernel = functools.partial(
+        _softmax_kernel,
+        exp_segments=int(exp_table.shape[1]) - 1,
+        recip_segments=int(recip_table.shape[1]) - 1,
+        causal_offset=0 if causal else -1,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, exp_table, recip_table)

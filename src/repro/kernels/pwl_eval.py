@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: continuous piecewise-linear function evaluation.
+
+The NVU's PWL datapath (paper §4.2, Algorithm 1+2) adapted to the TPU VPU.
+Instead of the FPGA's priority encoder we use the *prefix-delta* form:
+
+    slope(x)     = slope_0 + sum_i dslope_i * 1[x >= knot_i]
+    intercept(x) = icept_0 + sum_i dicept_i * 1[x >= knot_i]
+    v(x)         = slope(x) * x + intercept(x)
+
+— one compare + two FMAs per interior knot, all rank-preserving VPU ops on
+the (block_m, block_n) tile; no gather, no scatter, no serial scan.  The
+knot/delta tables (a few dozen scalars) live in SMEM and are read by the
+scalar core while the VPU streams the tile, mirroring the paper's SCU/VCU
+split.  Guard segments built into the tables (repro.core.pwl) make the
+kernel branch-free over the whole f32 range.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pwl import PWLTable
+
+
+def pwl_tile(x, tab_ref, num_segments: int):
+    """Evaluate PWL on one tile with the prefix-delta scheme.
+
+    tab_ref is an SMEM ref of shape (3, num_segments + 1):
+      row 0: interior knots (padded), row 1: slope deltas (prefixed by
+      slope_0), row 2: intercept deltas (prefixed by icept_0).
+    Layout: tab_ref[1, 0] = slope_0, tab_ref[1, i] = dslope_i;
+            tab_ref[0, i] = knot_i for i in 1..S-1.
+    """
+    def body(i, carry):
+        slope, icept = carry
+        mask = (x >= tab_ref[0, i]).astype(x.dtype)
+        return slope + tab_ref[1, i] * mask, icept + tab_ref[2, i] * mask
+
+    slope0 = jnp.full(x.shape, tab_ref[1, 0], x.dtype)
+    icept0 = jnp.full(x.shape, tab_ref[2, 0], x.dtype)
+    slope, icept = jax.lax.fori_loop(1, num_segments, body, (slope0, icept0))
+    return slope * x + icept
+
+
+import numpy as np
+
+
+def pack_table(table: PWLTable) -> np.ndarray:
+    """Pack a PWLTable into the (3, S+1) SMEM operand used by all kernels.
+    numpy on purpose (tables may be packed lazily inside a trace)."""
+    s = int(table.num_segments)
+    z = np.zeros((1,), np.float32)
+    knots = np.concatenate([z, np.asarray(table.knots)[1:-1], z])
+    dslopes = np.concatenate([np.asarray(table.slopes)[:1],
+                              np.diff(np.asarray(table.slopes)), z])
+    dicepts = np.concatenate([np.asarray(table.intercepts)[:1],
+                              np.diff(np.asarray(table.intercepts)), z])
+    return np.stack([knots[:s + 1], dslopes[:s + 1], dicepts[:s + 1]])
+
+
+def _pwl_kernel(x_ref, tab_ref, o_ref, *, num_segments: int):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = pwl_tile(x, tab_ref, num_segments).astype(o_ref.dtype)
+
+
+def pwl_eval_2d(x: jnp.ndarray, packed_table: jnp.ndarray,
+                block_m: int = 256, block_n: int = 512,
+                interpret: bool = False) -> jnp.ndarray:
+    """PWL-evaluate a 2D array (pre-padded to block multiples by ops.py)."""
+    m, n = x.shape
+    assert m % block_m == 0 and n % block_n == 0, (x.shape, block_m, block_n)
+    num_segments = int(packed_table.shape[1]) - 1
+    grid = (m // block_m, n // block_n)
+    kernel = functools.partial(_pwl_kernel, num_segments=num_segments)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, packed_table)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: the MMU — int8 quantized matmul with fused NVU epilogue.
+
+Paper §5.3-§5.4 adapted to the MXU (DESIGN.md §2):
+  * int8 x int8 -> int32 accumulation (the MXU's native int8 path is the
+    TPU analogue of the paper's dual-int8-per-DSP decomposition),
+  * per-output-channel weight scales + per-tensor activation scale applied
+    in the epilogue ("accumulate and then quantize", §5.3 stage 5),
+  * optional fused PWL nonlinearity in the epilogue — this IS the paper's
+    MMU/NVU overlap (§7.2.1): on TPU the VPU epilogue of tile (i, j)
+    executes concurrently with the MXU contraction of tile (i, j+1) inside
+    one pallas_call, so the nonlinearity costs no wall-clock when its VPU
+    time is under the MXU tile time (the paper's rate-matching condition).
+
+Grid: (M/bm, N/bn, K/bk), K innermost; int32 accumulator lives in a VMEM
+scratch buffer across K steps.  128-aligned tiles keep the MXU systolic
+array full.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pwl_eval import pwl_tile
+
+
+def _quant_matmul_kernel(x_ref, w_ref, xs_ref, ws_ref, tab_ref, o_ref,
+                         acc_ref, *, k_steps: int, num_segments: int,
+                         fuse_pwl: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        # dequantize: per-tensor activation scale x per-channel weight scale
+        out = acc * xs_ref[0] * ws_ref[...]
+        if fuse_pwl:
+            out = pwl_tile(out, tab_ref, num_segments)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale: jnp.ndarray,
+                 w_scale: jnp.ndarray, packed_table: Optional[jnp.ndarray],
+                 out_dtype=jnp.float32,
+                 block_m: int = 256, block_n: int = 256, block_k: int = 256,
+                 interpret: bool = False) -> jnp.ndarray:
+    """(M,K)int8 @ (K,N)int8 -> (M,N)out_dtype with fused dequant (+PWL).
+
+    x_scale: (1,) f32 per-tensor; w_scale: (1, N) f32 per-channel.
+    packed_table: (3, S+1) PWL table for the fused epilogue, or None.
+    Shapes must be pre-padded to block multiples (ops.py handles ragged).
+    """
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2 and m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    k_steps = k // block_k
+    fuse = packed_table is not None
+    if packed_table is None:
+        packed_table = jnp.zeros((3, 2), jnp.float32)
+    num_segments = int(packed_table.shape[1]) - 1
+    kernel = functools.partial(_quant_matmul_kernel, k_steps=k_steps,
+                               num_segments=num_segments, fuse_pwl=fuse)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, k_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # x scale (1,)
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),  # w scales
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # PWL table
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(xq, wq, x_scale, w_scale, packed_table)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+Each function computes the SAME mathematical quantity as its kernel with
+plain jnp ops — including the PWL approximation itself, so kernel-vs-ref
+comparisons isolate kernel bugs from approximation error.  Exact
+(non-PWL) references live alongside for accuracy measurements.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nvu, pwl
+from repro.core.quant import QTensor
+
+
+# --- pwl_eval ---------------------------------------------------------------
+
+def pwl_eval(x: jnp.ndarray, table: pwl.PWLTable) -> jnp.ndarray:
+    return nvu.pwl_eval(x, table)
+
+
+# --- quant_matmul -----------------------------------------------------------
+
+def quant_matmul(xq: jnp.ndarray, wq: jnp.ndarray, x_scale, w_scale,
+                 table: Optional[pwl.PWLTable] = None,
+                 out_dtype=jnp.float32) -> jnp.ndarray:
+    acc = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * x_scale.reshape(()) * w_scale.reshape(1, -1)
+    if table is not None:
+        out = nvu.pwl_eval(out, table)
+    return out.astype(out_dtype)
+
+
+# --- nvu_softmax ------------------------------------------------------------
+
+def nvu_softmax(x: jnp.ndarray, segments: int = 16,
+                causal: bool = False) -> jnp.ndarray:
+    """Softmax with PWL exp and PWL (mantissa-normalized) reciprocal."""
+    xf = x.astype(jnp.float32)
+    if causal:
+        q, k = x.shape[-2], x.shape[-1]
+        mask = jnp.tril(jnp.ones((q, k), bool), k - q)
+        xf = jnp.where(mask, xf, -1e30)
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    z = jnp.maximum(xf - m, -18.0)
+    e = jnp.maximum(nvu.pwl_eval(z, pwl.get_table("exp", segments)), 0.0)
+    s = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    return (e * nvu.nvu_reciprocal(s, segments)).astype(x.dtype)
+
+
+# --- nvu_layernorm ----------------------------------------------------------
+
+def nvu_layernorm(x, gamma, beta, eps: float = 1e-5, segments: int = 16,
+                  rms_only: bool = False):
+    xf = x.astype(jnp.float32)
+    if rms_only:
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        xc = xf
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        xc = xf - mu
+        var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    y = xc * nvu.nvu_rsqrt(var + eps, segments) * gamma.astype(jnp.float32)
+    if not rms_only and beta is not None:
+        y = y + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --- flash_attention --------------------------------------------------------
+
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              scale: Optional[float] = None, use_pwl: bool = False,
+              segments: int = 16):
+    """(B,Hq,Sq,D) x (B,Hkv,Skv,D): dense masked attention oracle."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    rows = jnp.arange(sq)[:, None] + (skv - sq)   # align ends (decode case)
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (cols <= rows)
+    if window > 0:
+        mask = mask & (cols > rows - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    if use_pwl:
+        p = nvu_softmax(s.reshape(-1, skv), segments).reshape(s.shape)
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run driver (deliverable e).
+
+For one (architecture x input-shape x mesh) cell:
+    lower -> compile -> memory_analysis + cost_analysis + collective parse
+with ShapeDtypeStruct stand-ins (no allocation).  Results land in a JSON
+under results/dryrun/ that benchmarks/roofline.py consumes.
+
+The XLA_FLAGS line above MUST run before any other import — jax locks the
+device count on first initialization.  Do not set it globally; smoke tests
+and benches see the real single CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4_9b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+
+# --- HLO collective accounting ---------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[subf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind over the partitioned HLO.
+
+    This is the per-device communication volume proxy used by §Roofline:
+    for all-gather the result IS the received data; for all-reduce ring
+    implementations move ~2x the buffer (counted via the x2 factor in
+    roofline.py); reduce-scatter/all-to-all/permute move ~1x the result.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") or s.startswith("ROOT"):
+            # result shape = text between '=' and the op name
+            m = re.search(r"=\s+(.+?)\s+(" + "|".join(_COLLECTIVES)
+                          + r")(-start|-done)?\(", s)
+            if not m:
+                continue
+            kind = m.group(2)
+            if m.group(3) == "-done":
+                continue          # avoid double count of async pairs
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += _shape_bytes(m.group(1))
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             npe: bool = False) -> dict:
+    from repro.config import RunConfig, SHAPES
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh, mesh_config_for
+    from repro.launch.steps import lower_step
+    from repro.models import registry
+
+    cfg = get_config(arch)
+    if npe:
+        cfg = cfg.with_npe()
+    shape = SHAPES[shape_name]
+
+    # applicability gates (DESIGN.md §4)
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped",
+                "reason": "pure full attention — long_500k needs "
+                          "sub-quadratic attention (DESIGN.md §4)"}
+    if shape.kind == "decode" and not registry.has_decode(cfg):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped",
+                "reason": "encoder-only architecture has no decode step"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # XXL training: gradient accumulation bounds activation memory; the
+    # microbatch stays divisible by the data axes so the batch dim shards.
+    micro = 0
+    if shape.kind == "train":
+        pcount = registry.param_count(cfg)
+        data_ways = 32 if multi_pod else 16
+        if pcount > 50e9:
+            micro = data_ways               # 1 sequence per data shard
+        elif pcount > 5e9:
+            micro = 2 * data_ways
+    run = RunConfig(model=cfg, shape=shape,
+                    mesh=mesh_config_for(multi_pod=multi_pod),
+                    microbatch=micro)
+    t0 = time.time()
+    lowered, meta = lower_step(run, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_stats(hlo_text)
+
+    def _get(obj, name):
+        try:
+            return int(getattr(obj, name))
+        except Exception:
+            return None
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "profile": meta["profile"],
+        "npe": npe,
+        "num_devices": mesh.size,
+        "param_count": registry.param_count(cfg),
+        "lower_sec": round(t_lower, 1),
+        "compile_sec": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": _get(mem, "argument_size_in_bytes"),
+            "output_bytes": _get(mem, "output_size_in_bytes"),
+            "temp_bytes": _get(mem, "temp_size_in_bytes"),
+            "generated_code_bytes": _get(mem, "generated_code_size_in_bytes"),
+            "alias_bytes": _get(mem, "alias_size_in_bytes"),
+        },
+        "cost": {k: float(v) for k, v in (cost or {}).items()
+                 if isinstance(v, (int, float))},
+        "collectives": coll,
+        "microbatch": micro,
+    }
+    return result, hlo_text
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True,
+                    choices=["train_4k", "prefill_32k", "decode_32k",
+                             "long_500k"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--npe", action="store_true",
+                    help="enable the paper's technique (int8 MMU + PWL NVU)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    hlo_text = None
+    try:
+        out = run_cell(args.arch, args.shape, args.multi_pod, args.npe)
+        result, hlo_text = out if isinstance(out, tuple) else (out, None)
+    except Exception as e:
+        result = {"arch": args.arch, "shape": args.shape,
+                  "multi_pod": args.multi_pod, "status": "error",
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    tag = "npe_" if args.npe else ""
+    name = f"{tag}{args.arch}__{args.shape}__" \
+        f"{'multipod' if args.multi_pod else 'singlepod'}"
+    path = outdir / (name + ".json")
+    if hlo_text is not None and not args.multi_pod:
+        # save per-device post-optimization HLO for the roofline analyzer
+        # (single-pod only: §Roofline is single-pod; multi-pod proves the
+        # pod axis shards)
+        import gzip
+        with gzip.open(outdir / (name + ".hlo.txt.gz"), "wt") as f:
+            f.write(hlo_text)
+        result["hlo_path"] = str(outdir / (name + ".hlo.txt.gz"))
+    path.write_text(json.dumps(result, indent=2))
+    ok = result["status"] in ("ok", "skipped")
+    print(f"[dryrun] {result['status']}: {path}")
+    if result["status"] == "ok":
+        print(f"  profile={result['profile']} devices={result['num_devices']}"
+              f" lower={result['lower_sec']}s compile={result['compile_sec']}s")
+        print(f"  memory: {result['memory']}")
+        flops = result["cost"].get("flops")
+        print(f"  flops={flops} collective_bytes="
+              f"{result['collectives']['total_bytes']}")
+    elif result["status"] == "skipped":
+        print(f"  reason: {result['reason']}")
+    else:
+        print(result["error"], file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Mesh construction.
+
+make_production_mesh is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run driver
+must set XLA_FLAGS before the first jax call.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.config import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned production meshes: 16x16 (one 256-chip pod) or
+    2x16x16 (two pods, 512 chips; the `pod` axis crosses DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    """Mesh from an arbitrary MeshConfig (elastic restarts use shrunken
+    meshes, tests use 1x1)."""
+    n = int(np.prod(cfg.axis_sizes))
+    avail = len(jax.devices())
+    if n > avail:
+        raise RuntimeError(
+            f"mesh {cfg.describe()} needs {n} devices, have {avail} "
+            "(did the launcher set --xla_force_host_platform_device_count?)")
+    return jax.make_mesh(tuple(cfg.axis_sizes), tuple(cfg.axis_names))
+
+
+def mesh_config_for(*, multi_pod: bool = False, profile: str = "tp") -> MeshConfig:
+    import dataclasses
+    base = MULTI_POD if multi_pod else SINGLE_POD
+    return dataclasses.replace(base, profile=profile)

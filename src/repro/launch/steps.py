@@ -1,0 +1,261 @@
+"""Step builders: train_step / prefill_step / decode_step with shardings.
+
+This is the assembly point of the distribution layer:
+  * input_specs(run)          — ShapeDtypeStruct stand-ins for every input
+                                (weak-type-correct, shardable, no allocation)
+  * build_*_step(run)         — the pure step functions
+  * lower_step(run, mesh)     — jit + shardings + .lower() inside the mesh
+                                context (dry-run and real launch share this)
+
+Profiles (DESIGN.md §3): train -> fsdp; decode/prefill -> tp for models
+whose weights fit replicated-over-data, fsdp above ~20B params;
+long_500k -> sp (KV-cache sequence parallelism).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, RunConfig, ShapeConfig
+from repro.models import common as cm
+from repro.models import registry
+from repro.optim import adamw
+from repro.runtime import compression
+from repro.sharding import rules as R
+
+FSDP_PARAM_THRESHOLD = 20e9
+
+
+def select_profile(run: RunConfig) -> str:
+    if run.mesh.profile != "tp":
+        return run.mesh.profile
+    if run.shape.name == "long_500k":
+        return "sp"
+    if run.shape.kind == "train":
+        return "fsdp"
+    if registry.param_count(run.model) > FSDP_PARAM_THRESHOLD:
+        # XXL inference: 2D-sharded weights + activation all-reduce
+        # (perf-iteration #5) — never all-gather weights per token
+        return "decode2d" if run.shape.kind == "decode" else "fsdp"
+    return "tp"
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, axes, mesh, rules):
+    sh = R.sharding_for(axes, rules, mesh, shape) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sh)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                rules=None) -> Dict[str, Any]:
+    """Training / prefill batch stand-ins (the modality frontends are
+    stubs: precomputed frame/patch embeddings per the assignment)."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    tok_axes = ("batch", "seq")
+    if cfg.family == "vlm":
+        P = cfg.num_patches
+        out["tokens"] = _sds((B, S - P), "int32", tok_axes, mesh, rules)
+        out["embeds"] = _sds((B, P, cfg.d_model), cfg.dtype,
+                             ("batch", "seq", "embed"), mesh, rules)
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S - P), "int32", tok_axes, mesh, rules)
+    elif cfg.family == "encdec":
+        out["tokens"] = _sds((B, S), "int32", tok_axes, mesh, rules)
+        out["embeds"] = _sds((B, cfg.encoder_seq, cfg.d_model), cfg.dtype,
+                             ("batch", "seq", "embed"), mesh, rules)
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S), "int32", tok_axes, mesh, rules)
+    else:
+        out["tokens"] = _sds((B, S), "int32", tok_axes, mesh, rules)
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S), "int32", tok_axes, mesh, rules)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                 rules=None) -> Dict[str, Any]:
+    """Decode-step stand-ins: one new token + the KV/state cache of
+    seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    cache_sp = registry.cache_specs(cfg, B, S)
+    cache_abs = cm.abstract_params(cache_sp)
+    cache_axes = cm.param_axes(cache_sp)
+    if mesh is not None:
+        cache = jax.tree.map(
+            lambda a, ax: jax.ShapeDtypeStruct(
+                a.shape, a.dtype,
+                sharding=R.sharding_for(ax, rules, mesh, a.shape)),
+            cache_abs, cache_axes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    else:
+        cache = cache_abs
+    return {
+        "cache": cache,
+        "tokens": _sds((B, 1), "int32", ("batch", None), mesh, rules),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def param_specs(cfg: ModelConfig, mesh=None, rules=None,
+                dtype: Optional[str] = None):
+    sp = registry.specs(cfg)
+    abs_p = cm.abstract_params(sp)
+    if dtype is not None:
+        abs_p = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.dtype(dtype))
+            if jnp.issubdtype(a.dtype, jnp.floating) else a, abs_p)
+    axes = cm.param_axes(sp)
+    if mesh is None:
+        return abs_p
+    return jax.tree.map(
+        lambda a, ax: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=R.sharding_for(ax, rules, mesh, a.shape)),
+        abs_p, axes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def opt_specs(run: RunConfig, mesh=None):
+    """Optimizer state stand-ins; ZeRO-1 => moments use FSDP rules."""
+    cfg = run.model
+    sp = registry.specs(cfg)
+    axes = cm.param_axes(sp)
+    mdt = jnp.dtype(run.optimizer.moment_dtype)
+    mrules = R.rules_for("fsdp") if run.optimizer.zero1 else None
+
+    def moment(a, ax):
+        sh = (R.sharding_for(ax, mrules, mesh, a.shape)
+              if mesh is not None and mrules is not None else None)
+        return jax.ShapeDtypeStruct(a.shape, mdt, sharding=sh)
+
+    abs_p = cm.abstract_params(sp)
+    m = jax.tree.map(moment, abs_p, axes,
+                     is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return adamw.OptState(jax.ShapeDtypeStruct((), jnp.int32), m,
+                          jax.tree.map(lambda x: x, m))
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(run: RunConfig):
+    cfg = run.model
+
+    def loss_fn(params, batch):
+        logits = registry.apply(cfg, params, batch["tokens"],
+                                remat=(run.remat != "none"),
+                                extra_embeds=batch.get("embeds"))
+        if cfg.family == "vlm":
+            logits = logits[:, cfg.num_patches:]
+        return cm.cross_entropy(logits, batch["labels"])
+
+    def grads_of(params, batch):
+        """Whole-batch or gradient-accumulated (microbatched) gradients.
+
+        Microbatching bounds in-flight activation memory to one microbatch
+        — mandatory for the XXL archs at global_batch 256 x 4096 tokens
+        (see EXPERIMENTS.md §Dry-run memory notes)."""
+        mb = run.microbatch
+        B = batch["tokens"].shape[0]
+        if mb <= 0 or mb >= B:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        n = B // mb
+        micro = jax.tree.map(
+            lambda a: a.reshape(n, mb, *a.shape[1:]), batch)
+
+        def body(carry, mbatch):
+            lsum, gsum = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            gsum = jax.tree.map(
+                lambda acc, gg: acc + gg.astype(jnp.float32), gsum, g)
+            return (lsum + loss, gsum), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (lsum, gsum), _ = jax.lax.scan(body, (jnp.float32(0), zeros), micro)
+        return lsum / n, jax.tree.map(lambda g: g / n, gsum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        if run.optimizer.grad_compression == "int8_ef":
+            # error buffer folded into opt_state.m's dtype budget is not
+            # free; the launcher threads it explicitly (see train.py).
+            grads, _ = compression.compress_decompress(
+                grads, compression.init_error(grads))
+        new_params, new_opt, metrics = adamw.update(run.optimizer, grads,
+                                                    opt_state, params)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_prefill_step(run: RunConfig):
+    cfg = run.model
+
+    def prefill_step(params, batch):
+        logits = registry.apply(cfg, params, batch["tokens"],
+                                remat=False, extra_embeds=batch.get("embeds"))
+        # serving returns last-position logits (next-token distribution)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def build_decode_step(run: RunConfig):
+    cfg = run.model
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = registry.decode_step(cfg, params, cache, tokens,
+                                                 pos)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Lowering (shared by dryrun + launchers)
+# ---------------------------------------------------------------------------
+
+def lower_step(run: RunConfig, mesh, kind: Optional[str] = None):
+    """jit + shard + .lower() the step for `run` on `mesh`.
+
+    Returns (lowered, meta) where meta records the profile and specs.
+    """
+    kind = kind or run.shape.kind
+    profile = select_profile(run)
+    rules = R.rules_for(profile)
+    cfg = run.model
+
+    with mesh, R.active_rules(rules):
+        if kind == "train":
+            pspecs = param_specs(cfg, mesh, rules, dtype=run.param_dtype)
+            ospecs = opt_specs(run, mesh)
+            bspecs = batch_specs(cfg, run.shape, mesh, rules)
+            fn = build_train_step(run)
+            jitted = jax.jit(fn, donate_argnums=(0, 1))
+            lowered = jitted.lower(pspecs, ospecs, bspecs)
+        elif kind == "prefill":
+            pspecs = param_specs(cfg, mesh, rules, dtype=cfg.dtype)
+            bspecs = batch_specs(cfg, run.shape, mesh, rules)
+            fn = build_prefill_step(run)
+            jitted = jax.jit(fn)
+            lowered = jitted.lower(pspecs, bspecs)
+        elif kind == "decode":
+            pspecs = param_specs(cfg, mesh, rules, dtype=cfg.dtype)
+            dspecs = decode_specs(cfg, run.shape, mesh, rules)
+            fn = build_decode_step(run)
+            jitted = jax.jit(fn, donate_argnums=(1,))
+            lowered = jitted.lower(pspecs, dspecs["cache"], dspecs["tokens"],
+                                   dspecs["pos"])
+        else:
+            raise ValueError(kind)
+    return lowered, {"profile": profile, "kind": kind}

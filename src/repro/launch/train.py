@@ -1,0 +1,158 @@
+"""Fault-tolerant training driver.
+
+Wires together: config -> mesh -> data pipeline -> jit'd train step ->
+checkpoint/restore -> fault supervisor.  Runs end-to-end on CPU with
+reduced configs (examples/train_lm.py) and lowers unchanged onto the
+production meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch glm4_9b --smoke \
+        --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.config import (CheckpointConfig, FaultConfig, MeshConfig,
+                          ModelConfig, OptimizerConfig, RunConfig,
+                          ShapeConfig)
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import build_train_step, select_profile
+from repro.models import common as cm
+from repro.models import registry
+from repro.optim import adamw
+from repro.runtime.fault import Supervisor, TrainingFailure, run_with_recovery
+from repro.sharding import rules as R
+
+
+def make_run(arch: str, smoke: bool, steps: int, batch: int, seq: int,
+             npe: bool = False, mesh_shape=None,
+             ckpt_dir: str = "/tmp/repro_ckpt",
+             fault: Optional[FaultConfig] = None,
+             opt: Optional[OptimizerConfig] = None) -> RunConfig:
+    cfg = get_config(arch, smoke=smoke)
+    if npe:
+        cfg = cfg.with_npe()
+    n_dev = len(jax.devices())
+    if mesh_shape is None:
+        mesh_shape = (n_dev, 1)
+    mesh_cfg = MeshConfig(("data", "model"), tuple(mesh_shape), profile="tp")
+    return RunConfig(
+        model=cfg,
+        shape=ShapeConfig("custom", "train", seq, batch),
+        mesh=mesh_cfg,
+        optimizer=opt or OptimizerConfig(warmup_steps=10, decay_steps=steps),
+        checkpoint=CheckpointConfig(directory=ckpt_dir, interval=50),
+        fault=fault or FaultConfig(),
+        steps=steps,
+    )
+
+
+class Trainer:
+    def __init__(self, run: RunConfig, log=print):
+        self.run = run
+        self.log = log
+        self.mesh = make_mesh(run.mesh)
+        self.rules = R.rules_for(select_profile(run))
+        cfg = run.model
+        self.data = SyntheticLM(cfg.vocab_size, run.shape.seq_len,
+                                run.shape.global_batch, seed=run.seed)
+        self.ckpt = Checkpointer(run.checkpoint.directory,
+                                 keep=run.checkpoint.keep,
+                                 async_save=run.checkpoint.async_save)
+        self.supervisor = Supervisor(run.fault)
+        self.history: list[Dict[str, float]] = []
+
+        with self.mesh, R.active_rules(self.rules):
+            self.step_fn = jax.jit(build_train_step(run),
+                                   donate_argnums=(0, 1))
+        self._init_state()
+
+    def _init_state(self):
+        key = jax.random.PRNGKey(self.run.seed)
+        with self.mesh, R.active_rules(self.rules):
+            self.params = registry.init_params(self.run.model, key)
+            self.opt_state = adamw.init(self.run.optimizer, self.params)
+
+    # --- checkpoint plumbing ------------------------------------------
+
+    def _save(self, step: int):
+        self.ckpt.save(step, {"params": self.params, "opt": self.opt_state},
+                       extra={"arch": self.run.model.name})
+
+    def _restore(self) -> int:
+        template = {"params": jax.tree.map(lambda x: x, self.params),
+                    "opt": self.opt_state}
+        state, step = self.ckpt.restore(template)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.log(f"[recover] restored checkpoint at step {step} "
+                 f"(restart #{self.supervisor.restarts})")
+        return step + 1
+
+    # --- the loop ------------------------------------------------------
+
+    def _loop(self, start_step: int) -> Dict[str, Any]:
+        run = self.run
+        for step in range(start_step, run.steps):
+            t0 = time.time()
+            self.supervisor.check_crash(step)
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.data.batch_at(step).items()}
+            with self.mesh, R.active_rules(self.rules):
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            elapsed = time.time() - t0
+            self.supervisor.check_deadline(step, elapsed)
+            self.supervisor.check_loss(step, loss)
+            self.history.append({"step": step, "loss": loss,
+                                 "sec": elapsed})
+            if step % run.log_every == 0:
+                self.log(f"step {step:5d} loss {loss:.4f} "
+                         f"lr {float(metrics['lr']):.2e} "
+                         f"gnorm {float(metrics['grad_norm']):.2f} "
+                         f"({elapsed:.2f}s)")
+            if run.checkpoint.interval > 0 \
+                    and (step + 1) % run.checkpoint.interval == 0:
+                self._save(step)
+        self._save(run.steps - 1)
+        self.ckpt.wait()
+        return {"final_loss": self.history[-1]["loss"],
+                "history": self.history,
+                "fault_events": self.supervisor.events,
+                "restarts": self.supervisor.restarts}
+
+    def train(self) -> Dict[str, Any]:
+        # save step-0 checkpoint so the first rewind has a target
+        self._save(0)
+        return run_with_recovery(self._loop, self._restore, self.supervisor)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4_9b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--npe", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args(argv)
+    run = make_run(args.arch, args.smoke, args.steps, args.batch, args.seq,
+                   npe=args.npe, ckpt_dir=args.ckpt_dir)
+    out = Trainer(run).train()
+    print(f"done: final loss {out['final_loss']:.4f}, "
+          f"restarts {out['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

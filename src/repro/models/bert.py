@@ -1,0 +1,86 @@
+"""BERT encoder — the paper's own benchmark network (Table 1).
+
+Post-norm encoder blocks exactly as in paper Table 1:
+    X1 = MultiHeadAttention(X);      X2 = LayerNorm(X + X1)
+    X3 = GELU(X2 W1 + b1);  X4 = X3 W2 + b2;  X5 = LayerNorm(X2 + X4)
+
+With cfg.with_npe(): every matmul runs through the quantized MMU and every
+nonlinearity (softmax, both layernorms, GELU) through the unified PWL NVU —
+the configuration whose end-to-end accuracy the paper's §5.5 simulation
+validates.  examples/serve_bert.py and tests/test_npe_accuracy.py compare
+this against the float model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.sharding.rules import constrain
+
+
+def specs(cfg: ModelConfig) -> Dict[str, Any]:
+    L, D, V = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    blocks = {
+        "ln1": tf._stack_norm(cfg, D, L),
+        "ln2": tf._stack_norm(cfg, D, L),
+        "mlp": tf.mlp_specs(cfg, L),
+    }
+    blocks.update(tf.attn_specs(cfg, L))
+    return {
+        "embed": cm.Spec((V, D), ("vocab", "embed_fsdp"), "embed", scale=0.02),
+        "pos_embed": cm.Spec((cfg.max_position, D), (None, "embed_fsdp"),
+                             "embed", scale=0.02),
+        "type_embed": cm.Spec((2, D), (None, "embed_fsdp"), "embed",
+                              scale=0.02),
+        "ln_embed": cm.norm_spec(cfg, D),
+        "blocks": blocks,
+        "pooler": cm.Spec((D, D), ("embed_fsdp", None)),
+    }
+
+
+def apply(cfg: ModelConfig, params, tokens, positions=None, remat: bool = True,
+          extra_embeds=None):
+    """tokens: (B, S) -> MLM logits (B, S, V) (tied embedding head)."""
+    b, s = tokens.shape
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    x = x + params["pos_embed"][:s][None].astype(x.dtype)
+    x = x + params["type_embed"][0][None, None].astype(x.dtype)
+    x = cm.apply_norm(cfg, params["ln_embed"], x, eps=1e-12)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def layer(xc, p):
+        a, _ = tf._attn(cfg, p, xc, positions, window=0)   # post-norm: raw x
+        xc = cm.apply_norm(cfg, p["ln1"], xc + a, eps=1e-12)
+        m = tf._mlp(cfg, p["mlp"], xc)
+        xc = cm.apply_norm(cfg, p["ln2"], xc + m, eps=1e-12)
+        return constrain(xc, ("batch", "seq", "embed")), None
+
+    fn = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    return cm.logits_out(cfg, x, params["embed"].T)
+
+
+def encode(cfg: ModelConfig, params, tokens):
+    """Sequence embeddings (B, S, D) — used by the serving example."""
+    b, s = tokens.shape
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    x = x + params["pos_embed"][:s][None].astype(x.dtype)
+    x = x + params["type_embed"][0][None, None].astype(x.dtype)
+    x = cm.apply_norm(cfg, params["ln_embed"], x, eps=1e-12)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def layer(xc, p):
+        a, _ = tf._attn(cfg, p, xc, positions, window=0)
+        xc = cm.apply_norm(cfg, p["ln1"], xc + a, eps=1e-12)
+        m = tf._mlp(cfg, p["mlp"], xc)
+        xc = cm.apply_norm(cfg, p["ln2"], xc + m, eps=1e-12)
+        return xc, None
+
+    x, _ = jax.lax.scan(layer, x, params["blocks"])
+    return x

@@ -1,0 +1,378 @@
+"""Shared model substrate: parameter specs, norms, RoPE, attention, MLP.
+
+Parameter system
+----------------
+Each model family defines `specs(cfg)` — a nested dict of `Spec(shape,
+axes, init)`.  Everything else derives from the specs:
+  * init_params       — PRNG initialization (vmapped over stacked layers)
+  * abstract_params   — ShapeDtypeStructs (dry-run, no allocation)
+  * param_axes        — logical-axes tree for sharding rules
+
+All nonlinearities route through repro.core.nvu so the paper's unified PWL
+engine (`cfg.npe_pwl`) and quantized MMU (`cfg.npe_quant`) apply uniformly
+to every architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import nvu
+from repro.core.quant import dense_maybe_quant
+from repro.sharding.rules import constrain
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | embed
+    scale: Optional[float] = None
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _init_leaf(spec: Spec, key) -> jnp.ndarray:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "embed":
+        scale = spec.scale if spec.scale is not None else 1.0
+        return (jax.random.normal(key, spec.shape) * scale).astype(dt)
+    # fan-in scaled normal on the contracted (second-to-last) dimension
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = spec.scale if spec.scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, spec.shape) * scale).astype(dt)
+
+
+def init_params(specs: Dict[str, Any], key) -> Dict[str, Any]:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef,
+                              [_init_leaf(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs: Dict[str, Any]) -> Dict[str, Any]:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=_is_spec)
+
+
+def param_axes(specs: Dict[str, Any]) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def param_count(specs: Dict[str, Any]) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+def cast_tree(params, dtype):
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)
+
+
+# ---------------------------------------------------------------------------
+# Normalization (unified PWL engine when npe_pwl is on)
+# ---------------------------------------------------------------------------
+
+def norm(cfg: ModelConfig, x, gamma, beta=None, eps: float = 1e-6):
+    seg = cfg.npe_pwl_segments
+    if cfg.norm == "layernorm":
+        if cfg.npe_pwl:
+            return nvu.nvu_layernorm(x, gamma, beta, eps=eps, segments=seg)
+        mu = jnp.mean(x.astype(jnp.float32), -1, keepdims=True)
+        var = jnp.var(x.astype(jnp.float32), -1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps) * gamma
+        if beta is not None:
+            y = y + beta
+        return y.astype(x.dtype)
+    if cfg.npe_pwl:
+        return nvu.nvu_rmsnorm(x, gamma, eps=eps, segments=seg)
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x * jax.lax.rsqrt(ms + eps) * gamma).astype(x.dtype)
+
+
+def norm_spec(cfg: ModelConfig, dim: int) -> Dict[str, Spec]:
+    s = {"gamma": Spec((dim,), ("norm",), "ones")}
+    if cfg.norm == "layernorm" and cfg.norm_bias:
+        s["beta"] = Spec((dim,), ("norm",), "zeros")
+    return s
+
+
+def apply_norm(cfg: ModelConfig, p: Dict[str, Any], x, eps: float = 1e-6):
+    return norm(cfg, x, p["gamma"], p.get("beta"), eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# Dense layers (MMU when npe_quant is on)
+# ---------------------------------------------------------------------------
+
+def dense(cfg: ModelConfig, x, w, b=None):
+    """All projections route here: float matmul, or the quantized MMU."""
+    y = dense_maybe_quant(x, w.astype(x.dtype), None,
+                          npe_quant=cfg.npe_quant, bits=cfg.npe_quant_bits)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def activation_fn(cfg: ModelConfig, x):
+    return nvu.activation(cfg.activation, cfg.npe_pwl,
+                          cfg.npe_pwl_segments)(x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections=(16, 24, 24)):
+    """Qwen2-VL M-RoPE: positions3 (B, S, 3) = (t, h, w) ids; the D/2
+    frequency slots are split into three sections, each rotated by its own
+    position stream."""
+    d2 = x.shape[-1] // 2
+    sec = np.asarray(sections)
+    sec = (sec * d2 / sec.sum()).astype(int)
+    sec[-1] = d2 - sec[:-1].sum()
+    freqs = rope_freqs(x.shape[-1], theta)
+    parts = []
+    start = 0
+    for i, n in enumerate(sec):
+        ang = positions3[..., i, None].astype(jnp.float32) * freqs[start:start + n]
+        parts.append(ang)
+        start += n
+    ang = jnp.concatenate(parts, -1)                          # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / sliding / decode) — jnp path (XLA/GSPMD)
+# ---------------------------------------------------------------------------
+
+def attention_scores(cfg: ModelConfig, q, k, v, *, window: int = 0,
+                     causal: bool = True, q_offset=0, k_offset=0,
+                     kv_valid=None):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D).  q positions are
+    end-aligned to kv (decode: Sq=1, q_offset=Skv-1); k_offset shifts key
+    positions (chunked attention over kv slices).  kv_valid: optional
+    (Skv,) bool mask (ring-cache slot validity).  Returns (B, Sq, Hq, D).
+
+    Softmax routes through the unified NVU engine when npe_pwl is on —
+    every architecture's attention uses the same PWL softmax (paper §4.1.2).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    # Perf-iteration #2: operands stay bf16 (half the HBM traffic, 2x MXU
+    # rate); accumulation is f32 (preferred_element_type), so the softmax
+    # is still computed on f32 scores.
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    scores = scores.astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        t = (jnp.tanh if not cfg.npe_pwl
+             else partial(nvu.nvu_tanh, segments=cfg.npe_pwl_segments))
+        scores = c * t(scores / c)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :] + k_offset
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    # window may be a traced scalar (per-layer scan operand); <=0 => full
+    window = jnp.asarray(window, jnp.int32)
+    mask = mask & ((window <= 0) | (kpos > qpos - window))
+    if kv_valid is not None:
+        mask = mask & kv_valid[None, :]
+    probs = nvu.softmax(scores, axis=-1, use_pwl=cfg.npe_pwl,
+                        segments=cfg.npe_pwl_segments,
+                        where=mask[None, None, None])
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, d)
+
+
+# Perf-iteration #1 (EXPERIMENTS.md §Perf, hymba/prefill_32k): long-sequence
+# prefill/train must not materialize the (Sq, Skv) score tensor.  Queries
+# are processed in chunks (scan => one chunk's scores live at a time); for
+# sliding-window layers the key range is additionally SLICED to the band
+# the chunk can see, making the work O(S*(window+chunk)) instead of O(S^2).
+# Perf-iteration #2: chunk 1024 — band = window+chunk shrinks 3072 -> 2048
+# for the window-1024 archs; score traffic scales with S*(window+chunk).
+ATTN_CHUNK = 1024
+
+
+def chunked_attention(cfg: ModelConfig, q, k, v, *, window: int = 0,
+                      causal: bool = True, chunk: int = ATTN_CHUNK):
+    """Exact chunked attention (full-row softmax per q-chunk).
+
+    A non-divisible remainder (hymba's meta-token prefix makes the
+    sequence 32768+128) is handled as one short tail chunk."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    n = sq // chunk
+    rem = sq - n * chunk
+    banded = (causal and isinstance(window, int) and 0 < window
+              and skv == sq)
+    band = None
+    if banded:
+        band = min(window + chunk, skv)
+        banded = band < skv             # no point slicing a full band
+
+    def at(q_i, offset):
+        if banded:
+            s0 = jnp.maximum(offset + q_i.shape[1] - band, 0)
+            k_i = jax.lax.dynamic_slice_in_dim(k, s0, band, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, s0, band, axis=1)
+            return attention_scores(cfg, q_i, k_i, v_i, window=window,
+                                    causal=causal, q_offset=offset,
+                                    k_offset=s0)
+        return attention_scores(cfg, q_i, k, v, window=window,
+                                causal=causal, q_offset=offset)
+
+    def body(_, i):
+        q_i = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        return None, at(q_i, i * chunk)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n, dtype=jnp.int32))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n * chunk, hq, d)
+    if rem:
+        tail = at(q[:, n * chunk:], n * chunk)
+        out = jnp.concatenate([out, tail], axis=1)
+    return out
+
+
+def attention_auto(cfg: ModelConfig, q, k, v, *, window: int = 0,
+                   causal: bool = True):
+    """Dispatch: long self-attention goes through
+      * banded chunked attention for sliding-window layers (local work), or
+      * CONTEXT-PARALLEL full attention for global layers: q's sequence dim
+        is sharded over the model axis (perf-iteration #3) — each shard
+        computes its q-rows against the full (replicated, small) k/v.  This
+        is the fix for architectures whose head count does not divide the
+        model axis (hymba's 25 heads) where GSPMD would otherwise REPLICATE
+        the whole S x S score computation on every model shard.
+    Short sequences use the direct path."""
+    sq = q.shape[1]
+    if sq > 2 * ATTN_CHUNK:
+        static_window = isinstance(window, (int, float)) and int(window) > 0
+        if static_window:
+            return chunked_attention(cfg, q, k, v, window=int(window),
+                                     causal=causal)
+        q = constrain(q, ("batch", "attn_seq", None, None))
+        out = attention_scores(cfg, q, k, v, window=window, causal=causal)
+        return constrain(out, ("batch", "attn_seq", None, None))
+    return attention_scores(cfg, q, k, v, window=window, causal=causal)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / logits / loss
+# ---------------------------------------------------------------------------
+
+def constrain_embed(x):
+    """Resolve a row-parallel product onto ("batch","seq","embed") while
+    still bf16 — placed right after the dense so the model-axis all-reduce
+    moves bf16 instead of the downstream f32 cast (perf-iteration #4)."""
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits_out(cfg: ModelConfig, x, table):
+    """Final projection with a (D, V) table; vocab sharded on model axis."""
+    out = dense_maybe_quant(x, table.astype(x.dtype),
+                            npe_quant=cfg.npe_quant,
+                            bits=cfg.npe_quant_bits)
+    return constrain(out, ("batch", "seq", "vocab"))
+
+
+def cross_entropy(logits, labels, vocab_true: Optional[int] = None):
+    """Mean CE; labels < 0 (ignore ids) or >= vocab_true (padding ids)
+    are masked out."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    safe = jnp.clip(labels, 0, logits.shape[-1] - 1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    valid = labels >= 0
+    if vocab_true is not None:
+        valid = valid & (labels < vocab_true)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+
+
+# ---------------------------------------------------------------------------
+# KV cache helpers
+# ---------------------------------------------------------------------------
+
+def kv_cache_specs(cfg: ModelConfig, num_layers: int, batch: int,
+                   max_seq: int, dtype: str = "bfloat16"):
+    kv = (num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {"k": Spec(kv, axes, "zeros", dtype=dtype),
+            "v": Spec(kv, axes, "zeros", dtype=dtype)}
+
+
+def update_cache_layer(cache_k, cache_v, k_new, v_new, pos):
+    """Insert (B, S_new, H, D) at time offset `pos` (scalar).
+
+    Single-token inserts use a select-by-iota instead of
+    dynamic_update_slice: DUS at a traced index on a SEQUENCE-SHARDED
+    cache forces GSPMD to all-gather the whole cache (measured 2.1 GB x2
+    per layer per token on command-r decode — perf-iteration #6); the
+    select is elementwise over the sharded dim and stays fully local.
+    """
+    if k_new.shape[1] == 1:
+        s = cache_k.shape[1]
+        hit = (jnp.arange(s, dtype=jnp.int32) == pos)[None, :, None, None]
+        ck = jnp.where(hit, k_new.astype(cache_k.dtype), cache_k)
+        cv = jnp.where(hit, v_new.astype(cache_v.dtype), cache_v)
+        return ck, cv
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                      (0, pos, 0, 0))
+    return ck, cv

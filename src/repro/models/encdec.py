@@ -1,0 +1,184 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB per the assignment: `input_specs()`
+provides precomputed frame embeddings (B, encoder_seq, D) in place of the
+two-conv mel-spectrogram stem.  Everything transformer-side is real:
+sinusoidal encoder positions, learned decoder positions, pre-norm blocks,
+GELU MLPs, causal decoder self-attention + cross-attention.
+
+Decode uses a growing self-attention cache plus a fixed cross-attention
+cache computed once from the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.sharding.rules import constrain
+
+
+def specs(cfg: ModelConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.vocab_size
+    Le, Ld = cfg.encoder_layers, cfg.decoder_layers
+    enc = {
+        "ln1": tf._stack_norm(cfg, D, Le),
+        "ln2": tf._stack_norm(cfg, D, Le),
+        "mlp": tf.mlp_specs(cfg, Le),
+    }
+    enc.update(tf.attn_specs(cfg, Le))
+    dec = {
+        "ln1": tf._stack_norm(cfg, D, Ld),
+        "ln_x": tf._stack_norm(cfg, D, Ld),
+        "ln2": tf._stack_norm(cfg, D, Ld),
+        "mlp": tf.mlp_specs(cfg, Ld),
+        "cross": tf.attn_specs(cfg, Ld),
+    }
+    dec.update(tf.attn_specs(cfg, Ld))
+    return {
+        "embed": cm.Spec((V, D), ("vocab", "embed_fsdp"), "embed", scale=0.02),
+        "pos_dec": cm.Spec((cfg.max_position, D), (None, "embed_fsdp"),
+                           "embed", scale=0.02),
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "ln_enc": cm.norm_spec(cfg, D),
+        "ln_f": cm.norm_spec(cfg, D),
+    }
+
+
+def _sinusoid(length: int, dim: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / dim)
+    return np.concatenate([np.sin(ang), np.cos(ang)], -1).astype(np.float32)
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, T_enc, D) precomputed frame embeddings (conv stub)."""
+    b, t, D = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype)) + jnp.asarray(
+        _sinusoid(t, D), jnp.dtype(cfg.dtype))[None]
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def layer(xc, p):
+        h = cm.apply_norm(cfg, p["ln1"], xc)
+        a, _ = tf._attn(cfg, p, h, positions, window=0)
+        xc = xc + a
+        h2 = cm.apply_norm(cfg, p["ln2"], xc)
+        xc = xc + tf._mlp(cfg, p["mlp"], h2)
+        return constrain(xc, ("batch", "seq", "embed")), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(layer), x, params["enc_blocks"])
+    return cm.apply_norm(cfg, params["ln_enc"], x)
+
+
+def _cross_attn(cfg, p, x, enc_kv):
+    """Cross-attention with precomputed encoder K/V (ck, cv)."""
+    b, s, D = x.shape
+    q = cm.dense(cfg, x, p["wq"], p.get("bq"))
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    ck, cv = enc_kv
+    out = cm.attention_scores(cfg, q, ck, cv, causal=False)
+    out = out.reshape(b, s, cfg.q_dim())
+    return cm.dense(cfg, out, p["wo"])
+
+
+def cross_kv(cfg, p_cross_stacked, enc_out):
+    """Precompute cross K/V for all decoder layers: (L, B, T_enc, Hkv, hd)."""
+    b, t, D = enc_out.shape
+
+    def per_layer(p):
+        k = cm.dense(cfg, enc_out, p["wk"], p.get("bk"))
+        v = cm.dense(cfg, enc_out, p["wv"], p.get("bv"))
+        return (k.reshape(b, t, cfg.num_kv_heads, cfg.head_dim),
+                v.reshape(b, t, cfg.num_kv_heads, cfg.head_dim))
+
+    return jax.lax.map(per_layer, p_cross_stacked)
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out):
+    """Teacher-forced decoder pass. tokens: (B, S)."""
+    b, s = tokens.shape
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    x = x + params["pos_dec"][:s][None].astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    ckv = cross_kv(cfg, params["dec_blocks"]["cross"], enc_out)
+
+    def layer(xc, operands):
+        p, kv = operands
+        h = cm.apply_norm(cfg, p["ln1"], xc)
+        a, _ = tf._attn(cfg, p, h, positions, window=0)
+        xc = xc + a
+        hx = cm.apply_norm(cfg, p["ln_x"], xc)
+        xc = xc + _cross_attn(cfg, p["cross"], hx, kv)
+        h2 = cm.apply_norm(cfg, p["ln2"], xc)
+        xc = xc + tf._mlp(cfg, p["mlp"], h2)
+        return constrain(xc, ("batch", "seq", "embed")), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(layer), x, (params["dec_blocks"], ckv))
+    x = cm.apply_norm(cfg, params["ln_f"], x)
+    return cm.logits_out(cfg, x, params["embed"].T)
+
+
+def apply(cfg: ModelConfig, params, tokens, positions=None, remat: bool = True,
+          extra_embeds=None):
+    """Full enc-dec training forward: extra_embeds = frame embeddings."""
+    assert extra_embeds is not None, "encdec needs frame embeddings"
+    enc_out = encode(cfg, params, extra_embeds)
+    return decode_train(cfg, params, tokens, enc_out)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    Ld = cfg.decoder_layers
+    out = {"self": cm.kv_cache_specs(cfg, Ld, batch, max_seq)}
+    cross = cm.kv_cache_specs(cfg, Ld, batch, cfg.encoder_seq)
+    out["cross"] = cross
+    return out
+
+
+def init_cross_cache(cfg: ModelConfig, params, frames):
+    enc_out = encode(cfg, params, frames)
+    k, v = cross_kv(cfg, params["dec_blocks"]["cross"], enc_out)
+    return {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decoder token with growing self-cache + fixed cross cache."""
+    b, s = tokens.shape
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["pos_dec"], pos, s, 0)[None].astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.full((b, s), pos, jnp.int32)
+
+    def layer(carry, operands):
+        xc, cself = carry
+        p, ck_cross, cv_cross, li = operands
+        h = cm.apply_norm(cfg, p["ln1"], xc)
+        a, (nk, nv) = tf._attn(cfg, p, h, positions,
+                               cache=(cself["k"][li], cself["v"][li]),
+                               pos=pos)
+        cself = {"k": cself["k"].at[li].set(nk),
+                 "v": cself["v"].at[li].set(nv)}
+        xc = xc + a
+        hx = cm.apply_norm(cfg, p["ln_x"], xc)
+        xc = xc + _cross_attn(cfg, p["cross"], hx, (ck_cross, cv_cross))
+        h2 = cm.apply_norm(cfg, p["ln2"], xc)
+        xc = xc + tf._mlp(cfg, p["mlp"], h2)
+        return (xc, cself), None
+
+    Ld = cfg.decoder_layers
+    (x, cself), _ = jax.lax.scan(
+        layer, (x, cache["self"]),
+        (params["dec_blocks"], cache["cross"]["k"], cache["cross"]["v"],
+         jnp.arange(Ld, dtype=jnp.int32)))
+    x = cm.apply_norm(cfg, params["ln_f"], x)
+    logits = cm.logits_out(cfg, x, params["embed"].T)
+    return logits, {"self": cself, "cross": cache["cross"]}

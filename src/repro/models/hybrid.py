@@ -1,0 +1,205 @@
+"""Hymba-style hybrid: parallel attention + SSM heads in every layer.
+
+Each block computes, from the same normed input:
+  * sliding-window GQA attention (full attention every `global_every`
+    layers, following the Hymba paper's few-global-layers design)
+  * a Mamba selective-SSM head (models.ssm)
+then combines the branches with per-branch learned output norms and mean
+fusion (the paper's beta-weighted fusion with beta folded into the norm
+gains), plus optional learnable meta tokens prepended to the sequence.
+
+long_500k applicability: window KV cache is O(window), SSM state is O(1)
+— the hybrid decodes half-a-million-token contexts with constant memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import common as cm
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tf
+from repro.sharding.rules import constrain
+
+
+def meta_tokens(cfg: ModelConfig) -> int:
+    return 128 if cfg.family == "hybrid" else 0
+
+
+def specs(cfg: ModelConfig) -> Dict[str, Any]:
+    L, D, V = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    out: Dict[str, Any] = {
+        "embed": cm.Spec((V, D), ("vocab", "embed_fsdp"), "embed", scale=0.02),
+        "ln_f": cm.norm_spec(cfg, D),
+        "lm_head": cm.Spec((D, V), ("embed_fsdp", "vocab")),
+    }
+    if meta_tokens(cfg):
+        out["meta"] = cm.Spec((meta_tokens(cfg), D), (None, "embed_fsdp"),
+                              "embed", scale=0.02)
+    blocks: Dict[str, Any] = {
+        "ln1": tf._stack_norm(cfg, D, L),
+        "ln2": tf._stack_norm(cfg, D, L),
+        "attn_norm": tf._stack_norm(cfg, D, L),
+        "ssm_norm": tf._stack_norm(cfg, D, L),
+        "ssm": ssm_mod.specs(cfg, L),
+        "mlp": tf.mlp_specs(cfg, L),
+    }
+    blocks.update(tf.attn_specs(cfg, L))
+    out["blocks"] = blocks
+    return out
+
+
+def _block(cfg, p, x, positions, window, ssm_state, conv_state, cache=None,
+           pos=None, kv_valid=None, causal_over_cache=True):
+    h = cm.apply_norm(cfg, p["ln1"], x)
+    attn_out, new_cache = tf._attn(cfg, p, h, positions, window=window,
+                                   cache=cache, pos=pos, kv_valid=kv_valid,
+                                   causal_over_cache=causal_over_cache)
+    ssm_out, new_state, new_conv = ssm_mod.apply_layer(cfg, p["ssm"], h,
+                                                       ssm_state, conv_state)
+    fused = 0.5 * (cm.apply_norm(cfg, p["attn_norm"], attn_out)
+                   + cm.apply_norm(cfg, p["ssm_norm"], ssm_out))
+    x = x + fused
+    h2 = cm.apply_norm(cfg, p["ln2"], x)
+    x = x + tf._mlp(cfg, p["mlp"], h2)
+    return constrain(x, ("batch", "seq", "embed")), new_cache, new_state, new_conv
+
+
+def apply(cfg: ModelConfig, params, tokens, positions=None, remat: bool = True,
+          extra_embeds=None):
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    b, s0, D = x.shape
+    mt = meta_tokens(cfg)
+    if mt:
+        x = jnp.concatenate(
+            [jnp.broadcast_to(params["meta"].astype(x.dtype), (b, mt, D)), x],
+            axis=1)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(x, ("batch", "seq", "embed"))
+    windows = tf.layer_windows(cfg)                  # STATIC per-layer
+    di, N, _ = ssm_mod.dims(cfg)
+    K = cfg.ssm.conv_dim
+
+    def mk_layer(win: int):
+        def layer(xc, p):
+            st = jnp.zeros((b, di, N), jnp.float32)
+            cv = jnp.zeros((b, K - 1, di), xc.dtype)
+            xc, _, _, _ = _block(cfg, p, xc, positions, win, st, cv)
+            return xc, None
+        return layer
+
+    # group layers by pattern period so windows stay static (banded
+    # chunked attention — perf-iteration #1)
+    p_ = cfg.global_every if cfg.attention == "local_global" else 1
+    n_super = cfg.num_layers // p_
+    tail = cfg.num_layers - n_super * p_
+    pattern = tuple(int(w) for w in windows[:p_])
+    head_p = jax.tree.map(
+        lambda a: a[: n_super * p_].reshape(n_super, p_, *a.shape[1:]),
+        params["blocks"])
+    tail_p = jax.tree.map(lambda a: a[n_super * p_:], params["blocks"])
+
+    head_uniform = len(set(pattern[:-1])) == 1 if p_ > 1 else True
+
+    def lyr(w):
+        # remat at LAYER granularity even inside the period (the period
+        # body is not itself checkpointed — a period of 16 layers would
+        # otherwise hold 16 layers of residuals during backward)
+        return jax.checkpoint(mk_layer(w)) if remat else mk_layer(w)
+
+    def period(xc, pg):
+        if head_uniform and p_ > 2:
+            # [w]*(p-1) + [g]: inner scan -> 2 layer bodies in the HLO
+            head = jax.tree.map(lambda a: a[: p_ - 1], pg)
+            xc, _ = jax.lax.scan(lyr(pattern[0]), xc, head)
+            plast = jax.tree.map(lambda a: a[p_ - 1], pg)
+            xc, _ = lyr(pattern[p_ - 1])(xc, plast)
+        else:
+            for i in range(p_):
+                pi = jax.tree.map(lambda a, i=i: a[i], pg)
+                xc, _ = lyr(pattern[i])(xc, pi)
+        return xc, None
+
+    x, _ = jax.lax.scan(period, x, head_p)
+    for i in range(tail):
+        pi = jax.tree.map(lambda a, i=i: a[i], tail_p)
+        x, _ = lyr(int(windows[n_super * p_ + i]))(x, pi)
+    x = cm.apply_norm(cfg, params["ln_f"], x)
+    logits = cm.logits_out(cfg, x, params["lm_head"])
+    return logits[:, mt:] if mt else logits
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    out = tf.cache_specs(cfg, batch, max_seq)
+    out.update(ssm_mod.state_specs(cfg, cfg.num_layers, batch))
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    b, s, _ = x.shape
+    positions = jnp.full((b, s), pos, jnp.int32)
+    x = constrain(x, ("batch", "seq", "embed"))
+    windows = np.asarray(tf.layer_windows(cfg))
+    full_idx = np.maximum(np.cumsum(windows == 0) - 1, 0)
+    win_idx = np.maximum(np.cumsum(windows > 0) - 1, 0)
+    cache_full, cache_win = cache.get("full"), cache.get("win")
+
+    def layer(carry, operands):
+        xc, cf, cw, states, convs = carry
+        p, win, fi, wi, li = operands
+        st, cv = states[li], convs[li]
+
+        def do_full(_):
+            ck, cvv = cf["k"][fi], cf["v"][fi]
+            out, nc, nst, ncv = _block(cfg, p, xc, positions, 0, st, cv,
+                                       cache=(ck, cvv), pos=pos)
+            nf = {"k": cf["k"].at[fi].set(nc[0]),
+                  "v": cf["v"].at[fi].set(nc[1])}
+            return out, nf, cw, nst, ncv
+
+        def do_win(_):
+            wlen = cw["k"].shape[2]
+            ck, cvv = cw["k"][wi], cw["v"][wi]
+            valid = jnp.logical_or(jnp.arange(wlen) <= pos, pos >= wlen)
+            out, nc, nst, ncv = _block(cfg, p, xc, positions, 0, st, cv,
+                                       cache=(ck, cvv), pos=pos % wlen,
+                                       kv_valid=valid,
+                                       causal_over_cache=False)
+            nw = {"k": cw["k"].at[wi].set(nc[0]),
+                  "v": cw["v"].at[wi].set(nc[1])}
+            return out, cf, nw, nst, ncv
+
+        if cw is None:
+            out, cf2, cw2, nst, ncv = do_full(None)
+        elif cf is None:
+            out, cf2, cw2, nst, ncv = do_win(None)
+        else:
+            out, cf2, cw2, nst, ncv = jax.lax.cond(win > 0, do_win, do_full,
+                                                   None)
+        states = states.at[li].set(nst)
+        convs = convs.at[li].set(ncv)
+        return (out, cf2, cw2, states, convs), None
+
+    L = cfg.num_layers
+    operands = (params["blocks"], jnp.asarray(windows),
+                jnp.asarray(full_idx, jnp.int32),
+                jnp.asarray(win_idx, jnp.int32),
+                jnp.arange(L, dtype=jnp.int32))
+    (x, cf, cw, states, convs), _ = jax.lax.scan(
+        layer, (x, cache_full, cache_win, cache["ssm"], cache["conv"]),
+        operands)
+    x = cm.apply_norm(cfg, params["ln_f"], x)
+    logits = cm.logits_out(cfg, x, params["lm_head"])
+    new_cache = {"ssm": states, "conv": convs}
+    if cf is not None:
+        new_cache["full"] = cf
+    if cw is not None:
+        new_cache["win"] = cw
+    return logits, new_cache

@@ -1,0 +1,73 @@
+"""Model family registry: family name -> implementation module."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+from repro.config import ModelConfig
+from repro.models import bert as bert_mod
+from repro.models import common as cm
+from repro.models import encdec as encdec_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import rwkv6 as rwkv6_mod
+from repro.models import transformer as tf
+
+_FAMILIES = {
+    "dense": tf,
+    "moe": tf,
+    "vlm": tf,
+    "ssm": rwkv6_mod,
+    "hybrid": hybrid_mod,
+    "encdec": encdec_mod,
+    "bert": bert_mod,
+}
+
+
+def module_for(cfg: ModelConfig):
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return module_for(cfg).specs(cfg)
+
+
+def init_params(cfg: ModelConfig, key):
+    return cm.init_params(specs(cfg), key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return cm.abstract_params(specs(cfg))
+
+
+def param_axes(cfg: ModelConfig):
+    return cm.param_axes(specs(cfg))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return cm.param_count(specs(cfg))
+
+
+def apply(cfg: ModelConfig, params, tokens, **kw):
+    # master params are f32; compute in cfg.dtype (bf16) — cast once here
+    params = cm.cast_tree(params, cfg.dtype)
+    return module_for(cfg).apply(cfg, params, tokens, **kw)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    mod = module_for(cfg)
+    if not hasattr(mod, "cache_specs"):
+        raise ValueError(f"{cfg.family} has no decode step (encoder-only)")
+    return mod.cache_specs(cfg, batch, max_seq)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    params = cm.cast_tree(params, cfg.dtype)
+    return module_for(cfg).decode_step(cfg, params, cache, tokens, pos)
+
+
+def has_decode(cfg: ModelConfig) -> bool:
+    return hasattr(module_for(cfg), "decode_step")

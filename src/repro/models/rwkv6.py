@@ -1,0 +1,260 @@
+"""RWKV6 "Finch": attention-free RNN with data-dependent decay.
+
+Faithful structure (arXiv:2404.05892): token-shift ddlerp mixing with
+low-rank (LoRA) data-dependent interpolation, per-channel data-dependent
+decay w_t = exp(-exp(..)), per-head matrix state S in R^{N x N}, bonus u
+for the current token, grouped per-head normalization, and squared-ReLU
+channel mixing.
+
+NPE mapping: every nonlinearity here — exp(-exp(x)) decay, tanh (lora),
+silu (gate), sigmoid (receptance in channel-mix), ReLU^2, groupnorm rsqrt —
+routes through the SAME unified PWL engine (`cfg.npe_pwl`).  The composite
+decay is tabulated directly (core.pwl "exp_neg_exp"), demonstrating the
+paper's claim that new NLP nonlinearities need only a new table, not new
+hardware.
+
+The recurrence runs as lax.scan over time, checkpointed at chunk
+boundaries so training memory is O(S/chunk) states instead of O(S).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import nvu
+from repro.models import common as cm
+from repro.sharding.rules import constrain
+
+LORA_R = 32
+CHUNK = 64
+
+
+def _heads(cfg: ModelConfig):
+    N = cfg.ssm.head_size if cfg.ssm else 64
+    H = cfg.d_model // N
+    return H, N
+
+
+def specs(cfg: ModelConfig) -> Dict[str, Any]:
+    L, D, V, F = cfg.num_layers, cfg.d_model, cfg.vocab_size, cfg.d_ff
+    H, N = _heads(cfg)
+    r = LORA_R
+
+    def mix(name):
+        return {
+            "mu": cm.Spec((L, 5, D), ("layers", None, None), "zeros"),
+            "mu_x": cm.Spec((L, D), ("layers", None), "zeros"),
+            "lora_a": cm.Spec((L, 5, D, r), ("layers", None, "embed_fsdp", None),
+                              scale=0.01),
+            "lora_b": cm.Spec((L, 5, r, D), ("layers", None, None, None),
+                              "zeros"),
+        }
+
+    blocks = {
+        "ln1": {"gamma": cm.Spec((L, D), ("layers", "norm"), "ones"),
+                "beta": cm.Spec((L, D), ("layers", "norm"), "zeros")},
+        "ln2": {"gamma": cm.Spec((L, D), ("layers", "norm"), "ones"),
+                "beta": cm.Spec((L, D), ("layers", "norm"), "zeros")},
+        "att": {
+            "mix": mix("att"),
+            "w0": cm.Spec((L, D), ("layers", None), "zeros"),
+            "w_lora_a": cm.Spec((L, D, 64), ("layers", "embed_fsdp", None),
+                                scale=0.01),
+            "w_lora_b": cm.Spec((L, 64, D), ("layers", None, None), "zeros"),
+            "u": cm.Spec((L, H, N), ("layers", "heads", None), "zeros"),
+            "wr": cm.Spec((L, D, D), ("layers", "embed_fsdp", "heads")),
+            "wk": cm.Spec((L, D, D), ("layers", "embed_fsdp", "heads")),
+            "wv": cm.Spec((L, D, D), ("layers", "embed_fsdp", "heads")),
+            "wg": cm.Spec((L, D, D), ("layers", "embed_fsdp", "heads")),
+            "wo": cm.Spec((L, D, D), ("layers", "heads", "embed_out")),
+            "gn_gamma": cm.Spec((L, D), ("layers", "norm"), "ones"),
+            "gn_beta": cm.Spec((L, D), ("layers", "norm"), "zeros"),
+        },
+        "ffn": {
+            "mu_k": cm.Spec((L, D), ("layers", None), "zeros"),
+            "mu_r": cm.Spec((L, D), ("layers", None), "zeros"),
+            "wk": cm.Spec((L, D, F), ("layers", "embed_fsdp", "mlp")),
+            "wv": cm.Spec((L, F, D), ("layers", "mlp", "embed_out")),
+            "wr": cm.Spec((L, D, D), ("layers", "embed_fsdp", None)),
+        },
+    }
+    return {
+        "embed": cm.Spec((V, D), ("vocab", "embed_fsdp"), "embed", scale=0.02),
+        "ln_in": {"gamma": cm.Spec((D,), ("norm",), "ones"),
+                  "beta": cm.Spec((D,), ("norm",), "zeros")},
+        "ln_f": {"gamma": cm.Spec((D,), ("norm",), "ones"),
+                 "beta": cm.Spec((D,), ("norm",), "zeros")},
+        "lm_head": cm.Spec((D, V), ("embed_fsdp", "vocab")),
+        "blocks": blocks,
+    }
+
+
+def _sigmoid(cfg, x):
+    return nvu.nvu_sigmoid(x, cfg.npe_pwl_segments) if cfg.npe_pwl else jax.nn.sigmoid(x)
+
+
+def _tanh(cfg, x):
+    return nvu.nvu_tanh(x, cfg.npe_pwl_segments) if cfg.npe_pwl else jnp.tanh(x)
+
+
+def _silu(cfg, x):
+    return nvu.nvu_silu(x, cfg.npe_pwl_segments) if cfg.npe_pwl else jax.nn.silu(x)
+
+
+def _relu2(cfg, x):
+    return nvu.nvu_relu2(x) if cfg.npe_pwl else jnp.square(jax.nn.relu(x))
+
+
+def _decay(cfg, x):
+    """w = exp(-exp(x)) in (0, 1): the data-dependent decay."""
+    if cfg.npe_pwl:
+        return nvu.nvu_exp_neg_exp(x, cfg.npe_pwl_segments)
+    return jnp.exp(-jnp.exp(jnp.clip(x, -40.0, 10.0)))
+
+
+def _layernorm(cfg, x, g, b):
+    if cfg.npe_pwl:
+        return nvu.nvu_layernorm(x, g, b, segments=cfg.npe_pwl_segments)
+    mu = jnp.mean(x.astype(jnp.float32), -1, keepdims=True)
+    var = jnp.var(x.astype(jnp.float32), -1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b).astype(x.dtype)
+
+
+def _groupnorm_heads(cfg, x, gamma, beta, H, N):
+    """Per-head groupnorm of (B, T, D) viewed as (B, T, H, N)."""
+    b, t, D = x.shape
+    xh = x.reshape(b, t, H, N).astype(jnp.float32)
+    mu = jnp.mean(xh, -1, keepdims=True)
+    var = jnp.var(xh, -1, keepdims=True)
+    inv = (nvu.nvu_rsqrt(var + 64e-5, cfg.npe_pwl_segments) if cfg.npe_pwl
+           else jax.lax.rsqrt(var + 64e-5))
+    xn = ((xh - mu) * inv).reshape(b, t, D)
+    return (xn * gamma + beta).astype(x.dtype)
+
+
+def _ddlerp(cfg, p, x, x_prev):
+    """Data-dependent token-shift mixing -> 5 streams (w, k, v, r, g)."""
+    dx = x_prev - x
+    xx = x + dx * p["mu_x"]
+    lora = jnp.einsum("btd,ndr->btnr", _tanh(cfg, xx), p["lora_a"].astype(x.dtype))
+    lora = jnp.einsum("btnr,nrd->btnd", lora, p["lora_b"].astype(x.dtype))
+    mixed = x[:, :, None] + dx[:, :, None] * (p["mu"] + lora)
+    return [mixed[:, :, i] for i in range(5)]
+
+
+def _time_mix(cfg: ModelConfig, p, x, x_prev, state):
+    """One layer's WKV6 over a sequence.  x: (B, T, D); x_prev: (B, D);
+    state: (B, H, N, N).  Returns (out, new_x_prev, new_state)."""
+    H, N = _heads(cfg)
+    b, t, D = x.shape
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(cfg, p["mix"], x, shifted)
+
+    r = cm.dense(cfg, xr, p["wr"]).reshape(b, t, H, N)
+    k = cm.dense(cfg, xk, p["wk"]).reshape(b, t, H, N)
+    v = cm.dense(cfg, xv, p["wv"]).reshape(b, t, H, N)
+    g = _silu(cfg, cm.dense(cfg, xg, p["wg"]))
+    wx = p["w0"] + _tanh(cfg, xw @ p["w_lora_a"].astype(x.dtype)) \
+        @ p["w_lora_b"].astype(x.dtype)
+    w = _decay(cfg, wx).reshape(b, t, H, N)                # in (0, 1)
+    u = p["u"]                                             # (H, N)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                               # (B,H,N) each
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,N,N)
+        out = jnp.einsum("bhn,bhnm->bhm", rt, S + u[..., None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    if t > CHUNK and t % CHUNK == 0:
+        # chunked checkpointing: O(T/CHUNK) stored states
+        def chunk_scan(S, chunk_xs):
+            return jax.lax.scan(step, S, chunk_xs)
+        chunked = jax.tree.map(
+            lambda a: a.reshape(t // CHUNK, CHUNK, *a.shape[1:]), xs)
+        state, out = jax.lax.scan(jax.checkpoint(chunk_scan), state, chunked)
+        out = out.reshape(t, b, H, N)
+    else:
+        state, out = jax.lax.scan(step, state, xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, t, D).astype(x.dtype)
+    out = _groupnorm_heads(cfg, out, p["gn_gamma"], p["gn_beta"], H, N)
+    out = cm.dense(cfg, out * g, p["wo"])
+    return out, x[:, -1], state
+
+
+def _channel_mix(cfg: ModelConfig, p, x, x_prev):
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    dx = shifted - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    k = _relu2(cfg, cm.dense(cfg, xk, p["wk"]))
+    kv = cm.dense(cfg, k, p["wv"])
+    return _sigmoid(cfg, cm.dense(cfg, xr, p["wr"])) * kv, x[:, -1]
+
+
+def apply(cfg: ModelConfig, params, tokens, positions=None, remat: bool = True,
+          extra_embeds=None):
+    H, N = _heads(cfg)
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    x = _layernorm(cfg, x, params["ln_in"]["gamma"], params["ln_in"]["beta"])
+    x = constrain(x, ("batch", "seq", "embed"))
+    b, t, D = x.shape
+
+    def layer(xc, p):
+        h = _layernorm(cfg, xc, p["ln1"]["gamma"], p["ln1"]["beta"])
+        state0 = jnp.zeros((b, H, N, N), jnp.float32)
+        att, _, _ = _time_mix(cfg, p["att"], h, jnp.zeros((b, D), h.dtype),
+                              state0)
+        xc = xc + att
+        h2 = _layernorm(cfg, xc, p["ln2"]["gamma"], p["ln2"]["beta"])
+        ffn, _ = _channel_mix(cfg, p["ffn"], h2, jnp.zeros((b, D), h2.dtype))
+        return constrain(xc + ffn, ("batch", "seq", "embed")), None
+
+    fn = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    x = _layernorm(cfg, x, params["ln_f"]["gamma"], params["ln_f"]["beta"])
+    return cm.logits_out(cfg, x, params["lm_head"])
+
+
+# --- decode -----------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    """O(1) recurrent state — no KV cache (the long_500k story)."""
+    H, N = _heads(cfg)
+    L, D = cfg.num_layers, cfg.d_model
+    return {
+        "state": cm.Spec((L, batch, H, N, N), ("layers", "batch", "heads", None, None),
+                         "zeros", dtype="float32"),
+        "x_att": cm.Spec((L, batch, D), ("layers", "batch", "embed"), "zeros",
+                         dtype=cfg.dtype),
+        "x_ffn": cm.Spec((L, batch, D), ("layers", "batch", "embed"), "zeros",
+                         dtype=cfg.dtype),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens (B, 1) -> logits (B, 1, V); state advances one step."""
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    x = _layernorm(cfg, x, params["ln_in"]["gamma"], params["ln_in"]["beta"])
+
+    def layer(carry, operands):
+        xc = carry
+        p, st, xa, xf = operands
+        h = _layernorm(cfg, xc, p["ln1"]["gamma"], p["ln1"]["beta"])
+        att, new_xa, new_st = _time_mix(cfg, p["att"], h, xa, st)
+        xc = xc + att
+        h2 = _layernorm(cfg, xc, p["ln2"]["gamma"], p["ln2"]["beta"])
+        ffn, new_xf = _channel_mix(cfg, p["ffn"], h2, xf)
+        return xc + ffn, (new_st, new_xa, new_xf)
+
+    x1, (st, xa, xf) = jax.lax.scan(
+        layer, x, (params["blocks"], cache["state"], cache["x_att"],
+                   cache["x_ffn"]))
+    x1 = _layernorm(cfg, x1, params["ln_f"]["gamma"], params["ln_f"]["beta"])
+    logits = cm.logits_out(cfg, x1, params["lm_head"])
+    return logits, {"state": st, "x_att": xa, "x_ffn": xf}

@@ -1,0 +1,131 @@
+"""Selective SSM (Mamba-style) head — used by the Hymba hybrid.
+
+Mamba-1 structure: depthwise causal conv, data-dependent (dt, B, C)
+selectivity, diagonal state transition exp(dt*A), gated output.  State is
+(B, d_inner, N) with N = cfg.ssm.state_dim (16 for hymba).
+
+NPE mapping: softplus (dt), silu (gate/conv activation) and exp(dt*A)
+(decay, always in (0,1]) all route through the unified PWL engine.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import nvu
+from repro.models import common as cm
+
+CHUNK = 64
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm.expand * cfg.d_model
+    dt_rank = cfg.ssm.dt_rank or max(1, cfg.d_model // 16)
+    return d_inner, cfg.ssm.state_dim, dt_rank
+
+
+def specs(cfg: ModelConfig, L: int) -> Dict[str, Any]:
+    D = cfg.d_model
+    di, N, dtr = dims(cfg)
+    K = cfg.ssm.conv_dim
+    return {
+        "in_proj": cm.Spec((L, D, 2 * di), ("layers", "embed_fsdp", "mlp")),
+        "conv_w": cm.Spec((L, K, di), ("layers", None, "mlp"), scale=0.5),
+        "conv_b": cm.Spec((L, di), ("layers", "mlp"), "zeros"),
+        "x_proj": cm.Spec((L, di, dtr + 2 * N), ("layers", "mlp", None)),
+        "dt_proj_w": cm.Spec((L, dtr, di), ("layers", None, "mlp"), scale=0.1),
+        "dt_proj_b": cm.Spec((L, di), ("layers", "mlp"), "zeros"),
+        "a_log": cm.Spec((L, di, N), ("layers", "mlp", None), "ones"),
+        "d_skip": cm.Spec((L, di), ("layers", "mlp"), "ones"),
+        "out_proj": cm.Spec((L, di, D), ("layers", "mlp", "embed_out")),
+    }
+
+
+def _softplus(cfg, x):
+    return (nvu.nvu_softplus(x, cfg.npe_pwl_segments) if cfg.npe_pwl
+            else jax.nn.softplus(x))
+
+
+def _silu(cfg, x):
+    return (nvu.nvu_silu(x, cfg.npe_pwl_segments) if cfg.npe_pwl
+            else jax.nn.silu(x))
+
+
+def _exp01(cfg, x):
+    """exp for x <= 0 (decay factors)."""
+    if cfg.npe_pwl:
+        return nvu.nvu_exp(x, cfg.npe_pwl_segments)
+    return jnp.exp(x)
+
+
+def _conv_causal(x, w, b, x_prev):
+    """Depthwise causal conv. x: (B,T,C), w: (K,C), x_prev: (B,K-1,C)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([x_prev.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out + b, xp[:, -(k - 1):]
+
+
+def apply_layer(cfg: ModelConfig, p, x, state, conv_state):
+    """x: (B, T, D); state: (B, di, N); conv_state: (B, K-1, di).
+    Returns (out (B,T,D), new_state, new_conv_state)."""
+    b, t, D = x.shape
+    di, N, dtr = dims(cfg)
+    xz = cm.dense(cfg, x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, new_conv = _conv_causal(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = _silu(cfg, xs)
+
+    proj = cm.dense(cfg, xs, p["x_proj"])
+    dt_in, Bm, Cm = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = _softplus(cfg, dt_in @ p["dt_proj_w"].astype(x.dtype)
+                   + p["dt_proj_b"])                        # (B,T,di)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))            # (di,N), negative
+    dtx = (dt * xs).astype(jnp.float32)                     # (B,T,di)
+
+    # Perf-iteration #1 (EXPERIMENTS.md §Perf): the (B, T, di, N) decay and
+    # input tensors are NEVER materialized for the whole sequence — they
+    # are formed per step inside the scan, so peak memory is O(B*di*N)
+    # instead of O(B*T*di*N)  (512x smaller at T=32768, N=16).
+    def step(h, inp):
+        dt_t, dtx_t, b_t, c_t = inp        # (B,di),(B,di),(B,N),(B,N)
+        da = _exp01(cfg, dt_t[..., None] * A)               # (B,di,N)
+        dbx = dtx_t[..., None] * b_t[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs_t = (jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(dtx, 1, 0),
+            jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    if t > CHUNK and t % CHUNK == 0:
+        def chunk_scan(h, cxs):
+            return jax.lax.scan(step, h, cxs)
+        chunked = jax.tree.map(
+            lambda a: a.reshape(t // CHUNK, CHUNK, *a.shape[1:]), xs_t)
+        state, y = jax.lax.scan(jax.checkpoint(chunk_scan), state, chunked)
+        y = y.reshape(t, b, di)
+    else:
+        state, y = jax.lax.scan(step, state, xs_t)
+    y = jnp.moveaxis(y, 0, 1).astype(x.dtype)               # (B,T,di)
+    y = y + xs * p["d_skip"]
+    y = y * _silu(cfg, z)
+    out = cm.dense(cfg, y, p["out_proj"])
+    out = cm.constrain_embed(out)   # bf16 all-reduce (perf-iteration #4)
+    return out, state, new_conv
+
+
+def state_specs(cfg: ModelConfig, L: int, batch: int) -> Dict[str, Any]:
+    di, N, _ = dims(cfg)
+    K = cfg.ssm.conv_dim
+    return {
+        "ssm": cm.Spec((L, batch, di, N), ("layers", "batch", "mlp", None),
+                       "zeros", dtype="float32"),
+        "conv": cm.Spec((L, batch, K - 1, di), ("layers", "batch", None, "mlp"),
+                        "zeros", dtype=cfg.dtype),
+    }

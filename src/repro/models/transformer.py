@@ -1,0 +1,471 @@
+"""Decoder-only transformer family (dense + MoE-hosted).
+
+One implementation covers:
+  * standard pre-norm GQA blocks (glm4, qwen2-vl text backbone)
+  * parallel attention+MLP blocks (command-r-plus)
+  * sliding-window layers (starcoder2) and local:global patterns (gemma3)
+  * MoE blocks every `interleave` layers (granite, llama4) via models.moe
+  * NPE mode: quantized MMU projections + unified PWL nonlinearities
+
+Layers are stacked and executed with lax.scan (one block in the HLO
+regardless of depth — essential for 64-layer dry-runs), with per-layer
+window sizes / MoE flags passed as scanned operands.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.sharding.rules import constrain
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, L: int) -> Dict[str, Any]:
+    D, QD, KD = cfg.d_model, cfg.q_dim(), cfg.kv_dim()
+    s: Dict[str, Any] = {
+        "wq": cm.Spec((L, D, QD), ("layers", "embed_fsdp", "heads")),
+        "wk": cm.Spec((L, D, KD), ("layers", "embed_fsdp", "kv_heads")),
+        "wv": cm.Spec((L, D, KD), ("layers", "embed_fsdp", "kv_heads")),
+        "wo": cm.Spec((L, QD, D), ("layers", "heads", "embed_out")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = cm.Spec((L, QD), ("layers", "heads"), "zeros")
+        s["bk"] = cm.Spec((L, KD), ("layers", "kv_heads"), "zeros")
+        s["bv"] = cm.Spec((L, KD), ("layers", "kv_heads"), "zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = cm.Spec((L, cfg.head_dim), ("layers", None), "ones")
+        s["k_norm"] = cm.Spec((L, cfg.head_dim), ("layers", None), "ones")
+    return s
+
+
+def mlp_specs(cfg: ModelConfig, L: int, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_type == "gated":
+        return {
+            "wg": cm.Spec((L, D, F), ("layers", "embed_fsdp", "mlp")),
+            "wu": cm.Spec((L, D, F), ("layers", "embed_fsdp", "mlp")),
+            "wd": cm.Spec((L, F, D), ("layers", "mlp", "embed_out")),
+        }
+    s = {
+        "w1": cm.Spec((L, D, F), ("layers", "embed_fsdp", "mlp")),
+        "w2": cm.Spec((L, F, D), ("layers", "mlp", "embed_out")),
+    }
+    if cfg.mlp_bias:
+        s["b1"] = cm.Spec((L, F), ("layers", "mlp"), "zeros")
+        s["b2"] = cm.Spec((L, D), ("layers", None), "zeros")
+    return s
+
+
+def specs(cfg: ModelConfig) -> Dict[str, Any]:
+    L, D, V = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    moe_every = cfg.moe.interleave if cfg.moe else 0
+    n_moe = L // moe_every if moe_every else 0
+    n_dense = L - n_moe
+    out: Dict[str, Any] = {
+        "embed": cm.Spec((V, D), ("vocab", "embed_fsdp"), "embed", scale=0.02),
+        "ln_f": cm.norm_spec(cfg, D),
+    }
+    if cfg.rope == "learned":
+        out["pos_embed"] = cm.Spec((cfg.max_position, D), (None, "embed_fsdp"),
+                                   "embed", scale=0.02)
+    if not cfg.tie_embeddings:
+        out["lm_head"] = cm.Spec((D, V), ("embed_fsdp", "vocab"))
+    blocks: Dict[str, Any] = {"ln1": _stack_norm(cfg, D, L)}
+    blocks.update(attn_specs(cfg, L))
+    if not cfg.parallel_block:
+        blocks["ln2"] = _stack_norm(cfg, D, L)
+    if n_dense > 0 or not cfg.moe:
+        blocks["mlp"] = mlp_specs(cfg, max(n_dense, 1) if cfg.moe else L)
+    if cfg.moe:
+        blocks["moe"] = moe_mod.specs(cfg, n_moe)
+    out["blocks"] = blocks
+    return out
+
+
+def _stack_norm(cfg: ModelConfig, dim: int, L: int) -> Dict[str, cm.Spec]:
+    s = {"gamma": cm.Spec((L, dim), ("layers", "norm"), "ones")}
+    if cfg.norm == "layernorm" and cfg.norm_bias:
+        s["beta"] = cm.Spec((L, dim), ("layers", "norm"), "zeros")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Per-layer static metadata (windows, moe flags)
+# ---------------------------------------------------------------------------
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention window (0 = full causal attention)."""
+    L = cfg.num_layers
+    if cfg.attention == "sliding":
+        return np.full((L,), cfg.window, np.int32)
+    if cfg.attention == "local_global":
+        w = np.full((L,), cfg.window, np.int32)
+        w[cfg.global_every - 1::cfg.global_every] = 0   # every Nth is global
+        return w
+    return np.zeros((L,), np.int32)
+
+
+def layer_is_moe(cfg: ModelConfig) -> np.ndarray:
+    L = cfg.num_layers
+    if not cfg.moe:
+        return np.zeros((L,), bool)
+    flags = np.zeros((L,), bool)
+    flags[cfg.moe.interleave - 1::cfg.moe.interleave] = True
+    return flags
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn(cfg: ModelConfig, p, x, positions, *, window: int = 0,
+          cache: Optional[Tuple] = None, pos=None, kv_valid=None,
+          causal_over_cache: bool = True):
+    """Attention sublayer.  With `cache=(k_cache, v_cache)` runs in decode
+    mode: new k/v inserted at `pos` (ring position for window layers),
+    attention over the whole cache with `kv_valid` slot masking."""
+    b, s, D = x.shape
+    q = cm.dense(cfg, x, p["wq"], p.get("bq"))
+    k = cm.dense(cfg, x, p["wk"], p.get("bk"))
+    v = cm.dense(cfg, x, p["wv"], p.get("bv"))
+    q = constrain(q, ("batch", "seq", "heads"))
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = cm.norm(cfg, q, p["q_norm"])
+        k = cm.norm(cfg, k, p["k_norm"])
+    if cfg.rope == "standard":
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = cm.apply_mrope(q, positions, cfg.rope_theta)
+        k = cm.apply_mrope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        ck, cv = cm.update_cache_layer(cache[0], cache[1], k, v, pos)
+        ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None))
+        cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None))
+        new_cache = (ck, cv)
+        out = cm.attention_scores(cfg, q, ck, cv, window=0,
+                                  causal=causal_over_cache, q_offset=pos,
+                                  kv_valid=kv_valid)
+    else:
+        out = cm.attention_auto(cfg, q, k, v, window=window,
+                                causal=cfg.causal)
+    out = out.reshape(b, s, cfg.q_dim())
+    out = constrain(out, ("batch", "seq", "heads"))
+    # constrain the bf16 product BEFORE any downstream f32 cast so the
+    # row-parallel all-reduce moves bf16, not f32 (perf-iteration #4)
+    return constrain(cm.dense(cfg, out, p["wo"]),
+                     ("batch", "seq", "embed")), new_cache
+
+
+def _mlp(cfg: ModelConfig, p, x):
+    if cfg.mlp_type == "gated":
+        g = cm.activation_fn(cfg, cm.dense(cfg, x, p["wg"]))
+        u = cm.dense(cfg, x, p["wu"])
+        h = constrain(g * u, ("batch", "seq", "mlp"))
+        return constrain(cm.dense(cfg, h, p["wd"]), ("batch", "seq", "embed"))
+    h = cm.activation_fn(cfg, cm.dense(cfg, x, p["w1"], p.get("b1")))
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return constrain(cm.dense(cfg, h, p["w2"], p.get("b2")),
+                     ("batch", "seq", "embed"))
+
+
+def block(cfg: ModelConfig, p, x, positions, window, is_moe=False,
+          moe_params=None, cache=None, pos=None):
+    h = cm.apply_norm(cfg, p["ln1"], x)
+    h = constrain(h, ("batch", "seq", "embed_act"))   # perf-iteration #7
+    attn_out, new_cache = _attn(cfg, p, h, positions, window=window,
+                                cache=cache, pos=pos)
+    if cfg.parallel_block:
+        # command-r: attention and MLP read the same normed input
+        mlp_out = _mlp(cfg, p["mlp"], h)
+        x = x + attn_out + mlp_out
+        return constrain(x, ("batch", "seq", "embed")), new_cache
+    x = x + attn_out
+    h2 = cm.apply_norm(cfg, p["ln2"], x)
+    h2 = constrain(h2, ("batch", "seq", "embed_act"))
+    if is_moe:
+        x = x + moe_mod.apply(cfg, moe_params, h2)
+    else:
+        x = x + _mlp(cfg, p["mlp"], h2)
+    return constrain(x, ("batch", "seq", "embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _split_block_params(cfg: ModelConfig, blocks: Dict[str, Any]):
+    """Split stacked params into (dense-part, moe-part) scan operands."""
+    moe_p = blocks.get("moe")
+    dense_p = {k: v for k, v in blocks.items() if k != "moe"}
+    return dense_p, moe_p
+
+
+def apply(cfg: ModelConfig, params, tokens, positions=None, remat: bool = True,
+          extra_embeds=None):
+    """tokens: (B, S) int32 -> logits (B, S, V).
+
+    extra_embeds: optional (B, P, D) continuous embeddings (VLM stub)
+    prepended to the token embeddings; the combined length is the model
+    sequence.
+    """
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    if cfg.rope == "learned":
+        x = x + params["pos_embed"][:s][None].astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    # Windows are STATIC per-layer config (python ints), so the banded
+    # chunked-attention path can slice the kv band (perf-iteration #1).
+    # Uniform-window stacks scan directly; mixed local:global stacks
+    # (gemma3) scan over super-blocks of one pattern period + a tail.
+    windows = layer_windows(cfg)
+    moe_flags = layer_is_moe(cfg)
+    dense_p, moe_p = _split_block_params(cfg, params["blocks"])
+    uniform_win = int(windows[0]) if len(set(windows.tolist())) == 1 else None
+
+    if cfg.moe and moe_flags.any() and not moe_flags.all():
+        # interleaved (llama4): scan over (dense, moe) super-blocks
+        step = cfg.moe.interleave
+        n_super = cfg.num_layers // step
+        assert uniform_win is not None, "interleaved MoE assumes uniform windows"
+
+        # regroup dense params: (n_dense_total, ...) -> (n_super, step-1...)
+        # dense blocks hold attn+norm for ALL layers; mlp only for dense ones
+        dp_all = {k: v for k, v in dense_p.items() if k != "mlp"}
+        dp_grouped = jax.tree.map(
+            lambda a: a.reshape(n_super, step, *a.shape[1:]), dp_all)
+        mlp_grouped = jax.tree.map(
+            lambda a: a.reshape(n_super, step - 1, *a.shape[1:]) if step > 1
+            else a.reshape(n_super, 0, *a.shape[1:]), dense_p["mlp"])
+
+        def merged_block(xc, operands):
+            dpg, mlpg, mpg = operands
+            for i in range(step):
+                di = jax.tree.map(lambda a, i=i: a[i], dpg)
+                if i < step - 1:
+                    di = dict(di, mlp=jax.tree.map(lambda a, i=i: a[i], mlpg))
+                    xc, _ = block(cfg, di, xc, positions, uniform_win)
+                else:
+                    xc, _ = block(cfg, di, xc, positions, uniform_win,
+                                  is_moe=True, moe_params=mpg)
+            return xc, None
+
+        fn = jax.checkpoint(merged_block) if remat else merged_block
+        x, _ = jax.lax.scan(fn, x, (dp_grouped, mlp_grouped, moe_p))
+    elif cfg.moe:
+        # every layer MoE (granite)
+        def moe_block(xc, operands):
+            dp, mp = operands
+            xc, _ = block(cfg, dp, xc, positions, uniform_win or 0,
+                          is_moe=True, moe_params=mp)
+            return xc, None
+
+        dp_nomlp = {k: v for k, v in dense_p.items() if k != "mlp"}
+        fn = jax.checkpoint(moe_block) if remat else moe_block
+        x, _ = jax.lax.scan(fn, x, (dp_nomlp, moe_p))
+    elif uniform_win is not None:
+        def dense_block(xc, dp):
+            xc, _ = block(cfg, dp, xc, positions, uniform_win)
+            return xc, None
+
+        fn = jax.checkpoint(dense_block) if remat else dense_block
+        x, _ = jax.lax.scan(fn, x, dense_p)
+    else:
+        # mixed local:global (gemma3): one pattern period per scan step
+        p = cfg.global_every
+        n_super = cfg.num_layers // p
+        tail = cfg.num_layers - n_super * p
+        pattern = tuple(int(w) for w in windows[:p])
+        head_p = jax.tree.map(
+            lambda a: a[: n_super * p].reshape(n_super, p, *a.shape[1:]),
+            dense_p)
+        tail_p = jax.tree.map(lambda a: a[n_super * p:], dense_p)
+
+        head_uniform = len(set(pattern[:-1])) == 1
+
+        def lyr_fn(win: int):
+            def one(xc2, di):
+                xc2, _ = block(cfg, di, xc2, positions, win)
+                return xc2, None
+            # remat at LAYER granularity (a checkpointed p-layer period
+            # would hold p layers of residuals during backward)
+            return jax.checkpoint(one) if remat else one
+
+        def period_block(xc, dpg):
+            if head_uniform and p > 2:
+                # [w]*(p-1) + [g]: inner scan keeps the HLO at 2 layer
+                # bodies instead of p (compile time, remat working set)
+                head = jax.tree.map(lambda a: a[: p - 1], dpg)
+                xc, _ = jax.lax.scan(lyr_fn(pattern[0]), xc, head)
+                dlast = jax.tree.map(lambda a: a[p - 1], dpg)
+                xc, _ = lyr_fn(pattern[p - 1])(xc, dlast)
+            else:
+                for i in range(p):
+                    di = jax.tree.map(lambda a, i=i: a[i], dpg)
+                    xc, _ = lyr_fn(pattern[i])(xc, di)
+            return xc, None
+
+        x, _ = jax.lax.scan(period_block, x, head_p)
+        for i in range(tail):
+            di = jax.tree.map(lambda a, i=i: a[i], tail_p)
+            x, _ = lyr_fn(int(windows[n_super * p + i]))(x, di)
+
+    x = cm.apply_norm(cfg, params["ln_f"], x)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return cm.logits_out(cfg, x, table)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step): one token, KV cache over layers
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    """KV cache sized by per-layer window: sliding-window layers only keep
+    `window` positions (gemma3's long-context story); full layers keep
+    max_seq.  Uniform shapes within each group -> two stacked caches."""
+    windows = layer_windows(cfg)
+    full_layers = int((windows == 0).sum())
+    win_layers = int((windows > 0).sum())
+    out: Dict[str, Any] = {}
+    if full_layers:
+        out["full"] = cm.kv_cache_specs(cfg, full_layers, batch, max_seq)
+    if win_layers:
+        wlen = min(int(windows[windows > 0][0]), max_seq)
+        out["win"] = cm.kv_cache_specs(cfg, win_layers, batch, wlen)
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens: (B, 1); pos: scalar int32 (current cache length).
+    Returns (logits (B, 1, V), new_cache).
+
+    Full-attention layers append at `pos` and mask causally; window layers
+    use a *ring* cache of length `window` (insert at pos % window) — once
+    pos >= window every slot holds a position in (pos-window, pos], so
+    attending to all valid slots is exact.  Per-layer parameters that do
+    not exist for every layer (dense MLPs in MoE models, MoE stacks in
+    interleaved models) are closed over and gathered by per-layer index,
+    so ONE scan covers dense, granite-style (all-MoE) and llama4-style
+    (interleaved) architectures.
+    """
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    b, s, _ = x.shape
+    positions = jnp.full((b, s), pos, jnp.int32)
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    if cfg.rope == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, s, 0)[None].astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    windows = np.asarray(layer_windows(cfg))
+    moe_flags = layer_is_moe(cfg)
+    dense_p, moe_p = _split_block_params(cfg, params["blocks"])
+    attn_p = {k: v for k, v in dense_p.items() if k != "mlp"}
+    mlp_stack = dense_p.get("mlp")            # (n_dense, ...) or None
+    full_idx = np.maximum(np.cumsum(windows == 0) - 1, 0)
+    win_idx = np.maximum(np.cumsum(windows > 0) - 1, 0)
+    dense_idx = np.maximum(np.cumsum(~moe_flags) - 1, 0)
+    moe_idx = np.maximum(np.cumsum(moe_flags) - 1, 0)
+    cache_full = cache.get("full")
+    cache_win = cache.get("win")
+
+    def ffn(h2, is_moe_l, mi, di):
+        if moe_p is None:
+            return _mlp(cfg, jax.tree.map(lambda a: a[di], mlp_stack), h2)
+        if mlp_stack is None:
+            return moe_mod.apply(cfg, jax.tree.map(lambda a: a[mi], moe_p), h2)
+        return jax.lax.cond(
+            is_moe_l,
+            lambda hh: moe_mod.apply(
+                cfg, jax.tree.map(lambda a: a[mi], moe_p), hh),
+            lambda hh: _mlp(cfg, jax.tree.map(lambda a: a[di], mlp_stack), hh),
+            h2)
+
+    def attn_branch(ap, h, cache_kv, insert_pos, causal, kv_valid):
+        return _attn(cfg, ap, h, positions, cache=cache_kv, pos=insert_pos,
+                     causal_over_cache=causal, kv_valid=kv_valid)
+
+    def layer_body(carry, operands):
+        xc, cf, cw = carry
+        ap = operands["attn"]
+        win = operands["window"]
+        h = cm.apply_norm(cfg, ap["ln1"], xc)
+
+        def do_full(_):
+            ck, cv = cf["k"][operands["fi"]], cf["v"][operands["fi"]]
+            a, (nk, nv) = attn_branch(ap, h, (ck, cv), pos, True, None)
+            nf = {"k": cf["k"].at[operands["fi"]].set(nk),
+                  "v": cf["v"].at[operands["fi"]].set(nv)}
+            return a, nf, cw
+
+        def do_win(_):
+            wlen = cw["k"].shape[2]
+            ck, cv = cw["k"][operands["wi"]], cw["v"][operands["wi"]]
+            valid = (jnp.arange(wlen) <= pos)
+            valid = jnp.logical_or(valid, pos >= wlen)
+            a, (nk, nv) = attn_branch(ap, h, (ck, cv), pos % wlen, False,
+                                      valid)
+            nw = {"k": cw["k"].at[operands["wi"]].set(nk),
+                  "v": cw["v"].at[operands["wi"]].set(nv)}
+            return a, cf, nw
+
+        if cw is None:
+            a, cf2, cw2 = do_full(None)
+        elif cf is None:
+            a, cf2, cw2 = do_win(None)
+        else:
+            a, cf2, cw2 = jax.lax.cond(win > 0, do_win, do_full, None)
+
+        if cfg.parallel_block:
+            out = xc + a + _mlp(
+                cfg, jax.tree.map(lambda t: t[operands["di"]], mlp_stack), h)
+        else:
+            x1 = xc + a
+            h2 = cm.apply_norm(cfg, ap["ln2"], x1)
+            out = x1 + ffn(h2, operands["is_moe"], operands["mi"],
+                           operands["di"])
+        return (constrain(out, ("batch", "seq", "embed")), cf2, cw2), None
+
+    operands = {
+        "attn": attn_p,
+        "window": jnp.asarray(windows),
+        "is_moe": jnp.asarray(moe_flags),
+        "fi": jnp.asarray(full_idx, jnp.int32),
+        "wi": jnp.asarray(win_idx, jnp.int32),
+        "di": jnp.asarray(dense_idx, jnp.int32),
+        "mi": jnp.asarray(moe_idx, jnp.int32),
+    }
+    (x, cache_full, cache_win), _ = jax.lax.scan(
+        layer_body, (x, cache_full, cache_win), operands)
+
+    x = cm.apply_norm(cfg, params["ln_f"], x)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = cm.logits_out(cfg, x, table)
+    new_cache = {}
+    if cache_full is not None:
+        new_cache["full"] = cache_full
+    if cache_win is not None:
+        new_cache["win"] = cache_win
+    return logits, new_cache

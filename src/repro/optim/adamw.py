@@ -1,0 +1,81 @@
+"""AdamW + schedules + global-norm clipping — pure JAX, sharding-aware.
+
+ZeRO-1: optimizer moments are sharded with the FSDP rule set regardless of
+the parameter profile, so m/v live data-parallel-sharded even when params
+are replicated across the data axis (the classic optimizer-state sharding
+trick).  Moments can be kept in bf16 (`moment_dtype`) for XXL models.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # () int32
+    m: Any                     # pytree like params
+    v: Any
+
+
+def schedule(cfg: OptimizerConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    if cfg.schedule == "linear":
+        return cfg.lr * warm * (1 - t)
+    return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))   # cosine
+
+
+def init(cfg: OptimizerConfig, params) -> OptState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(zeros, params),
+                    jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: OptimizerConfig, grads, state: OptState,
+           params) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    mdt = jnp.dtype(cfg.moment_dtype)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m1 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v1 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m1 / c1
+        vhat = v1 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+            m1.astype(mdt), v1.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, OptState(step, new_m, new_v), metrics

@@ -1,0 +1,42 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+The classic trick for scaling data parallelism past network limits:
+quantize gradients to int8 before the cross-replica reduction and carry
+the quantization residual into the next step (error feedback keeps the
+compressed SGD unbiased in the long run).  With GSPMD the all-reduce is
+implicit — compressing the gradient VALUES before the optimizer is the
+sharding-agnostic formulation; the collective then moves int8 instead of
+f32 when XLA keeps the reduction in the quantized domain.
+
+This doubles as the NPE-native distributed story: the same symmetric int8
+quantization the MMU uses for activations (core.quant) applied to the
+training communication path.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(grads, error) -> Tuple[Any, Any]:
+    """Returns (decompressed grads, new error feedback)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        amax = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12)
+        scale = amax / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -128, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

@@ -1,0 +1,40 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+When a pod (or host) is lost, the job restarts on the surviving topology:
+build the new mesh, recompute shardings from the SAME logical-axis rules
+(rules are topology-independent — that is the point of logical axes), and
+device_put every leaf with its new sharding.  Growth works identically.
+
+In this container the "different topologies" are different
+--xla_force_host_platform_device_count layouts; on real TPU pods this is
+driven by the cluster scheduler.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.config import MeshConfig, RunConfig
+from repro.launch.mesh import make_mesh
+from repro.models import common as cm
+from repro.models import registry
+from repro.sharding import rules as R
+
+
+def reshard_restore(run: RunConfig, new_mesh_cfg: MeshConfig,
+                    ckpt: Checkpointer,
+                    step: Optional[int] = None) -> Tuple[Any, Any, int]:
+    """Restore (params, mesh, step) onto `new_mesh_cfg`."""
+    mesh = make_mesh(new_mesh_cfg)
+    rules = R.rules_for(new_mesh_cfg.profile)
+    specs = registry.specs(run.model)
+    abstract = cm.abstract_params(specs)
+    axes = cm.param_axes(specs)
+    shardings = jax.tree.map(
+        lambda a, ax: R.sharding_for(ax, rules, mesh, a.shape),
+        abstract, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    params, at_step = ckpt.restore(abstract, step=step, shardings=shardings)
+    return params, mesh, at_step

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: reduced config, one forward + decode step
+on CPU, asserting shapes and finiteness.  Full configs are exercised only
+via the dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import registry
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 64
+
+
+def _inputs(cfg):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["extra_embeds"] = jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.02
+    elif cfg.family == "vlm":
+        kw["extra_embeds"] = jax.random.normal(
+            KEY, (B, cfg.num_patches, cfg.d_model), jnp.float32) * 0.02
+    return tokens, kw
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    params = registry.init_params(cfg, KEY)
+    tokens, kw = _inputs(cfg)
+    logits = registry.apply(cfg, params, tokens, remat=False, **kw)
+    expect_s = S
+    if cfg.family == "vlm":
+        expect_s = S + cfg.num_patches
+    assert logits.shape == (B, expect_s, cfg.vocab_size), logits.shape
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if a != "bert_base"])
+def test_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    assert registry.has_decode(cfg)
+    params = registry.init_params(cfg, KEY)
+    from repro.models import common as cm
+    cache = cm.init_params(registry.cache_specs(cfg, B, 32), KEY)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        frames = jax.random.normal(KEY, (B, cfg.encoder_seq, cfg.d_model)) * 0.02
+        cache["cross"] = encdec.init_cross_cache(cfg, params, frames)
+    tok = jax.random.randint(KEY, (B, 1), 0, cfg.vocab_size)
+    logits, new_cache = registry.decode_step(cfg, params, cache, tok,
+                                             jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    logits2, _ = registry.decode_step(cfg, params, new_cache, tok,
+                                      jnp.int32(1))
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["bert_base", "starcoder2_3b", "rwkv6_3b",
+                                  "granite_moe_1b_a400m"])
+def test_npe_mode_forward(arch):
+    """The paper's technique applies to every family (DESIGN.md §4)."""
+    cfg = get_config(arch, smoke=True).with_npe(quant_bits=8, segments=16)
+    params = registry.init_params(cfg, KEY)
+    tokens, kw = _inputs(cfg)
+    logits = registry.apply(cfg, params, tokens, remat=False, **kw)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_decode_matches_forward_dense():
+    """Autoregressive decode must reproduce the teacher-forced forward."""
+    cfg = get_config("glm4_9b", smoke=True)
+    params = registry.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    full = registry.apply(cfg, params, tokens, remat=False)
+    from repro.models import common as cm
+    cache = cm.init_params(registry.cache_specs(cfg, 1, 8), KEY)
+    outs = []
+    for t in range(8):
+        lg, cache = registry.decode_step(cfg, params, cache,
+                                         tokens[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_decode_matches_forward_rwkv():
+    cfg = get_config("rwkv6_3b", smoke=True)
+    params = registry.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (1, 6), 0, cfg.vocab_size)
+    full = registry.apply(cfg, params, tokens, remat=False)
+    from repro.models import common as cm
+    cache = cm.init_params(registry.cache_specs(cfg, 1, 6), KEY)
+    outs = []
+    for t in range(6):
+        lg, cache = registry.decode_step(cfg, params, cache,
+                                         tokens[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_sliding_window_cache_ring():
+    """Ring cache beyond the window must match the full forward."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("starcoder2_3b", smoke=True),
+                              window=8)
+    params = registry.init_params(cfg, KEY)
+    T = 20
+    tokens = jax.random.randint(KEY, (1, T), 0, cfg.vocab_size)
+    full = registry.apply(cfg, params, tokens, remat=False)
+    from repro.models import common as cm
+    cache = cm.init_params(registry.cache_specs(cfg, 1, T), KEY)
+    outs = []
+    for t in range(T):
+        lg, cache = registry.decode_step(cfg, params, cache,
+                                         tokens[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -1,0 +1,106 @@
+"""Cycle-model validation against the paper's published numbers.
+
+These tests ARE the paper-faithfulness gate: Table 2 exactly, Table 4 within
+10%, Fig 5 overhead points, and Table 7 inferences/sec within 1%.
+"""
+import math
+
+import pytest
+
+from repro.core import cycles as cy
+from repro.core.overlay import NPEHardware, PAPER_TABLE3_CYCLES, nvu_cycles
+
+
+def test_table2_exact():
+    hw = NPEHardware(vrwidth=1024)
+    rows = cy.throughput_requirements(hw, cy.BertShape(seq=512), bits=16)
+    assert rows["softmax"]["budget"] == 8192
+    assert rows["softmax"]["throughput"] == 32
+    assert round(rows["softmax"]["pct"] * 100, 1) == 5.0
+    assert rows["layernorm_a"]["budget"] == 147456
+    assert round(rows["layernorm_a"]["throughput"], 1) == 2.7
+    assert round(rows["layernorm_a"]["pct"] * 100, 1) == 7.5
+    assert rows["gelu"]["budget"] == 589824
+    assert round(rows["gelu"]["pct"] * 100) == 30
+    assert round(rows["layernorm_b"]["throughput"], 1) == 0.7
+    assert round(rows["layernorm_b"]["pct"] * 100) == 30
+
+
+def test_table4_within_10pct():
+    hw = NPEHardware(vrwidth=1024)
+    got = cy.optimized_requirements(hw)
+    paper = {64: 0.92, 128: 1.79, 256: 3.39, 512: 6.29}
+    for s, want in paper.items():
+        assert abs(got[s]["softmax"] - want) / want < 0.10, (s, got[s]["softmax"])
+        assert abs(got[s]["layernorm_a"] - 2.6) < 0.15
+        assert abs(got[s]["layernorm_b"] - 0.6) < 0.15
+        assert abs(got[s]["gelu"] - 2.6) < 0.15
+
+
+@pytest.mark.parametrize("vr,s,lo,hi", [
+    (1024, 64, 0.0, 1.5),    # "less than 1%"
+    (512, 64, 7.0, 12.0),    # "around 10%"
+    (256, 64, 25.0, 33.0),   # "about 30%"
+    (256, 256, 48.0, 56.0),  # "53%"
+    (256, 512, 92.0, 99.0),  # "97%"
+])
+def test_fig5_overhead_points(vr, s, lo, hi):
+    base = cy.inference_cycles(NPEHardware(vrwidth=2048), cy.BertShape(seq=s), 16)
+    c = cy.inference_cycles(NPEHardware(vrwidth=vr), cy.BertShape(seq=s), 16)
+    pct = 100 * (c["total_cycles"] - base["total_cycles"]) / base["total_cycles"]
+    assert lo <= pct <= hi, pct
+
+
+def test_table7_npe_rows_within_1pct():
+    """NPE 16-bit: 73.69 inf/s; NPE 8-bit: 135.14 inf/s (seq 64, NVU-1024)."""
+    hw = NPEHardware(vrwidth=1024)
+    t16 = cy.throughput_inf_s(hw, cy.BertShape(seq=64), 16)
+    t8 = cy.throughput_inf_s(hw, cy.BertShape(seq=64), 8)
+    assert abs(t16 - 73.69) / 73.69 < 0.01, t16
+    assert abs(t8 - 135.14) / 135.14 < 0.01, t8
+
+
+def test_conversational_ai_targets():
+    """Paper §8.2: sub-10ms at seq 64 with 8-bit MMU even for NVU-512;
+    10-15 ms target met by NVU-512/1024 for both MMU widths."""
+    for vr in (512, 1024):
+        assert cy.inference_time_ms(NPEHardware(vrwidth=vr), cy.BertShape(seq=64), 8) < 10.0
+        assert cy.inference_time_ms(NPEHardware(vrwidth=vr), cy.BertShape(seq=64), 16) < 15.0
+
+
+def test_gelu_never_adds_overhead():
+    """Paper Fig 5: 'in all cases GELU does not add latency overhead'."""
+    for vr in (256, 512, 1024, 2048):
+        for s in (64, 128, 256, 512):
+            c = cy.inference_cycles(NPEHardware(vrwidth=vr), cy.BertShape(seq=s), 16)
+            assert c["stalls"]["gelu"] == 0.0
+
+
+def test_dag_scheduler_overlap_beats_serial():
+    """Softmax/matmul overlap (paper §7.2.1) helps in the DAG model too.
+    With NVU-1024 the NVU is not the bottleneck, so overlap strictly wins;
+    with NVU-256 at seq 512 the NVU saturates and overlap can only tie."""
+    hw = NPEHardware(vrwidth=1024)
+    sh = cy.BertShape(seq=128)
+    with_ov = cy.schedule(cy.build_encoder_program(hw, sh, 16, overlap=True))
+    without = cy.schedule(cy.build_encoder_program(hw, sh, 16, overlap=False))
+    assert with_ov["total_cycles"] < without["total_cycles"]
+    hw256 = NPEHardware(vrwidth=256)
+    sh512 = cy.BertShape(seq=512)
+    w = cy.schedule(cy.build_encoder_program(hw256, sh512, 16, overlap=True))
+    wo = cy.schedule(cy.build_encoder_program(hw256, sh512, 16, overlap=False))
+    assert w["total_cycles"] <= wo["total_cycles"]
+
+
+def test_model_nvu_source_sane():
+    """Our microprogram model must stay within 2x of the measured Table 3
+    and preserve the ordering across VRWIDTHs."""
+    for routine in ("softmax", "layernorm", "gelu"):
+        prev = None
+        for vr in (256, 512, 1024, 2048):
+            model = nvu_cycles(NPEHardware(vrwidth=vr), routine, 512, "model")
+            paper = PAPER_TABLE3_CYCLES[vr][routine]
+            assert 0.2 <= model / paper <= 2.0, (routine, vr, model, paper)
+            if prev is not None:
+                assert model <= prev
+            prev = model

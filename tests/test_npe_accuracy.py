@@ -1,0 +1,84 @@
+"""Paper §5.5 validation: end-to-end accuracy of the NPE configuration.
+
+The paper's claim: int8 MMU matmuls + few-segment PWL nonlinearities cause
+"no perceptible loss in accuracy" for BERT inference.  Without GLUE data
+(offline container) we quantify the claim as agreement between the float
+model and the NPE model on the SAME inputs:
+  * top-1 MLM prediction agreement,
+  * logit correlation / relative error,
+swept over PWL segment counts — the reproduction's Table "§5.5" in
+EXPERIMENTS.md comes from benchmarks/npe_accuracy.py which extends this.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import registry
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _bert_pair(segments=16, bits=8):
+    cfg = get_config("bert_base", smoke=True)
+    cfg_npe = cfg.with_npe(quant_bits=bits, segments=segments)
+    params = registry.init_params(cfg, KEY)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                                cfg.vocab_size)
+    lf = registry.apply(cfg, params, tokens, remat=False)
+    ln = registry.apply(cfg_npe, params, tokens, remat=False)
+    return np.asarray(lf, np.float32), np.asarray(ln, np.float32)
+
+
+def test_npe_bert_top1_agreement():
+    lf, ln = _bert_pair(segments=16, bits=8)
+    agree = np.mean(lf.argmax(-1) == ln.argmax(-1))
+    assert agree > 0.95, agree
+
+
+def test_npe_bert_logit_correlation():
+    lf, ln = _bert_pair(segments=16, bits=8)
+    corr = np.corrcoef(lf.ravel(), ln.ravel())[0, 1]
+    assert corr > 0.99, corr
+
+
+def test_npe_16bit_tighter_than_8bit():
+    lf8, ln8 = _bert_pair(bits=8)
+    lf16, ln16 = _bert_pair(bits=16)
+    err8 = np.abs(lf8 - ln8).mean()
+    err16 = np.abs(lf16 - ln16).mean()
+    assert err16 < err8
+
+
+def test_more_segments_reduce_error():
+    lf8a, ln8a = _bert_pair(segments=8)
+    lf32, ln32 = _bert_pair(segments=32)
+    err8 = np.abs(lf8a - ln8a).mean()
+    err32 = np.abs(lf32 - ln32).mean()
+    assert err32 <= err8 * 1.05
+
+
+@pytest.mark.parametrize("arch,bits", [("rwkv6_3b", 8), ("hymba_1_5b", 16)])
+def test_npe_nontransformer_agreement(arch, bits):
+    """Unified-engine extensibility: NPE mode stays faithful on families
+    that did not exist when the paper was written.
+
+    Finding (EXPERIMENTS.md §Paper-validation): the PWL engine is NOT the
+    accuracy limiter on SSM recurrences (corr 0.9993 at 16 segments) — the
+    int8 MMU is (corr 0.950): per-tensor int8 activation quantization error
+    compounds through hymba's selective-scan state.  The paper's own 16-bit
+    MMU variant (§5.4, kept for exactly this kind of model) restores
+    corr 0.9996.  RWKV6's gated time-mix is robust even at 8-bit."""
+    cfg = get_config(arch, smoke=True)
+    params = registry.init_params(cfg, KEY)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg.vocab_size)
+    lf = registry.apply(cfg, params, tokens, remat=False)
+    ln = registry.apply(cfg.with_npe(quant_bits=bits), params, tokens,
+                        remat=False)
+    lf, ln = np.asarray(lf, np.float32), np.asarray(ln, np.float32)
+    corr = np.corrcoef(lf.ravel(), ln.ravel())[0, 1]
+    assert corr > 0.98, corr

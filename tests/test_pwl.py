@@ -1,0 +1,68 @@
+"""PWL table construction tests (paper §4.2)."""
+import numpy as np
+import pytest
+
+from repro.core import pwl
+
+
+FUNCS = ["exp", "gelu", "tanh", "sigmoid", "silu", "erf", "softplus",
+         "recip", "rsqrt", "exp_neg_exp"]
+
+
+@pytest.mark.parametrize("name", FUNCS)
+def test_tables_monotone_knots(name):
+    t = pwl.get_table(name, 16)
+    knots = np.asarray(t.knots)
+    assert np.all(np.diff(knots) > 0)
+    guards = 0 if pwl._TAILS.get(name) is None else 2
+    assert t.slopes.shape[0] == 16 + guards
+    assert t.knots.shape[0] == 17 + guards
+
+
+@pytest.mark.parametrize("name", FUNCS)
+def test_adaptive_beats_uniform(name):
+    """Non-uniform segmentation needs fewer segments (paper §4.2.1)."""
+    fn, lo, hi = pwl._FUNCS[name]
+    f = lambda x: np.asarray(fn(np.asarray(x, np.float64)), np.float64)
+    e_uni = pwl.table_max_error(f, pwl.get_table(name, 16, "uniform"))
+    e_ada = pwl.table_max_error(f, pwl.get_table(name, 16, "adaptive"))
+    assert e_ada <= e_uni * 1.05  # adaptive never meaningfully worse
+
+
+@pytest.mark.parametrize("name", FUNCS)
+def test_lsq_refinement_improves(name):
+    fn, lo, hi = pwl._FUNCS[name]
+    f = lambda x: np.asarray(fn(np.asarray(x, np.float64)), np.float64)
+    e_ada = pwl.table_max_error(f, pwl.get_table(name, 16, "adaptive"))
+    e_lsq = pwl.table_max_error(f, pwl.get_table(name, 16, "adaptive+lsq"))
+    assert e_lsq <= e_ada * 1.10
+
+
+@pytest.mark.parametrize("segments", [8, 16, 32, 64])
+def test_error_decreases_with_segments(segments):
+    fn, lo, hi = pwl._FUNCS["gelu"]
+    f = lambda x: np.asarray(fn(np.asarray(x, np.float64)), np.float64)
+    t = pwl.get_table("gelu", segments, "adaptive")
+    err = pwl.table_max_error(f, t)
+    # paper: high accuracy with few segments; 16 segments are plenty for bf16
+    bound = {8: 5e-2, 16: 1.5e-2, 32: 4e-3, 64: 1e-3}[segments]
+    assert err < bound, f"gelu@{segments}: {err}"
+
+
+def test_continuity():
+    """CPWL: segment lines agree at the knots."""
+    t = pwl.get_table("gelu", 16, "adaptive+lsq")
+    knots = np.asarray(t.knots, np.float64)
+    slopes = np.asarray(t.slopes, np.float64)
+    icepts = np.asarray(t.intercepts, np.float64)
+    for i in range(1, len(slopes)):
+        left = slopes[i - 1] * knots[i] + icepts[i - 1]
+        right = slopes[i] * knots[i] + icepts[i]
+        assert abs(left - right) < 1e-5
+
+
+def test_eval_matches_numpy_oracle():
+    t = pwl.get_table("exp", 16)
+    xs = np.linspace(-18, 0, 1000)
+    got = pwl.eval_pwl_np(t, xs)
+    assert np.max(np.abs(got - np.exp(xs))) < 5e-3
