@@ -3,12 +3,16 @@
 Prints one CSV block per paper table (name,us_per_call,derived columns) and
 a wall-clock microbench of every Pallas kernel (interpret mode on CPU —
 numbers validate plumbing, not TPU perf; TPU perf is the §Roofline story).
+Also writes a machine-readable record comparing npec-compiled vs hand-built
+BERT cycle counts per (seq, bits) to results/npec_cycles.json, so PRs have
+a compiler-perf trajectory to track.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from pathlib import Path
 
@@ -64,18 +68,37 @@ def bench_kernels(quick: bool = False):
     return rows
 
 
+def write_npec_record(path: Path, rows=None) -> None:
+    """Persist the compiled-vs-hand-built cycle comparison as JSON."""
+    if rows is None:
+        from benchmarks import paper_tables
+        rows = paper_tables.npec_vs_hand()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(
+        {"schema": "npec_cycles/v1", "rows": rows}, indent=2) + "\n")
+    print(f"\nwrote {path} ({len(rows)} rows)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--json-out", default="results/npec_cycles.json",
+                    help="npec-vs-hand cycle record ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_tables
+    npec_rows = None
     for name, fn in paper_tables.ALL.items():
         t0 = time.perf_counter()
         rows = fn()
         dt = time.perf_counter() - t0
         _print_table(f"{name}  ({dt:.2f}s)", rows)
+        if name == "npec_vs_hand":
+            npec_rows = rows
+
+    if args.json_out:
+        write_npec_record(Path(args.json_out), npec_rows)
 
     if not args.skip_kernels:
         _print_table("kernel_microbench", bench_kernels(args.quick))

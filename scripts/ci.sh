@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 gate + compiler smoke.  Run from anywhere:
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+# fast npec smoke: trace -> lower -> schedule -> exec, cross-checked
+# against the hand-built program and the jnp model
+python -m repro.npec.trace --model bert_base --check

@@ -16,12 +16,11 @@ Outputs reproduce:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
-from repro.core.overlay import (Instr, NPEHardware, Program, nvu_cycles,
-                                paper_nvu_throughput)
+from repro.core.overlay import (Instr, NPEHardware, Program, mmu_cycles,
+                                nvu_cycles, paper_nvu_throughput)
 
 
 # ---------------------------------------------------------------------------
@@ -41,20 +40,28 @@ class BertShape:
         return self.hidden // self.heads
 
 
-def mmu_cycles(hw: NPEHardware, n: int, k: int, m: int, bits: int) -> int:
-    """Cycles for an (n,k)@(k,m) matmul on the MMU."""
-    return math.ceil(n * k * m / hw.mmu_mults(bits))
-
-
 def build_encoder_program(hw: NPEHardware, shape: BertShape, bits: int,
                           nvu_source: str = "paper",
-                          overlap: bool = True) -> Program:
+                          overlap: bool = True,
+                          backend: str = "hand") -> Program:
     """One encoder's instruction DAG (computation of paper Table 1).
 
     With overlap=False, every nonlinearity serializes against all later
     matmuls (the pessimistic Table 2 model); with True, only true data
     dependencies constrain the schedule.
+
+    backend="hand" is the original hand-built builder (kept as the golden
+    cross-check); backend="npec" traces the same encoder through the NPE
+    compiler (repro.npec) and returns its issue-ordered overlay program —
+    the path every other model family uses.
     """
+    if backend == "npec":
+        from repro import npec
+        compiled = npec.compile_bert_shape(hw, shape, bits,
+                                           nvu_source=nvu_source, layers=1)
+        return npec.issue_order(compiled, overlap=overlap)
+    if backend != "hand":
+        raise ValueError(f"unknown backend {backend!r}")
     S, H, A, F = shape.seq, shape.hidden, shape.heads, shape.d_ff
     hd = shape.head_dim
     p = Program()
@@ -174,12 +181,24 @@ def inference_cycles_streaming(hw: NPEHardware, shape: BertShape, bits: int,
 
 def inference_cycles(hw: NPEHardware, shape: BertShape, bits: int,
                      nvu_source: str = "paper", overlap: bool = True,
-                     model: str = "streaming") -> Dict[str, float]:
+                     model: str = "streaming",
+                     backend: str = "hand") -> Dict[str, float]:
     """Latency model; `model="streaming"` (paper-faithful) or `"dag"`
-    (whole-op list schedule, used for the no-overlap ablation)."""
+    (whole-op list schedule, used for the no-overlap ablation).  The DAG
+    model accepts backend="npec" to source the program from the compiler
+    instead of the hand-built BERT graph — validated to agree within 1%
+    for overlap=True in tests/test_npec.py.  With overlap=False the
+    compiled ablation is strictly serial (sum of unit busy cycles), a
+    slightly tighter pessimistic bound than the hand builder's (~2.5%):
+    see npec.schedule._serialize_nvu."""
     if model == "streaming" and overlap:
+        if backend != "hand":
+            raise ValueError(
+                "backend applies to the DAG model only; the streaming model "
+                'is analytic — pass model="dag" to use backend="npec"')
         return inference_cycles_streaming(hw, shape, bits, nvu_source)
-    enc = schedule(build_encoder_program(hw, shape, bits, nvu_source, overlap))
+    enc = schedule(build_encoder_program(hw, shape, bits, nvu_source, overlap,
+                                         backend=backend))
     return {k: (v * shape.encoders if isinstance(v, (int, float)) else v)
             for k, v in enc.items()}
 

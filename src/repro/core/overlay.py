@@ -26,17 +26,30 @@ class NPEHardware:
     clock_hz: float = 200e6
     mmu_mults_16: int = 2048       # 128 PEs x 16 MACs
     mmu_mults_8: int = 4096        # DSP slices split into 2 int8 muls
+    mmu_pes: int = 128             # processing elements (output-row tiles)
     vrwidth: int = 1024            # NVU vector register width (bits)
     num_vregs: int = 32
     # VLIW issue: 1 LSU + up to 3 VCU + 1 SCU per bundle (§6.1, §6.5).
     vcu_issue: int = 3
     lsu_issue: int = 1
+    scu_issue: int = 1
 
     def mmu_mults(self, bits: int) -> int:
         return self.mmu_mults_16 if bits == 16 else self.mmu_mults_8
 
+    def mmu_macs(self, bits: int) -> int:
+        """MACs per PE (the K-dimension tile the MMU contracts per cycle)."""
+        return self.mmu_mults(bits) // self.mmu_pes
+
     def lanes(self, elem_bits: int = 16) -> int:
         return self.vrwidth // elem_bits
+
+
+def mmu_cycles(hw: NPEHardware, n: int, k: int, m: int, bits: int) -> int:
+    """Cycles for an (n,k)@(k,m) matmul on the MMU at the ideal MAC rate
+    (the paper's own budget model; tile-padding overhead is exposed
+    separately by repro.npec.lower.tile_matmul)."""
+    return math.ceil(n * k * m / hw.mmu_mults(bits))
 
 
 # ---------------------------------------------------------------------------
@@ -95,55 +108,67 @@ class Pass:
 # FMA -> modeled as 3 VCU ops per chunk.
 _PWL_VCU = 3
 
+# Pass structure per routine — shared with the npec compiler, which expands
+# these into explicit VLIW bundles (repro.npec.lower.nvu_microprogram) and
+# must agree with the cycle counts below.
+ROUTINE_PASSES = {
+    "softmax": (
+        Pass(lsu=1, vcu=2, reduce_tail=True, scalar=1),          # load, clamp, max
+        Pass(lsu=2, vcu=2 + _PWL_VCU, reduce_tail=True, scalar=4),  # sub, exp, acc; recip on SCU
+        Pass(lsu=2, vcu=1),                                      # scale + store
+    ),
+    # mean -> variance (32-bit) -> normalize+scale+shift with PWL rsqrt.
+    # Variance accumulates in 32-bit (paper §4.1.3), which halves the
+    # effective lanes for that pass — modeled by doubling its vcu ops.
+    "layernorm": (
+        Pass(lsu=1, vcu=1, reduce_tail=True, scalar=1),          # sum -> mean
+        Pass(lsu=1, vcu=2 * 3, reduce_tail=True, scalar=4),      # (x-mu)^2 acc @32b; rsqrt on SCU
+        Pass(lsu=2, vcu=3),                                      # (x-mu)*inv*gamma+beta
+    ),
+    # Direct PWL approximation: load, PWL, store.
+    "gelu": (Pass(lsu=2, vcu=_PWL_VCU + 1),),
+}
+
+# Measured Table 3 shows GELU at exactly 4 cycles/chunk across all VRWIDTHs;
+# the issue model alone gives max(2, ceil(4/3)) = 2 in steady state.  The
+# NVU's real LSU<->VCU dependency stalls double this — modeled as an explicit
+# per-routine stall factor (the npec VLIW bundler applies the same factor).
+ROUTINE_STALL_FACTOR = {"softmax": 1, "layernorm": 1, "gelu": 2}
+
 
 def _routine_cycles(hw: NPEHardware, n_elements: int, passes: Sequence[Pass],
-                    elem_bits: int = 16) -> int:
+                    elem_bits: int = 16, stall_factor: int = 1) -> int:
     lanes = hw.lanes(elem_bits)
     chunks = math.ceil(n_elements / lanes)
     total = 0
     for p in passes:
         per_chunk = max(math.ceil(p.lsu / hw.lsu_issue),
                         math.ceil(p.vcu / hw.vcu_issue), 1)
-        total += per_chunk * chunks
+        total += per_chunk * stall_factor * chunks
         if p.reduce_tail:
             total += int(math.log2(max(lanes, 2)))
         total += p.scalar
     return total
 
 
+def _named_routine_cycles(name: str, hw: NPEHardware, n_elements: int) -> int:
+    return _routine_cycles(hw, n_elements, ROUTINE_PASSES[name],
+                           stall_factor=ROUTINE_STALL_FACTOR[name])
+
+
 def softmax_cycles(hw: NPEHardware, n_elements: int) -> int:
     """max -> subtract+exp(PWL)+accumulate -> scale by PWL reciprocal."""
-    passes = (
-        Pass(lsu=1, vcu=2, reduce_tail=True, scalar=1),          # load, clamp, max
-        Pass(lsu=2, vcu=2 + _PWL_VCU, reduce_tail=True, scalar=4),  # sub, exp, acc; recip on SCU
-        Pass(lsu=2, vcu=1),                                      # scale + store
-    )
-    return _routine_cycles(hw, n_elements, passes)
+    return _named_routine_cycles("softmax", hw, n_elements)
 
 
 def layernorm_cycles(hw: NPEHardware, n_elements: int) -> int:
-    """mean -> variance (32-bit) -> normalize+scale+shift with PWL rsqrt.
-
-    Variance accumulates in 32-bit (paper §4.1.3), which halves the
-    effective lanes for that pass — modeled by doubling its vcu ops.
-    """
-    passes = (
-        Pass(lsu=1, vcu=1, reduce_tail=True, scalar=1),          # sum -> mean
-        Pass(lsu=1, vcu=2 * 3, reduce_tail=True, scalar=4),      # (x-mu)^2 acc @32b; rsqrt on SCU
-        Pass(lsu=2, vcu=3),                                      # (x-mu)*inv*gamma+beta
-    )
-    return _routine_cycles(hw, n_elements, passes)
+    """mean -> variance (32-bit) -> normalize+scale+shift with PWL rsqrt."""
+    return _named_routine_cycles("layernorm", hw, n_elements)
 
 
 def gelu_cycles(hw: NPEHardware, n_elements: int) -> int:
-    """Direct PWL approximation: load, PWL, store (paper Table 3: exactly
-    4 cycles per chunk across all VRWIDTHs)."""
-    passes = (Pass(lsu=2, vcu=_PWL_VCU + 1),)
-    # calibration note: measured Table 3 shows 4 cycles/chunk; our issue
-    # model gives max(2, ceil(4/3)) = 2 in steady state.  The NVU's real
-    # LSU<->VCU dependency stalls double this; model that explicitly.
-    lanes = hw.lanes(16)
-    return 4 * math.ceil(n_elements / lanes)
+    """Direct PWL approximation (paper Table 3: exactly 4 cycles/chunk)."""
+    return _named_routine_cycles("gelu", hw, n_elements)
 
 
 NVU_ROUTINES = {

@@ -97,21 +97,32 @@ def cast_tree(params, dtype):
 # Normalization (unified PWL engine when npe_pwl is on)
 # ---------------------------------------------------------------------------
 
+def layernorm_exact(x, gamma, beta=None, eps: float = 1e-6):
+    """Float-mode LayerNorm — the single source the jnp models AND the
+    npec functional executor share (keeps them in numeric lockstep)."""
+    mu = jnp.mean(x.astype(jnp.float32), -1, keepdims=True)
+    var = jnp.var(x.astype(jnp.float32), -1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * gamma
+    if beta is not None:
+        y = y + beta
+    return y.astype(x.dtype)
+
+
+def rmsnorm_exact(x, gamma, eps: float = 1e-6):
+    """Float-mode RMSNorm (shared with the npec executor, see above)."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x * jax.lax.rsqrt(ms + eps) * gamma).astype(x.dtype)
+
+
 def norm(cfg: ModelConfig, x, gamma, beta=None, eps: float = 1e-6):
     seg = cfg.npe_pwl_segments
     if cfg.norm == "layernorm":
         if cfg.npe_pwl:
             return nvu.nvu_layernorm(x, gamma, beta, eps=eps, segments=seg)
-        mu = jnp.mean(x.astype(jnp.float32), -1, keepdims=True)
-        var = jnp.var(x.astype(jnp.float32), -1, keepdims=True)
-        y = (x - mu) * jax.lax.rsqrt(var + eps) * gamma
-        if beta is not None:
-            y = y + beta
-        return y.astype(x.dtype)
+        return layernorm_exact(x, gamma, beta, eps)
     if cfg.npe_pwl:
         return nvu.nvu_rmsnorm(x, gamma, eps=eps, segments=seg)
-    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
-    return (x * jax.lax.rsqrt(ms + eps) * gamma).astype(x.dtype)
+    return rmsnorm_exact(x, gamma, eps)
 
 
 def norm_spec(cfg: ModelConfig, dim: int) -> Dict[str, Spec]:

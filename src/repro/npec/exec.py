@@ -1,0 +1,213 @@
+"""Functional executor: run a compiled program numerically.
+
+Interprets the npec graph behind a `CompiledProgram` against the same
+engines the jnp model zoo uses — `repro.core.nvu` for every nonlinearity
+(float or PWL mode) and `repro.core.quant` for MMU-resident weight
+matmuls — so a compiled instruction stream can be validated end-to-end
+against the corresponding jnp model's outputs (tests/test_npec.py, and
+`python -m repro.npec.trace --check`).
+
+Semantics mirror the jnp modules op-for-op:
+  * weight matmuls   -> `quant.dense_maybe_quant` (int8/int16 MMU when
+                        npe_quant) + bias epilogue;
+  * QK^T / AV        -> f32-accumulated einsums on the activation path
+                        (never quantized, matching `common.attention_scores`);
+  * softmax / norms / activations -> `nvu.softmax` / layernorm / rmsnorm /
+                        `nvu.activation` in float or PWL mode.
+
+Buffers live in a node-indexed environment and are freed at last use —
+the executor reports the resulting peak live footprint, the quantity the
+overlay's MMEM has to cover (paper §5.2).
+
+Graphs are traced per-sequence; feeds may carry a leading batch axis and
+every op vectorizes over it unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Union
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import nvu
+from repro.core.quant import dense_maybe_quant
+from repro.models import common as cm
+from repro.npec.ir import FOLDED_OPS, Graph, Node
+from repro.npec.lower import CompiledProgram
+
+
+@dataclass
+class ExecResult:
+    outputs: List[jnp.ndarray]
+    peak_live_bytes: int
+    n_instrs: int
+
+    def __getitem__(self, i: int) -> jnp.ndarray:
+        return self.outputs[i]
+
+
+def _resolve_param(params, node: Node) -> jnp.ndarray:
+    v = params
+    for key in node.attrs["path"]:
+        v = v[key]
+    if node.attrs.get("layer") is not None:
+        v = v[node.attrs["layer"]]
+    if node.attrs.get("index") is not None:
+        v = v[node.attrs["index"]]
+    if node.attrs.get("rows") is not None:
+        r0, r1 = node.attrs["rows"]
+        v = v[r0:r1]
+    if node.attrs.get("cols") is not None:
+        c0, c1 = node.attrs["cols"]
+        v = v[..., c0:c1]
+    return jnp.asarray(v, jnp.float32)
+
+
+def _matmul(node: Node, a, b, bias, *, weight_resident: bool,
+            npe_quant: bool, bits: int):
+    if node.attrs.get("transpose_b"):
+        y = jnp.einsum("...ik,...jk->...ij", a, b,
+                       preferred_element_type=jnp.float32)
+    elif weight_resident:
+        y = dense_maybe_quant(a, b, None, npe_quant=npe_quant, bits=bits)
+    else:
+        y = jnp.einsum("...ik,...kj->...ij", a, b,
+                       preferred_element_type=jnp.float32)
+    if node.attrs.get("scale") is not None:
+        y = y * node.attrs["scale"]
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def _softmax(node: Node, x, *, use_pwl: bool, segments: int):
+    where = None
+    if node.attrs.get("causal"):
+        sq, sk = x.shape[-2], x.shape[-1]
+        where = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        where = jnp.broadcast_to(where, x.shape)
+    return nvu.softmax(x, axis=-1, use_pwl=use_pwl, segments=segments,
+                       where=where)
+
+
+def _layernorm(node: Node, x, gamma, beta, *, use_pwl: bool, segments: int):
+    eps = node.attrs.get("eps", 1e-5)
+    if use_pwl:
+        return nvu.nvu_layernorm(x, gamma, beta, eps=eps, segments=segments)
+    return cm.layernorm_exact(x, gamma, beta, eps)
+
+
+def _rmsnorm(node: Node, x, gamma, *, use_pwl: bool, segments: int):
+    eps = node.attrs.get("eps", 1e-6)
+    if use_pwl:
+        return nvu.nvu_rmsnorm(x, gamma, eps=eps, segments=segments)
+    return cm.rmsnorm_exact(x, gamma, eps)
+
+
+def _rope(node: Node, x):
+    s = x.shape[-2]
+    lead = x.shape[:-2]
+    if not lead:                               # add a batch axis for cm.apply_rope
+        x4 = x[None, :, None, :]
+        pos = jnp.arange(s, dtype=jnp.int32)[None]
+        return cm.apply_rope(x4, pos, node.attrs["theta"])[0, :, 0, :]
+    b = 1
+    for d in lead:
+        b *= d
+    x4 = x.reshape(b, s, 1, x.shape[-1])
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    y = cm.apply_rope(x4, pos, node.attrs["theta"])
+    return y.reshape(*lead, s, x.shape[-1])
+
+
+def _nbytes(x) -> int:
+    return int(x.size) * x.dtype.itemsize
+
+
+def execute(program: Union[CompiledProgram, Graph], params: Any,
+            feeds: Dict[str, Any], *, cfg: Optional[ModelConfig] = None,
+            npe_quant: bool = False, bits: int = 8, use_pwl: bool = False,
+            segments: int = 16) -> ExecResult:
+    """Run the program on `feeds` (dict input-name -> array, optionally
+    batched) with `params` (the registry parameter tree).  NPE numerics
+    follow `cfg` when given (npe_quant / npe_quant_bits / npe_pwl /
+    npe_pwl_segments), else the explicit keyword flags."""
+    graph = program.graph if isinstance(program, CompiledProgram) else program
+    n_instrs = (len(program.instrs) if isinstance(program, CompiledProgram)
+                else sum(n.op not in FOLDED_OPS for n in graph.nodes))
+    if cfg is not None:
+        npe_quant, bits = cfg.npe_quant, cfg.npe_quant_bits
+        use_pwl, segments = cfg.npe_pwl, cfg.npe_pwl_segments
+
+    env: Dict[int, jnp.ndarray] = {}
+    uses = {n.id: 0 for n in graph.nodes}
+    for n in graph.nodes:
+        for i in n.inputs:
+            uses[i] += 1
+    for o in graph.outputs:
+        uses[o] += 1                            # outputs never freed
+
+    live = 0
+    peak = 0
+
+    def put(nid: int, val):
+        nonlocal live, peak
+        env[nid] = val
+        live += _nbytes(val)
+        peak = max(peak, live)
+
+    def get(nid: int):
+        nonlocal live
+        val = env[nid]
+        uses[nid] -= 1
+        if uses[nid] == 0:
+            live -= _nbytes(val)
+            del env[nid]
+        return val
+
+    for node in graph.nodes:
+        op = node.op
+        if op == "input":
+            x = jnp.asarray(feeds[node.attrs["name"]])
+            put(node.id, x if node.dtype == "int32"
+                else x.astype(jnp.float32))
+        elif op == "param":
+            put(node.id, _resolve_param(params, node))
+        elif op == "matmul":
+            a, b = get(node.inputs[0]), get(node.inputs[1])
+            bias = get(node.inputs[2]) if len(node.inputs) > 2 else None
+            wres = graph.node(node.inputs[1]).op == "param"
+            put(node.id, _matmul(node, a, b, bias, weight_resident=wres,
+                                 npe_quant=npe_quant, bits=bits))
+        elif op == "softmax":
+            put(node.id, _softmax(node, get(node.inputs[0]),
+                                  use_pwl=use_pwl, segments=segments))
+        elif op == "layernorm":
+            x, gamma = get(node.inputs[0]), get(node.inputs[1])
+            beta = get(node.inputs[2]) if len(node.inputs) > 2 else None
+            put(node.id, _layernorm(node, x, gamma, beta,
+                                    use_pwl=use_pwl, segments=segments))
+        elif op == "rmsnorm":
+            put(node.id, _rmsnorm(node, get(node.inputs[0]),
+                                  get(node.inputs[1]),
+                                  use_pwl=use_pwl, segments=segments))
+        elif op == "act":
+            fn = nvu.activation(node.attrs["fn"], use_pwl, segments)
+            put(node.id, fn(get(node.inputs[0])))
+        elif op == "rope":
+            put(node.id, _rope(node, get(node.inputs[0])))
+        elif op == "add":
+            put(node.id, get(node.inputs[0]) + get(node.inputs[1]))
+        elif op == "mul":
+            put(node.id, get(node.inputs[0]) * get(node.inputs[1]))
+        elif op == "concat":
+            put(node.id, jnp.concatenate([get(i) for i in node.inputs],
+                                         axis=node.attrs["axis"]))
+        elif op == "embed":
+            tokens, table = get(node.inputs[0]), get(node.inputs[1])
+            put(node.id, jnp.take(table, tokens, axis=0))
+        else:
+            raise NotImplementedError(f"executor has no rule for {op!r}")
+
+    return ExecResult([env[o] for o in graph.outputs], peak, n_instrs)

@@ -1,0 +1,181 @@
+"""Graph IR for the NPE compiler (npec).
+
+A `Graph` is a flat, topologically-ordered list of `Node`s — the unit of
+exchange between the tracers (repro.npec.trace), the lowering passes
+(repro.npec.lower) and the functional executor (repro.npec.exec).  Shapes
+are per-sequence (no batch dimension): the overlay processes one sequence
+at a time (paper §5.1), and the executor re-vectorizes over a leading
+batch axis for free.
+
+Op set
+------
+Compute ops (lowered to MMU / NVU instructions):
+  * ``matmul``     inputs (a, b[, bias]); attrs transpose_b, scale.
+                   When b is a ``param`` node the weight is MMU-resident
+                   (quantizable); activation x activation matmuls (QK^T,
+                   AV) stay in the MMU's activation path.
+  * ``softmax``    inputs (x,); attrs causal (bool mask over last 2 dims).
+  * ``layernorm``  inputs (x, gamma[, beta]); attrs eps.
+  * ``rmsnorm``    inputs (x, gamma); attrs eps.
+  * ``act``        inputs (x,); attrs fn ("gelu" | "silu" | "tanh" | ...).
+  * ``rope``       inputs (x,); attrs theta (rotary embedding, NVU vector
+                   arithmetic — costed as an elementwise PWL-class stream).
+
+Structural ops (folded by lowering — MRU/MWU traffic or MMU/NVU stream
+epilogues, never a compute instruction of their own):
+  * ``input``      graph input placeholder; attrs name.
+  * ``param``      parameter leaf; attrs path (tuple of tree keys), layer
+                   (stacked-layer index or None), rows / cols (half-open
+                   slice tuples or None), index (single leading row).
+  * ``add`` / ``mul``   elementwise (residuals, gated-MLP gating).
+  * ``concat``     attrs axis (head merge).
+  * ``embed``      inputs (tokens, table) — MRU gather.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+COMPUTE_OPS = ("matmul", "softmax", "layernorm", "rmsnorm", "act", "rope")
+FOLDED_OPS = ("input", "param", "add", "mul", "concat", "embed")
+
+
+@dataclass
+class Node:
+    id: int
+    op: str
+    inputs: Tuple[int, ...]
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    tag: str = ""
+
+
+class Graph:
+    """Append-only node list; inputs must precede consumers (topo order)."""
+
+    def __init__(self):
+        self.nodes: List[Node] = []
+        self.inputs: Dict[str, int] = {}      # name -> node id
+        self.outputs: List[int] = []
+
+    # --- construction ----------------------------------------------------
+
+    def add(self, op: str, inputs: Tuple[int, ...], shape: Tuple[int, ...],
+            dtype: str = "float32", tag: str = "", **attrs) -> int:
+        assert op in COMPUTE_OPS or op in FOLDED_OPS, op
+        nid = len(self.nodes)
+        for i in inputs:
+            assert 0 <= i < nid, f"node {nid} ({op}) references future node {i}"
+        self.nodes.append(Node(nid, op, tuple(inputs), tuple(shape),
+                               dtype, dict(attrs), tag))
+        return nid
+
+    def add_input(self, name: str, shape: Tuple[int, ...],
+                  dtype: str = "float32") -> int:
+        nid = self.add("input", (), shape, dtype, tag=name, name=name)
+        self.inputs[name] = nid
+        return nid
+
+    def mark_output(self, nid: int) -> int:
+        self.outputs.append(nid)
+        return nid
+
+    # --- queries ----------------------------------------------------------
+
+    def node(self, nid: int) -> Node:
+        return self.nodes[nid]
+
+    def consumers(self) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {n.id: [] for n in self.nodes}
+        for n in self.nodes:
+            for i in n.inputs:
+                out[i].append(n.id)
+        return out
+
+    def count_ops(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for n in self.nodes:
+            out[n.op] = out.get(n.op, 0) + 1
+        return out
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __repr__(self) -> str:
+        ops = ", ".join(f"{k}={v}" for k, v in sorted(self.count_ops().items()))
+        return f"Graph({len(self.nodes)} nodes: {ops})"
+
+
+class GraphBuilder:
+    """Convenience wrapper the tracers drive; one method per IR op."""
+
+    def __init__(self, graph: Optional[Graph] = None):
+        self.g = graph if graph is not None else Graph()
+
+    def input(self, name, shape, dtype="float32"):
+        return self.g.add_input(name, shape, dtype)
+
+    def param(self, path: Tuple[str, ...], shape, *, layer=None, rows=None,
+              cols=None, index=None, tag=""):
+        return self.g.add("param", (), shape, tag=tag or ".".join(path),
+                          path=tuple(path), layer=layer, rows=rows,
+                          cols=cols, index=index)
+
+    def matmul(self, a, b, bias=None, *, transpose_b=False, scale=None,
+               tag=""):
+        an, bn = self.g.node(a), self.g.node(b)
+        n, k = an.shape[-2], an.shape[-1]
+        if transpose_b:
+            assert bn.shape[-1] == k, (an.shape, bn.shape)
+            m = bn.shape[-2]
+        else:
+            assert bn.shape[-2] == k, (an.shape, bn.shape)
+            m = bn.shape[-1]
+        inputs = (a, b) if bias is None else (a, b, bias)
+        return self.g.add("matmul", inputs, an.shape[:-2] + (n, m), tag=tag,
+                          transpose_b=transpose_b, scale=scale)
+
+    def softmax(self, x, *, causal=False, tag=""):
+        return self.g.add("softmax", (x,), self.g.node(x).shape, tag=tag,
+                          causal=causal)
+
+    def layernorm(self, x, gamma, beta=None, *, eps=1e-5, tag=""):
+        inputs = (x, gamma) if beta is None else (x, gamma, beta)
+        return self.g.add("layernorm", inputs, self.g.node(x).shape,
+                          tag=tag, eps=eps)
+
+    def rmsnorm(self, x, gamma, *, eps=1e-6, tag=""):
+        return self.g.add("rmsnorm", (x, gamma), self.g.node(x).shape,
+                          tag=tag, eps=eps)
+
+    def act(self, x, fn: str, tag=""):
+        return self.g.add("act", (x,), self.g.node(x).shape, tag=tag, fn=fn)
+
+    def rope(self, x, *, theta=10000.0, tag=""):
+        return self.g.add("rope", (x,), self.g.node(x).shape, tag=tag,
+                          theta=theta)
+
+    def add(self, a, b, tag=""):
+        sa, sb = self.g.node(a).shape, self.g.node(b).shape
+        shape = sa if len(sa) >= len(sb) else sb
+        return self.g.add("add", (a, b), shape, tag=tag)
+
+    def mul(self, a, b, tag=""):
+        return self.g.add("mul", (a, b), self.g.node(a).shape, tag=tag)
+
+    def concat(self, xs, *, axis=-1, tag=""):
+        shapes = [self.g.node(x).shape for x in xs]
+        dim = sum(s[axis] for s in shapes)
+        base = list(shapes[0])
+        base[axis] = dim
+        return self.g.add("concat", tuple(xs), tuple(base), tag=tag,
+                          axis=axis)
+
+    def embed(self, tokens, table, tag=""):
+        ts = self.g.node(tokens).shape
+        d = self.g.node(table).shape[-1]
+        return self.g.add("embed", (tokens, table), ts + (d,), tag=tag)
+
+    def output(self, nid):
+        return self.g.mark_output(nid)

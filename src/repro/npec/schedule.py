@@ -1,0 +1,168 @@
+"""Instruction scheduling for compiled overlay programs.
+
+`greedy_schedule` is a greedy earliest-start list scheduler over the
+per-unit timelines (MMU, NVU, ...): at every step it issues, among the
+ready instructions (all dependencies scheduled), the one that can *start*
+earliest; ties fall to cross-unit feeders (instructions whose consumers
+run on a different unit — issuing QK^T ahead of the next head's
+projections is what keeps the NVU fed), then to the larger critical path
+(longest cycle-weighted path to a sink — which defers the AV matmuls past
+later heads' projections), then to emission order.  Because the tracer
+emits heads in plain dataflow order (q,k,v,qk,softmax,av), the paper's
+softmax/matmul overlap (§7.2.1) is not hand-placed anywhere — the
+scheduler discovers it from the dependency structure and these two
+tie-breaks, reproducing the hand-built §7.2.1 issue order exactly
+(tests/test_npec.py sweeps all NVU widths x sequence lengths x MMU
+precisions).
+
+`issue_order` freezes that schedule back into an overlay `Program` whose
+program order IS the issue order, so the existing in-order earliest-start
+scheduler in `repro.core.cycles.schedule` reproduces the same timeline —
+that cross-check runs in tests/test_npec.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.overlay import Instr, Program
+from repro.npec.lower import CompiledProgram, LoweredInstr
+
+
+def _serialize_nvu(instrs: List[LoweredInstr]) -> List[LoweredInstr]:
+    """No-overlap ablation (paper Table 2's pessimistic model): every
+    instruction additionally depends on the last NVU instruction emitted
+    before it, so no matmul may start under a pending nonlinearity.
+
+    Issued in emission order (no greedy reordering) this is *strictly*
+    serial — the schedule totals exactly the per-unit busy sums.  The
+    hand-built builder's overlap=False variant retains a small accidental
+    overlap (its deferred AV matmuls run under the last head's softmax),
+    so the compiled ablation is the tighter upper bound: hand <= npec,
+    within ~2.5% (asserted in tests/test_npec.py)."""
+    out: List[LoweredInstr] = []
+    last_nvu = None
+    for i, ins in enumerate(instrs):
+        deps = ins.deps
+        if last_nvu is not None and last_nvu not in deps:
+            deps = deps + (last_nvu,)
+        out.append(LoweredInstr(ins.unit, ins.op, ins.cycles, deps, ins.tag,
+                                ins.shape, ins.node, ins.meta))
+        if ins.unit == "NVU":
+            last_nvu = i
+    return out
+
+
+def greedy_schedule(compiled: CompiledProgram, *, overlap: bool = True) -> Dict:
+    """List-schedule the compiled program; returns the timeline summary
+    (same keys as repro.core.cycles.schedule) plus the issue order and
+    per-instruction start/end times.  overlap=False serializes every
+    nonlinearity against all later instructions and issues in emission
+    order — the strictly-serial Table 2 ablation (no greedy reordering,
+    which would back-fill the NVU stalls with ready AV matmuls and defeat
+    the ablation's purpose).  Results are memoized on the program."""
+    cached = compiled.sched_cache.get(overlap)
+    if cached is not None:
+        return cached
+    instrs = compiled.instrs if overlap else _serialize_nvu(compiled.instrs)
+    if not overlap:
+        sched = _inorder_schedule(compiled, instrs)
+        compiled.sched_cache[overlap] = sched
+        return sched
+    n = len(instrs)
+    remaining = [len(ins.deps) for ins in instrs]
+    consumers: List[List[int]] = [[] for _ in range(n)]
+    for i, ins in enumerate(instrs):
+        for d in ins.deps:
+            consumers[d].append(i)
+    # critical path: longest cycle-weighted path from each instr to a sink
+    cp = [0.0] * n
+    for i in range(n - 1, -1, -1):
+        cp[i] = instrs[i].cycles + max((cp[c] for c in consumers[i]),
+                                       default=0.0)
+    # does retiring this instr unblock work on another unit?
+    cross = [any(instrs[c].unit != instrs[i].unit for c in consumers[i])
+             for i in range(n)]
+    ready = [i for i in range(n) if remaining[i] == 0]
+    free: Dict[str, float] = {}
+    start = [0.0] * n
+    end = [0.0] * n
+    order: List[int] = []
+    scheduled = [False] * n
+    while ready:
+        best, best_key = None, None
+        for i in ready:
+            ins = instrs[i]
+            s = max(free.get(ins.unit, 0.0),
+                    max((end[d] for d in ins.deps), default=0.0))
+            key = (s, not cross[i], -cp[i], i)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        best_start = best_key[0]
+        ready.remove(best)
+        ins = instrs[best]
+        start[best] = best_start
+        end[best] = best_start + ins.cycles
+        free[ins.unit] = end[best]
+        scheduled[best] = True
+        order.append(best)
+        for c in consumers[best]:
+            remaining[c] -= 1
+            if remaining[c] == 0:
+                ready.append(c)
+    assert all(scheduled), "dependency cycle in compiled program"
+    total = max(end) if end else 0.0
+    busy = compiled.busy_by_unit()
+    sched = {
+        "total_cycles": total,
+        "mmu_busy": float(busy.get("MMU", 0)),
+        "nvu_busy": float(busy.get("NVU", 0)),
+        "mmu_util": busy.get("MMU", 0) / total if total else 0.0,
+        "order": order,
+        "start": start,
+        "end": end,
+    }
+    compiled.sched_cache[overlap] = sched
+    return sched
+
+
+def _inorder_schedule(compiled: CompiledProgram,
+                      instrs: List[LoweredInstr]) -> Dict:
+    """Earliest-start simulation in emission order (the core in-order
+    scheduler's semantics), used for the no-overlap ablation."""
+    n = len(instrs)
+    free: Dict[str, float] = {}
+    start = [0.0] * n
+    end = [0.0] * n
+    for i, ins in enumerate(instrs):
+        s = max(free.get(ins.unit, 0.0),
+                max((end[d] for d in ins.deps), default=0.0))
+        start[i], end[i] = s, s + ins.cycles
+        free[ins.unit] = end[i]
+    total = max(end) if end else 0.0
+    busy = compiled.busy_by_unit()
+    return {
+        "total_cycles": total,
+        "mmu_busy": float(busy.get("MMU", 0)),
+        "nvu_busy": float(busy.get("NVU", 0)),
+        "mmu_util": busy.get("MMU", 0) / total if total else 0.0,
+        "order": list(range(n)),
+        "start": start,
+        "end": end,
+    }
+
+
+def issue_order(compiled: CompiledProgram, *, overlap: bool = True) -> Program:
+    """Reorder the compiled stream into its greedy issue order and project
+    onto the overlay ISA; program order then equals issue order, which is
+    how the ICU actually consumes the stream."""
+    instrs = (compiled.instrs if overlap
+              else _serialize_nvu(compiled.instrs))
+    sched = greedy_schedule(compiled, overlap=overlap)
+    pos = {old: new for new, old in enumerate(sched["order"])}
+    p = Program()
+    for old in sched["order"]:
+        ins = instrs[old]
+        p.add(Instr(ins.unit, ins.op, ins.cycles,
+                    tuple(sorted(pos[d] for d in ins.deps)),
+                    ins.tag, ins.shape))
+    return p

@@ -1,0 +1,335 @@
+"""Tracers: registered model family -> npec graph IR.
+
+The tracer is the compiler's front end: it walks a `ModelConfig` and emits
+the per-sequence dataflow graph (repro.npec.ir) that lowering maps onto the
+overlay.  Nothing here is symbolic-execution magic — each family has an
+explicit emitter that mirrors the corresponding jnp module in
+repro.models/*, which is exactly what makes the functional executor
+(repro.npec.exec) checkable against those modules.
+
+Supported today:
+  * ``bert``   — post-norm encoder (paper Table 1), incl. GQA smoke shapes.
+  * ``dense``  — pre-norm decoder blocks (RoPE + GQA + gated/plain MLP),
+                 full causal attention.
+Unsupported families raise `CompileError` naming the gap; ROADMAP.md "Open
+items" tracks them (MoE routing, encoder-decoder cross-attention, SSM/RWKV
+recurrences, sliding-window streams).
+
+Heads are traced individually (per-head QK^T/softmax/AV), matching the
+overlay's execution granularity — the schedule-level softmax/matmul overlap
+of paper §7.2.1 then *emerges* in repro.npec.schedule from the dependency
+structure, with no hand-placed pipelining in the emission order.
+
+CLI smoke (used by scripts/ci.sh):
+    PYTHONPATH=src python -m repro.npec.trace --model bert_base --check
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional
+
+from repro.config import ModelConfig
+from repro.npec.ir import Graph, GraphBuilder
+
+
+class CompileError(NotImplementedError):
+    """A model (or model feature) the compiler cannot lower yet."""
+
+
+# ---------------------------------------------------------------------------
+# BERT (paper Table 1): post-norm encoder
+# ---------------------------------------------------------------------------
+
+def _attention(b: GraphBuilder, x: int, l: int, *, S: int, H: int, A: int,
+               KV: int, hd: int, qkv_bias: bool, causal: bool,
+               rope_theta: Optional[float], tag: str) -> int:
+    """Per-head multi-head attention; returns the output-projection node.
+
+    Heads are emitted in plain dataflow order (q,k,v,qk,softmax,av per
+    head) — deferring the AV matmuls past the next head's projections is
+    the *scheduler's* job, not the tracer's.
+    """
+    g = A // KV
+    kv_nodes = {}
+    z_heads = []
+    for i in range(A):
+        j = i // g                                  # shared kv head (GQA)
+        cq = (i * hd, (i + 1) * hd)
+        ck = (j * hd, (j + 1) * hd)
+        bq = (b.param(("blocks", "bq"), (hd,), layer=l, cols=cq)
+              if qkv_bias else None)
+        q = b.matmul(x, b.param(("blocks", "wq"), (H, hd), layer=l, cols=cq),
+                     bias=bq, tag=f"{tag}.h{i}.q")
+        if rope_theta is not None:
+            q = b.rope(q, theta=rope_theta, tag=f"{tag}.h{i}.q_rope")
+        if j not in kv_nodes:
+            bk = (b.param(("blocks", "bk"), (hd,), layer=l, cols=ck)
+                  if qkv_bias else None)
+            bv = (b.param(("blocks", "bv"), (hd,), layer=l, cols=ck)
+                  if qkv_bias else None)
+            k = b.matmul(x, b.param(("blocks", "wk"), (H, hd), layer=l,
+                                    cols=ck), bias=bk, tag=f"{tag}.h{i}.k")
+            if rope_theta is not None:
+                k = b.rope(k, theta=rope_theta, tag=f"{tag}.h{i}.k_rope")
+            v = b.matmul(x, b.param(("blocks", "wv"), (H, hd), layer=l,
+                                    cols=ck), bias=bv, tag=f"{tag}.h{i}.v")
+            kv_nodes[j] = (k, v)
+        k, v = kv_nodes[j]
+        qk = b.matmul(q, k, transpose_b=True, scale=hd ** -0.5,
+                      tag=f"{tag}.h{i}.qk")
+        sm = b.softmax(qk, causal=causal, tag=f"{tag}.h{i}.softmax")
+        z_heads.append(b.matmul(sm, v, tag=f"{tag}.h{i}.av"))
+    z = b.concat(z_heads, tag=f"{tag}.merge_heads")
+    wo = b.param(("blocks", "wo"), (A * hd, H), layer=l)
+    return b.matmul(z, wo, tag=f"{tag}.attn.out")
+
+
+def _bert_layer(b: GraphBuilder, x: int, l: int, *, S: int, H: int, A: int,
+                KV: int, hd: int, F: int, eps: float, qkv_bias: bool,
+                mlp_bias: bool, tag: str) -> int:
+    proj = _attention(b, x, l, S=S, H=H, A=A, KV=KV, hd=hd,
+                      qkv_bias=qkv_bias, causal=False, rope_theta=None,
+                      tag=tag)
+    res = b.add(x, proj, tag=f"{tag}.res_a")
+    ln_a = b.layernorm(res, b.param(("blocks", "ln1", "gamma"), (H,), layer=l),
+                       b.param(("blocks", "ln1", "beta"), (H,), layer=l),
+                       eps=eps, tag=f"{tag}.ln_a")
+    b1 = (b.param(("blocks", "mlp", "b1"), (F,), layer=l)
+          if mlp_bias else None)
+    ff1 = b.matmul(ln_a, b.param(("blocks", "mlp", "w1"), (H, F), layer=l),
+                   bias=b1, tag=f"{tag}.ff1")
+    gelu = b.act(ff1, "gelu", tag=f"{tag}.gelu")
+    b2 = (b.param(("blocks", "mlp", "b2"), (H,), layer=l)
+          if mlp_bias else None)
+    ff2 = b.matmul(gelu, b.param(("blocks", "mlp", "w2"), (F, H), layer=l),
+                   bias=b2, tag=f"{tag}.ff2")
+    res2 = b.add(ln_a, ff2, tag=f"{tag}.res_b")
+    return b.layernorm(res2,
+                       b.param(("blocks", "ln2", "gamma"), (H,), layer=l),
+                       b.param(("blocks", "ln2", "beta"), (H,), layer=l),
+                       eps=eps, tag=f"{tag}.ln_b")
+
+
+def _trace_bert(cfg: ModelConfig, seq: int, layers: Optional[int],
+                include_embed: bool) -> Graph:
+    b = GraphBuilder()
+    S, H, A, KV = seq, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd, F = cfg.head_dim, cfg.d_ff
+    L = layers if layers is not None else cfg.num_layers
+    if include_embed:
+        tokens = b.input("tokens", (S,), dtype="int32")
+        x = b.embed(tokens, b.param(("embed",), (cfg.vocab_size, H)),
+                    tag="embed.tok")
+        x = b.add(x, b.param(("pos_embed",), (S, H), rows=(0, S)),
+                  tag="embed.pos")
+        x = b.add(x, b.param(("type_embed",), (H,), index=0),
+                  tag="embed.type")
+        x = b.layernorm(x, b.param(("ln_embed", "gamma"), (H,)),
+                        b.param(("ln_embed", "beta"), (H,)),
+                        eps=1e-12, tag="embed.ln")
+    else:
+        x = b.input("x", (S, H))
+    for l in range(L):
+        x = _bert_layer(b, x, l, S=S, H=H, A=A, KV=KV, hd=hd, F=F,
+                        eps=1e-12, qkv_bias=cfg.qkv_bias,
+                        mlp_bias=cfg.mlp_bias, tag=f"enc{l}")
+    b.output(x)
+    return b.g
+
+
+# ---------------------------------------------------------------------------
+# Dense decoder family (pre-norm GQA + gated/plain MLP)
+# ---------------------------------------------------------------------------
+
+def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
+                 include_embed: bool) -> Graph:
+    for feat, msg in (
+            (cfg.moe is not None, "MoE routing"),
+            (cfg.attention != "full", f"{cfg.attention!r} attention streams"),
+            (cfg.parallel_block, "parallel attn+mlp blocks"),
+            (cfg.qk_norm, "per-head qk-norm"),
+            (cfg.logit_softcap > 0, "logit softcapping"),
+            (cfg.ssm is not None, "SSM recurrences"),
+            (cfg.rope not in ("standard", "none"),
+             f"{cfg.rope!r} positional encoding"),
+    ):
+        if feat:
+            raise CompileError(
+                f"npec cannot lower {msg} yet for {cfg.name!r} "
+                "(see ROADMAP.md Open items)")
+    b = GraphBuilder()
+    S, H, A, KV = seq, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd, F = cfg.head_dim, cfg.d_ff
+    L = layers if layers is not None else cfg.num_layers
+    theta = cfg.rope_theta if cfg.rope == "standard" else None
+
+    def norm(x, path, layer, tag):
+        # mirror models/common.py::apply_norm at its default eps=1e-6,
+        # including the beta parameter when the config carries one
+        gamma = b.param(path + ("gamma",), (H,), layer=layer)
+        if cfg.norm == "layernorm":
+            beta = (b.param(path + ("beta",), (H,), layer=layer)
+                    if cfg.norm_bias else None)
+            return b.layernorm(x, gamma, beta, eps=1e-6, tag=tag)
+        return b.rmsnorm(x, gamma, eps=1e-6, tag=tag)
+    if include_embed:
+        tokens = b.input("tokens", (S,), dtype="int32")
+        x = b.embed(tokens, b.param(("embed",), (cfg.vocab_size, H)),
+                    tag="embed.tok")
+    else:
+        x = b.input("x", (S, H))
+    for l in range(L):
+        tag = f"blk{l}"
+        h = norm(x, ("blocks", "ln1"), l, f"{tag}.ln1")
+        attn = _attention(b, h, l, S=S, H=H, A=A, KV=KV, hd=hd,
+                          qkv_bias=cfg.qkv_bias, causal=cfg.causal,
+                          rope_theta=theta, tag=tag)
+        x = b.add(x, attn, tag=f"{tag}.res_a")
+        h2 = norm(x, ("blocks", "ln2"), l, f"{tag}.ln2")
+        if cfg.mlp_type == "gated":
+            gt = b.act(b.matmul(
+                h2, b.param(("blocks", "mlp", "wg"), (H, F), layer=l),
+                tag=f"{tag}.ffg"), cfg.activation, tag=f"{tag}.act")
+            up = b.matmul(h2, b.param(("blocks", "mlp", "wu"), (H, F),
+                                      layer=l), tag=f"{tag}.ffu")
+            hmid = b.mul(gt, up, tag=f"{tag}.gate")
+            down = b.matmul(hmid, b.param(("blocks", "mlp", "wd"), (F, H),
+                                          layer=l), tag=f"{tag}.ffd")
+        else:
+            b1 = (b.param(("blocks", "mlp", "b1"), (F,), layer=l)
+                  if cfg.mlp_bias else None)
+            b2 = (b.param(("blocks", "mlp", "b2"), (H,), layer=l)
+                  if cfg.mlp_bias else None)
+            hmid = b.act(b.matmul(
+                h2, b.param(("blocks", "mlp", "w1"), (H, F), layer=l),
+                bias=b1, tag=f"{tag}.ff1"), cfg.activation,
+                tag=f"{tag}.act")
+            down = b.matmul(hmid, b.param(("blocks", "mlp", "w2"), (F, H),
+                                          layer=l), bias=b2,
+                            tag=f"{tag}.ff2")
+        x = b.add(x, down, tag=f"{tag}.res_b")
+    x = norm(x, ("ln_f",), None, "ln_f")
+    b.output(x)
+    return b.g
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+_TRACERS = {"bert": _trace_bert, "dense": _trace_dense}
+
+
+def trace_model(cfg: ModelConfig, seq: int, *, layers: Optional[int] = None,
+                include_embed: bool = True) -> Graph:
+    """Emit the IR graph for `cfg` at sequence length `seq`.
+
+    layers=N truncates the stack (cycle models usually compile one layer
+    and scale); include_embed=False starts from a hidden-state input.
+    """
+    tracer = _TRACERS.get(cfg.family)
+    if tracer is None:
+        raise CompileError(
+            f"npec has no tracer for family {cfg.family!r} ({cfg.name!r}) "
+            "yet (see ROADMAP.md Open items)")
+    return tracer(cfg, seq, layers, include_embed)
+
+
+def trace_bert_shape(shape, *, layers: int = 1) -> Graph:
+    """Encoder-only graph from a raw `repro.core.cycles.BertShape` — the
+    dims-only path `core.cycles` uses as its npec backend (no ModelConfig,
+    no biases: bias adds are folded and cost nothing, so the instruction
+    stream is cycle-identical either way)."""
+    b = GraphBuilder()
+    x = b.input("x", (shape.seq, shape.hidden))
+    for l in range(layers):
+        x = _bert_layer(b, x, l, S=shape.seq, H=shape.hidden,
+                        A=shape.heads, KV=shape.heads, hd=shape.head_dim,
+                        F=shape.d_ff, eps=1e-12, qkv_bias=False,
+                        mlp_bias=False, tag=f"enc{l}")
+    b.output(x)
+    return b.g
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke: trace + compile + (for BERT) cross-check vs the hand-built
+# program and the jnp model
+# ---------------------------------------------------------------------------
+
+def _check_bert(args) -> None:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import cycles as cy
+    from repro.core.overlay import NPEHardware
+    from repro.models import bert as bert_mod
+    from repro.models import common as cm
+    from repro.models import registry
+    from repro.npec import compile_model, execute, greedy_schedule
+
+    hw = NPEHardware(vrwidth=args.vrwidth)
+    cfg = get_config(args.model)
+    compiled = compile_model(cfg, args.seq, hw, bits=args.bits,
+                             include_embed=False)
+    stats = greedy_schedule(compiled)
+    per_enc = stats["total_cycles"] / cfg.num_layers
+    hand = cy.schedule(cy.build_encoder_program(
+        hw, cy.BertShape(seq=args.seq, hidden=cfg.d_model,
+                         heads=cfg.num_heads, d_ff=cfg.d_ff,
+                         encoders=cfg.num_layers), args.bits))
+    dev = abs(per_enc - hand["total_cycles"]) / hand["total_cycles"]
+    print(f"compiled {len(compiled.instrs)} instrs "
+          f"({compiled.counts_by_unit()}); "
+          f"{per_enc:.0f} cycles/encoder vs hand-built "
+          f"{hand['total_cycles']:.0f} ({100 * dev:.2f}% deviation)")
+    assert dev < 0.01, "compiled schedule deviates >1% from hand-built"
+
+    # functional: smoke-scale executor vs the jnp encoder
+    import dataclasses
+    scfg = dataclasses.replace(get_config(args.model, smoke=True),
+                               dtype="float32")
+    params = registry.init_params(scfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                scfg.vocab_size)
+    sc = compile_model(scfg, 32, hw, bits=args.bits)
+    got = execute(sc, params, {"tokens": tokens})[0]
+    want = bert_mod.encode(scfg, cm.cast_tree(params, scfg.dtype), tokens)
+    err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
+    print(f"functional executor vs jnp encoder: max|err| = {err:.2e}")
+    assert err < 1e-2, "executor diverges from the jnp model"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="bert_base")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--bits", type=int, default=16)
+    ap.add_argument("--vrwidth", type=int, default=1024)
+    ap.add_argument("--check", action="store_true",
+                    help="cross-check vs the hand-built program + jnp model")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.core.overlay import NPEHardware
+    from repro.npec import compile_model, greedy_schedule
+
+    cfg = get_config(args.model)
+    hw = NPEHardware(vrwidth=args.vrwidth)
+    compiled = compile_model(cfg, args.seq, hw, bits=args.bits,
+                             include_embed=False)
+    stats = greedy_schedule(compiled)
+    print(f"{args.model}: {compiled.graph!r}")
+    print(f"lowered to {len(compiled.instrs)} instrs "
+          f"{compiled.counts_by_unit()}; scheduled "
+          f"{stats['total_cycles']:.0f} cycles "
+          f"(MMU util {100 * stats['mmu_util']:.1f}%)")
+    if args.check:
+        if cfg.family != "bert":
+            raise SystemExit("--check requires a BERT-family model")
+        _check_bert(args)
+        print("npec check OK")
+
+
+if __name__ == "__main__":
+    main()

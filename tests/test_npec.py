@@ -1,0 +1,282 @@
+"""NPE compiler validation (repro.npec).
+
+Three gates:
+  * golden program — compiled BERT-base matches the hand-built encoder
+    program (core.cycles.build_encoder_program) on per-unit instruction
+    counts, busy cycles, and scheduled latency (<1%), across NVU widths,
+    sequence lengths, and MMU precisions;
+  * functional executor — compiled softmax/layernorm/GELU streams agree
+    with core.nvu float-mode outputs (<=1e-3), and a compiled BERT smoke
+    model matches the jnp encoder end-to-end (<=1e-2, float and NPE mode);
+  * micro model — the VLIW bundling / register allocation in npec.lower
+    reproduces overlay.nvu_cycles(source="model") exactly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import cycles as cy
+from repro.core.overlay import NPEHardware, nvu_cycles
+from repro import npec
+
+
+HW = NPEHardware(vrwidth=1024)
+
+
+# ---------------------------------------------------------------------------
+# Golden program regression (vs the hand-built builder)
+# ---------------------------------------------------------------------------
+
+def test_golden_bert_base_seq512_counts_and_cycles():
+    """ISSUE gate: BERT-base at seq 512 — instruction counts per unit and
+    scheduled cycle totals match the hand-built program within 1%."""
+    sh = cy.BertShape(seq=512)
+    hand_prog = cy.build_encoder_program(HW, sh, 16)
+    hand = cy.schedule(hand_prog)
+    hand_counts = {}
+    for ins in hand_prog.instrs:
+        hand_counts[ins.unit] = hand_counts.get(ins.unit, 0) + 1
+
+    compiled = npec.compile_bert_shape(HW, sh, 16)
+    assert compiled.counts_by_unit() == hand_counts == {"MMU": 63, "NVU": 15}
+    busy = compiled.busy_by_unit()
+    assert busy["MMU"] == hand["mmu_busy"]
+    assert busy["NVU"] == hand["nvu_busy"]
+    greedy = npec.greedy_schedule(compiled)
+    dev = abs(greedy["total_cycles"] - hand["total_cycles"])
+    assert dev / hand["total_cycles"] < 0.01
+
+
+@pytest.mark.parametrize("vr", [256, 512, 1024, 2048])
+@pytest.mark.parametrize("seq", [64, 128, 256, 512])
+@pytest.mark.parametrize("bits", [8, 16])
+def test_compiled_schedule_never_worse_than_hand(vr, seq, bits):
+    """The compiler's greedy scheduler must stay within 1% of the
+    hand-pipelined program everywhere — and never lose to it."""
+    hw = NPEHardware(vrwidth=vr)
+    sh = cy.BertShape(seq=seq)
+    hand = cy.schedule(cy.build_encoder_program(hw, sh, bits))
+    greedy = npec.greedy_schedule(npec.compile_bert_shape(hw, sh, bits))
+    assert greedy["total_cycles"] <= hand["total_cycles"] * 1.01
+    assert greedy["total_cycles"] >= hand["total_cycles"] * 0.99
+
+
+def test_inference_cycles_npec_backend():
+    """Acceptance: core.cycles.inference_cycles via the npec backend
+    matches the hand-built DAG model within 1%."""
+    for bits in (8, 16):
+        hand = cy.inference_cycles(HW, cy.BertShape(seq=512), bits,
+                                   model="dag")
+        comp = cy.inference_cycles(HW, cy.BertShape(seq=512), bits,
+                                   model="dag", backend="npec")
+        dev = abs(comp["total_cycles"] - hand["total_cycles"])
+        assert dev / hand["total_cycles"] < 0.01
+
+
+def test_no_overlap_ablation_is_strictly_serial():
+    """overlap=False on the npec backend = sum of per-unit busy cycles
+    (no matmul under a pending nonlinearity), an upper bound on (and
+    within 2.5% of) the hand builder's ablation."""
+    for bits in (8, 16):
+        sh = cy.BertShape(seq=512)
+        compiled = npec.compile_bert_shape(HW, sh, bits)
+        serial = npec.greedy_schedule(compiled, overlap=False)
+        busy = compiled.busy_by_unit()
+        assert serial["total_cycles"] == busy["MMU"] + busy["NVU"]
+        hand = cy.schedule(cy.build_encoder_program(HW, sh, bits,
+                                                    overlap=False))
+        assert hand["total_cycles"] <= serial["total_cycles"]
+        assert serial["total_cycles"] <= hand["total_cycles"] * 1.025
+        overlapped = npec.greedy_schedule(compiled)
+        assert overlapped["total_cycles"] < serial["total_cycles"]
+
+
+def test_issue_order_reproduces_greedy_timeline():
+    """Freezing the greedy issue order into program order and re-running
+    the core in-order list scheduler yields the same latency."""
+    compiled = npec.compile_bert_shape(HW, cy.BertShape(seq=256), 16)
+    greedy = npec.greedy_schedule(compiled)
+    frozen = cy.schedule(npec.issue_order(compiled))
+    assert frozen["total_cycles"] == greedy["total_cycles"]
+
+
+def test_full_config_trace_scales_with_layers():
+    """Tracing the full 12-layer bert_base config equals 12x one encoder."""
+    from repro.configs import get_config
+    cfg = get_config("bert_base")
+    compiled = npec.compile_model(cfg, 512, HW, bits=16, include_embed=False)
+    assert compiled.counts_by_unit() == {"MMU": 63 * 12, "NVU": 15 * 12}
+    one = npec.greedy_schedule(npec.compile_bert_shape(
+        HW, cy.BertShape(seq=512), 16))
+    full = npec.greedy_schedule(compiled)
+    assert full["total_cycles"] == pytest.approx(
+        12 * one["total_cycles"], rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# VLIW bundling / register allocation consistency
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vr", [256, 512, 1024, 2048])
+@pytest.mark.parametrize("routine", ["softmax", "layernorm", "gelu"])
+def test_vliw_microprogram_matches_cost_model(vr, routine):
+    hw = NPEHardware(vrwidth=vr)
+    micro = npec.nvu_microprogram(routine, hw)
+    for n in (512, 1000, 4096):
+        assert micro.cycles(hw, n) == nvu_cycles(hw, routine, n, "model")
+    assert 0 < micro.regs_used <= hw.num_vregs
+    assert micro.unroll >= 2          # room to software-pipeline chunks
+    for p in micro.passes:
+        for b in p.bundles:
+            slots = {"lsu": 0, "vcu": 0, "scu": 0}
+            for op in b.ops:
+                slots[op.slot] += 1
+            assert slots["lsu"] <= hw.lsu_issue
+            assert slots["vcu"] <= hw.vcu_issue
+            assert slots["scu"] <= hw.scu_issue
+
+
+def test_matmul_tiling_geometry():
+    t = npec.tile_matmul(HW, 512, 768, 64, 16)       # MMU-aligned
+    assert t["efficiency"] == 1.0
+    assert t["row_tiles"] == 4 and t["k_tiles"] == 48
+    ragged = npec.tile_matmul(HW, 100, 100, 100, 16)  # pays padding
+    assert ragged["efficiency"] < 1.0
+    assert ragged["tiled_cycles"] >= ragged["ideal_cycles"]
+
+
+# ---------------------------------------------------------------------------
+# Functional executor
+# ---------------------------------------------------------------------------
+
+def _single_op_graph(op, shape, **attrs):
+    from repro.npec.ir import GraphBuilder
+    b = GraphBuilder()
+    x = b.input("x", shape)
+    if op == "softmax":
+        y = b.softmax(x, **attrs)
+    elif op == "layernorm":
+        g = b.input("gamma", (shape[-1],))
+        bt = b.input("beta", (shape[-1],))
+        y = b.layernorm(x, g, bt, **attrs)
+    elif op == "act":
+        y = b.act(x, attrs.pop("fn"))
+    b.output(y)
+    return b.g
+
+
+def test_exec_softmax_stream_matches_nvu():
+    import jax
+    from repro.core import nvu
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64)) * 3
+    g = _single_op_graph("softmax", (8, 64))
+    got = npec.execute(g, {}, {"x": x}, use_pwl=True)[0]
+    want = nvu.nvu_softmax(x)
+    assert float(np.max(np.abs(np.asarray(got) - np.asarray(want)))) <= 1e-3
+
+
+def test_exec_layernorm_stream_matches_nvu():
+    import jax
+    from repro.core import nvu
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(ks[0], (16, 128)) * 2 + 0.5
+    gamma = 1 + 0.1 * jax.random.normal(ks[1], (128,))
+    beta = 0.1 * jax.random.normal(ks[2], (128,))
+    g = _single_op_graph("layernorm", (16, 128), eps=1e-5)
+    got = npec.execute(g, {}, {"x": x, "gamma": gamma, "beta": beta},
+                       use_pwl=True)[0]
+    want = nvu.nvu_layernorm(x, gamma, beta, eps=1e-5)
+    assert float(np.max(np.abs(np.asarray(got) - np.asarray(want)))) <= 1e-3
+
+
+def test_exec_gelu_stream_matches_nvu():
+    import jax
+    from repro.core import nvu
+    x = jax.random.normal(jax.random.PRNGKey(2), (512,)) * 4
+    g = _single_op_graph("act", (512,), fn="gelu")
+    got = npec.execute(g, {}, {"x": x}, use_pwl=True)[0]
+    want = nvu.nvu_gelu(x)
+    assert float(np.max(np.abs(np.asarray(got) - np.asarray(want)))) <= 1e-3
+
+
+def _smoke_setup():
+    import jax
+    from repro.configs import get_config
+    from repro.models import registry
+    cfg = dataclasses.replace(get_config("bert_base", smoke=True),
+                              dtype="float32")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg.vocab_size)
+    return cfg, params, tokens
+
+
+def test_exec_bert_smoke_matches_jnp_encoder():
+    """Acceptance: compiled-stream execution matches the jnp BERT encoder
+    on a random batch to <=1e-2 max-abs error (float mode)."""
+    from repro.models import bert as bert_mod
+    from repro.models import common as cm
+    cfg, params, tokens = _smoke_setup()
+    compiled = npec.compile_model(cfg, 32, HW, bits=16)
+    res = npec.execute(compiled, params, {"tokens": tokens}, cfg=cfg)
+    want = bert_mod.encode(cfg, cm.cast_tree(params, cfg.dtype), tokens)
+    err = float(np.max(np.abs(np.asarray(res[0]) - np.asarray(want))))
+    assert err <= 1e-2, err
+    assert res.peak_live_bytes > 0
+
+
+def test_exec_bert_smoke_npe_mode():
+    """Same stream executed in NPE mode (int8 MMU + PWL NVU) tracks the
+    NPE-mode jnp encoder."""
+    from repro.models import bert as bert_mod
+    from repro.models import common as cm
+    cfg, params, tokens = _smoke_setup()
+    ncfg = cfg.with_npe(quant_bits=8, segments=16)
+    compiled = npec.compile_model(cfg, 32, HW, bits=8)
+    res = npec.execute(compiled, params, {"tokens": tokens}, cfg=ncfg)
+    want = bert_mod.encode(ncfg, cm.cast_tree(params, "float32"), tokens)
+    err = float(np.max(np.abs(np.asarray(res[0]) - np.asarray(want))))
+    assert err <= 1e-2, err
+
+
+# ---------------------------------------------------------------------------
+# Other families / error paths
+# ---------------------------------------------------------------------------
+
+def test_dense_family_compiles_and_schedules():
+    from repro.configs import get_config
+    cfg = get_config("glm4_9b", smoke=True)
+    compiled = npec.compile_model(cfg, 64, HW, bits=8, layers=2,
+                                  include_embed=False)
+    stats = npec.greedy_schedule(compiled)
+    assert stats["total_cycles"] > 0
+    counts = compiled.counts_by_unit()
+    assert counts["MMU"] > 0 and counts["NVU"] > 0
+
+
+def test_dense_layernorm_carries_beta_and_matches_model_eps():
+    """Layernorm dense models must trace with the beta parameter and the
+    eps models/common.py::apply_norm actually uses (1e-6 default)."""
+    from repro.configs import get_config
+    cfg = dataclasses.replace(get_config("glm4_9b", smoke=True),
+                              norm="layernorm", norm_bias=True)
+    g = npec.trace_model(cfg, 32, layers=1, include_embed=False)
+    lns = [n for n in g.nodes if n.op == "layernorm"]
+    assert lns
+    for n in lns:
+        assert len(n.inputs) == 3          # x, gamma, beta
+        assert n.attrs["eps"] == 1e-6
+
+
+def test_unsupported_family_raises_compile_error():
+    from repro.configs import get_config
+    with pytest.raises(npec.CompileError):
+        npec.trace_model(get_config("rwkv6_3b", smoke=True), 64)
+    with pytest.raises(npec.CompileError):
+        npec.trace_model(get_config("granite_moe_1b_a400m", smoke=True), 64)
+
+
+def test_cli_trace_runs():
+    from repro.npec import trace as trace_cli
+    trace_cli.main(["--model", "bert_base", "--seq", "64"])
