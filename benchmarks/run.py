@@ -3,9 +3,11 @@
 Prints one CSV block per paper table (name,us_per_call,derived columns) and
 a wall-clock microbench of every Pallas kernel (interpret mode on CPU —
 numbers validate plumbing, not TPU perf; TPU perf is the §Roofline story).
-Also writes a machine-readable record comparing npec-compiled vs hand-built
-BERT cycle counts per (seq, bits) to results/npec_cycles.json, so PRs have
-a compiler-perf trajectory to track.
+Also writes machine-readable records so PRs have a compiler-perf
+trajectory to track: npec-compiled vs hand-built BERT cycle counts per
+(seq, bits) to results/npec_cycles.json, and autoregressive prefill+decode
+throughput from compiled KV-cache streams to
+results/npec_decode_cycles.json (guarded by tests/test_npec_decode.py).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -68,14 +70,16 @@ def bench_kernels(quick: bool = False):
     return rows
 
 
-def write_npec_record(path: Path, rows=None) -> None:
-    """Persist the compiled-vs-hand-built cycle comparison as JSON."""
+def write_npec_record(path: Path, rows=None,
+                      schema: str = "npec_cycles/v1") -> None:
+    """Persist a compiler cycle record (npec-vs-hand or decode) as JSON."""
     if rows is None:
         from benchmarks import paper_tables
-        rows = paper_tables.npec_vs_hand()
+        rows = (paper_tables.npec_decode() if "decode" in schema
+                else paper_tables.npec_vs_hand())
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(
-        {"schema": "npec_cycles/v1", "rows": rows}, indent=2) + "\n")
+        {"schema": schema, "rows": rows}, indent=2) + "\n")
     print(f"\nwrote {path} ({len(rows)} rows)")
 
 
@@ -85,10 +89,13 @@ def main(argv=None):
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--json-out", default="results/npec_cycles.json",
                     help="npec-vs-hand cycle record ('' disables)")
+    ap.add_argument("--json-out-decode",
+                    default="results/npec_decode_cycles.json",
+                    help="autoregressive decode cycle record ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_tables
-    npec_rows = None
+    npec_rows = decode_rows = None
     for name, fn in paper_tables.ALL.items():
         t0 = time.perf_counter()
         rows = fn()
@@ -96,9 +103,14 @@ def main(argv=None):
         _print_table(f"{name}  ({dt:.2f}s)", rows)
         if name == "npec_vs_hand":
             npec_rows = rows
+        elif name == "npec_decode":
+            decode_rows = rows
 
     if args.json_out:
         write_npec_record(Path(args.json_out), npec_rows)
+    if args.json_out_decode:
+        write_npec_record(Path(args.json_out_decode), decode_rows,
+                          schema="npec_decode_cycles/v1")
 
     if not args.skip_kernels:
         _print_table("kernel_microbench", bench_kernels(args.quick))

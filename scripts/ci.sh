@@ -8,5 +8,30 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 
 # fast npec smoke: trace -> lower -> schedule -> exec, cross-checked
-# against the hand-built program and the jnp model
+# against the hand-built program, the jnp model, and a decode rollout
 python -m repro.npec.trace --model bert_base --check
+
+# docs drift gate: the ISA reference must cite the hardware constants
+# actually defined in core/overlay.py (PE count, multiplier counts,
+# vector register file, VLIW slot mix, default VRWIDTH)
+python - <<'PY'
+from pathlib import Path
+from repro.core.overlay import NPEHardware
+
+hw = NPEHardware()
+doc = Path("docs/isa.md").read_text()
+needed = {
+    "MMU PE count": f"{hw.mmu_pes} PEs",
+    "int16 multipliers": str(hw.mmu_mults_16),
+    "int8 multipliers": str(hw.mmu_mults_8),
+    "vector register file": f"{hw.num_vregs} vector registers",
+    "VLIW slot mix": f"{hw.lsu_issue} LSU + {hw.vcu_issue} VCU + "
+                     f"{hw.scu_issue} SCU",
+    "default vrwidth": str(hw.vrwidth),
+}
+missing = [k for k, token in needed.items() if token not in doc]
+if missing:
+    raise SystemExit(
+        f"docs/isa.md out of sync with core/overlay.py — missing {missing}")
+print("docs/isa.md constants check OK")
+PY

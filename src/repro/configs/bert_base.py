@@ -1,8 +1,10 @@
 """BERT-base [arXiv:1810.04805] — the paper's own benchmark network
 (L=12, A=12, H=768).  Post-norm encoder, learned positions, GELU.
-Encoder-only: no decode step; decode/long shapes are N/A.
-`config().with_npe()` is the paper's NPE configuration (int8 MMU +
-PWL NVU) validated in tests/test_npe_accuracy.py."""
+Bidirectional `apply`/`encode`; `models/bert.decode_step` additionally
+provides the *causal* incremental serving variant the npec decode
+streams compile to.  `config().with_npe()` is the paper's NPE
+configuration (int8 MMU + PWL NVU) validated in
+tests/test_npe_accuracy.py."""
 from repro.config import ModelConfig
 from repro.configs import pad_vocab, shrink
 

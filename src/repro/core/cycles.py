@@ -209,6 +209,64 @@ def inference_time_ms(hw: NPEHardware, shape: BertShape, bits: int,
     return 1e3 * c / hw.clock_hz
 
 
+# ---------------------------------------------------------------------------
+# Autoregressive serving (decode steps over a KV cache) — npec-compiled
+# ---------------------------------------------------------------------------
+
+def decode_step_cycles(hw: NPEHardware, shape: BertShape, cache_len: int,
+                       bits: int, nvu_source: str = "paper") -> Dict[str, float]:
+    """Cycles for ONE decode step with `cache_len` tokens resident (the new
+    token included): skinny (1, H) projections, a (1, t) QK^T over the
+    cache, pos-masked 1xt softmax, and the V reduction, compiled through
+    repro.npec (there is no hand-built decode program — the compiler IS the
+    source).  One layer is compiled and scaled by `shape.encoders`
+    (per-layer decode streams are identical; like the prefill tables, the
+    dims-only path has no embedding/logit head).  `mmu_efficiency` reports
+    what the 128-PE-row geometry actually sustains on 1-row matmuls."""
+    from repro import npec
+    compiled = npec.compile_decode_bert_shape(hw, shape, cache_len, bits,
+                                              nvu_source=nvu_source,
+                                              layers=1)
+    stats = npec.greedy_schedule(compiled)
+    tiling = compiled.mmu_tiling_summary()
+    return {
+        "total_cycles": stats["total_cycles"] * shape.encoders,
+        "mmu_busy": stats["mmu_busy"] * shape.encoders,
+        "nvu_busy": stats["nvu_busy"] * shape.encoders,
+        "mmu_util": stats["mmu_util"],
+        "mmu_efficiency": tiling["efficiency"],
+    }
+
+
+def autoregressive_cycles(hw: NPEHardware, shape: BertShape, new_tokens: int,
+                          bits: int, nvu_source: str = "paper") -> Dict[str, float]:
+    """Prefill (`shape.seq` tokens through the encoder program) + decode
+    with ONE compiled stream at cache capacity shape.seq + new_tokens —
+    the deterministic execution model the overlay actually runs
+    (docs/isa.md): the stream is loaded once and re-executed per token,
+    so every step charges the full-capacity QK^T/softmax with `pos` only
+    masking.  (A serving system that re-lowers length-specialized streams
+    per bucket would land between this and `decode_step_cycles` at the
+    running length.)  Returns cycle totals and the tokens/sec numbers
+    serving tables quote: `decode_tok_s` (steady-state generation rate)
+    and `e2e_tok_s` (generated tokens over the full prefill+decode wall
+    clock)."""
+    prefill = inference_cycles(hw, shape, bits, nvu_source)["total_cycles"]
+    step = decode_step_cycles(hw, shape, shape.seq + new_tokens, bits,
+                              nvu_source)
+    decode = step["total_cycles"] * new_tokens
+    total = prefill + decode
+    return {
+        "prefill_cycles": prefill,
+        "decode_cycles": decode,
+        "total_cycles": total,
+        "cycles_per_token": step["total_cycles"],
+        "decode_tok_s": (new_tokens * hw.clock_hz / decode) if decode else 0.0,
+        "e2e_tok_s": new_tokens * hw.clock_hz / total if total else 0.0,
+        "mmu_efficiency": step["mmu_efficiency"],
+    }
+
+
 def throughput_inf_s(hw: NPEHardware, shape: BertShape, bits: int,
                      nvu_source: str = "paper") -> float:
     return 1e3 / inference_time_ms(hw, shape, bits, nvu_source)

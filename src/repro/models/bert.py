@@ -9,6 +9,13 @@ nonlinearity (softmax, both layernorms, GELU) through the unified PWL NVU —
 the configuration whose end-to-end accuracy the paper's §5.5 simulation
 validates.  examples/serve_bert.py and tests/test_npe_accuracy.py compare
 this against the float model.
+
+`decode_step` is the *causal* incremental serving variant (one token over
+a KV cache).  It is NOT equivalent to the bidirectional `apply`/`encode`
+— BERT attends both ways — but it is the stream an overlay runs when
+serving BERT-style stacks autoregressively, and the reference the npec
+decode compiler validates its bert-family streams against
+(tests/test_npec_decode.py).
 """
 from __future__ import annotations
 
@@ -64,6 +71,48 @@ def apply(cfg: ModelConfig, params, tokens, positions=None, remat: bool = True,
     fn = jax.checkpoint(layer) if remat else layer
     x, _ = jax.lax.scan(fn, x, params["blocks"])
     return cm.logits_out(cfg, x, params["embed"].T)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    """Full-attention KV cache for every layer (BERT has no window layers)."""
+    return {"full": cm.kv_cache_specs(cfg, cfg.num_layers, batch, max_seq)}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens: (B, 1); pos: scalar int32 (current cache length).
+    Returns (logits (B, 1, V), new_cache).
+
+    Causal incremental encoding: post-norm blocks, the new k/v appended at
+    `pos`, attention masked to slots <= pos.  See the module docstring —
+    this deliberately differs from the bidirectional `apply`.
+    """
+    b, s = tokens.shape
+    x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["pos_embed"], pos, s, 0)[None].astype(x.dtype)
+    x = x + params["type_embed"][0][None, None].astype(x.dtype)
+    x = cm.apply_norm(cfg, params["ln_embed"], x, eps=1e-12)
+    positions = jnp.full((b, s), pos, jnp.int32)
+    cf = cache["full"]
+
+    def layer_body(carry, operands):
+        xc, ck, cv = carry
+        p, li = operands
+        a, (nk, nv) = tf._attn(cfg, p, xc, positions,
+                               cache=(ck[li], cv[li]), pos=pos,
+                               causal_over_cache=True)
+        ck = ck.at[li].set(nk)
+        cv = cv.at[li].set(nv)
+        xc = cm.apply_norm(cfg, p["ln1"], xc + a, eps=1e-12)
+        m = tf._mlp(cfg, p["mlp"], xc)
+        xc = cm.apply_norm(cfg, p["ln2"], xc + m, eps=1e-12)
+        return (xc, ck, cv), None
+
+    (x, ck, cv), _ = jax.lax.scan(
+        layer_body, (x, cf["k"], cf["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers, dtype=jnp.int32)))
+    logits = cm.logits_out(cfg, x, params["embed"].T)
+    return logits, {"full": {"k": ck, "v": cv}}
 
 
 def encode(cfg: ModelConfig, params, tokens):

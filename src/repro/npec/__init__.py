@@ -7,7 +7,10 @@ layer, a four-stage pipeline:
 
     trace    (repro.npec.trace)    ModelConfig -> graph IR: per-head
              matmul / softmax / norm / activation dataflow with shape and
-             dtype metadata, one explicit emitter per model family.
+             dtype metadata, one explicit emitter per model family; both
+             prefill graphs (trace_model) and one-token KV-cache decode
+             graphs (trace_decode — cache-resident tensors, cache-append,
+             pos-masked softmax).
     lower    (repro.npec.lower)    graph IR -> overlay instructions:
              matmuls tiled to the MMU geometry (128 PEs x MAC depth),
              nonlinearities expanded to NVU microprograms with VLIW issue
@@ -21,16 +24,27 @@ layer, a four-stage pipeline:
              instruction stream end-to-end against the jnp model.
 
 Entry points:
-    compile_model(cfg, seq, hw, ...)    trace + lower a registered model.
+    compile_model(cfg, seq, hw, ...)    trace + lower a registered model
+                                        (prefill).
+    compile_decode(cfg, T, hw, ...)     trace + lower a one-token decode
+                                        step over a KV cache of capacity T.
     compile_bert_shape(hw, shape, ...)  dims-only BERT path used as the
                                         `backend="npec"` of core.cycles.
+    compile_decode_bert_shape(...)      dims-only decode step — the cost
+                                        model behind autoregressive
+                                        tokens/sec tables.
     greedy_schedule / issue_order       schedule a CompiledProgram.
-    execute                             run it numerically.
+    execute / DecodeSession             run it numerically (DecodeSession
+                                        carries KV-cache state across
+                                        steps).
 
 Cross-checks: the compiled BERT-base stream matches the hand-built program
 in `core.cycles.build_encoder_program` on per-unit instruction counts and
-scheduled latency (<1%), and its functional execution matches the jnp BERT
-encoder — see tests/test_npec.py.
+scheduled latency (<1%), its functional execution matches the jnp BERT
+encoder, and decode-stream rollouts match models/{transformer,bert}
+decode_step — see tests/test_npec.py and tests/test_npec_decode.py.
+Reference docs: docs/isa.md (the overlay ISA) and docs/compiler.md (the
+pipeline).
 """
 from __future__ import annotations
 
@@ -42,8 +56,9 @@ from repro.npec.ir import Graph, GraphBuilder, Node
 from repro.npec.lower import (CompiledProgram, LoweredInstr, lower,
                               nvu_microprogram, tile_matmul)
 from repro.npec.schedule import greedy_schedule, issue_order
-from repro.npec.trace import (CompileError, trace_bert_shape, trace_model)
-from repro.npec.exec import ExecResult, execute
+from repro.npec.trace import (CompileError, trace_bert_shape, trace_decode,
+                              trace_decode_bert_shape, trace_model)
+from repro.npec.exec import DecodeSession, ExecResult, execute
 
 
 def compile_model(cfg: ModelConfig, seq: int, hw: Optional[NPEHardware] = None,
@@ -63,3 +78,25 @@ def compile_bert_shape(hw: NPEHardware, shape, bits: int,
     """Compile a raw `core.cycles.BertShape` encoder stack (dims only)."""
     return lower(trace_bert_shape(shape, layers=layers), hw, bits=bits,
                  nvu_source=nvu_source)
+
+
+def compile_decode(cfg: ModelConfig, cache_len: int,
+                   hw: Optional[NPEHardware] = None, *, bits: int = 16,
+                   nvu_source: str = "paper", layers: Optional[int] = None,
+                   include_embed: bool = True) -> CompiledProgram:
+    """Trace one decode step of `cfg` over a KV cache of capacity
+    `cache_len` and lower it to the overlay.  Execute statefully with
+    `DecodeSession`."""
+    hw = hw if hw is not None else NPEHardware()
+    return lower(trace_decode(cfg, cache_len, layers=layers,
+                              include_embed=include_embed),
+                 hw, bits=bits, nvu_source=nvu_source)
+
+
+def compile_decode_bert_shape(hw: NPEHardware, shape, cache_len: int,
+                              bits: int, *, nvu_source: str = "paper",
+                              layers: int = 1) -> CompiledProgram:
+    """Compile a dims-only decode step for a `core.cycles.BertShape` —
+    the per-step cost model behind autoregressive serving tables."""
+    return lower(trace_decode_bert_shape(shape, cache_len, layers=layers),
+                 hw, bits=bits, nvu_source=nvu_source)

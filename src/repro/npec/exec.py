@@ -19,6 +19,14 @@ Buffers live in a node-indexed environment and are freed at last use —
 the executor reports the resulting peak live footprint, the quantity the
 overlay's MMEM has to cover (paper §5.2).
 
+Decode streams execute *statefully* through `DecodeSession`: the KV caches
+(`cache` nodes) feed in as persistent MMEM-resident buffers, each step's
+`cache_append` results are collected from `ExecResult.cache_updates` and
+carried into the next step, and the scalar `pos` input advances — so one
+compiled stream, executed t times, reproduces
+`models/transformer.decode_step` / `models/bert.decode_step` rollouts
+(tests/test_npec_decode.py: float 1e-6, NPE mode 5e-3).
+
 Graphs are traced per-sequence; feeds may carry a leading batch axis and
 every op vectorizes over it unchanged.
 """
@@ -42,6 +50,9 @@ class ExecResult:
     outputs: List[jnp.ndarray]
     peak_live_bytes: int
     n_instrs: int
+    # name -> post-step cache value (decode graphs only); DecodeSession
+    # persists these into the next step's feeds
+    cache_updates: Dict[str, jnp.ndarray] = None
 
     def __getitem__(self, i: int) -> jnp.ndarray:
         return self.outputs[i]
@@ -66,11 +77,15 @@ def _resolve_param(params, node: Node) -> jnp.ndarray:
 
 def _matmul(node: Node, a, b, bias, *, weight_resident: bool,
             npe_quant: bool, bits: int):
-    if node.attrs.get("transpose_b"):
+    if weight_resident:
+        # MMU-resident weight (quantizable); a transposed resident weight
+        # (the tied-embedding logits head) is stored transposed, exactly as
+        # models/common.logits_out feeds embed.T to the quantized dense
+        w = jnp.swapaxes(b, -1, -2) if node.attrs.get("transpose_b") else b
+        y = dense_maybe_quant(a, w, None, npe_quant=npe_quant, bits=bits)
+    elif node.attrs.get("transpose_b"):
         y = jnp.einsum("...ik,...jk->...ij", a, b,
                        preferred_element_type=jnp.float32)
-    elif weight_resident:
-        y = dense_maybe_quant(a, b, None, npe_quant=npe_quant, bits=bits)
     else:
         y = jnp.einsum("...ik,...kj->...ij", a, b,
                        preferred_element_type=jnp.float32)
@@ -81,9 +96,12 @@ def _matmul(node: Node, a, b, bias, *, weight_resident: bool,
     return y
 
 
-def _softmax(node: Node, x, *, use_pwl: bool, segments: int):
+def _softmax(node: Node, x, *, pos=None, use_pwl: bool, segments: int):
     where = None
-    if node.attrs.get("causal"):
+    if node.attrs.get("cache_masked"):
+        sk = x.shape[-1]
+        where = jnp.broadcast_to(jnp.arange(sk) <= pos, x.shape)
+    elif node.attrs.get("causal"):
         sq, sk = x.shape[-2], x.shape[-1]
         where = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
         where = jnp.broadcast_to(where, x.shape)
@@ -105,19 +123,20 @@ def _rmsnorm(node: Node, x, gamma, *, use_pwl: bool, segments: int):
     return cm.rmsnorm_exact(x, gamma, eps)
 
 
-def _rope(node: Node, x):
+def _rope(node: Node, x, pos=None):
+    """pos=None rotates row i at position i (prefill); a scalar `pos`
+    rotates every row there (decode: the one new token)."""
     s = x.shape[-2]
     lead = x.shape[:-2]
-    if not lead:                               # add a batch axis for cm.apply_rope
-        x4 = x[None, :, None, :]
-        pos = jnp.arange(s, dtype=jnp.int32)[None]
-        return cm.apply_rope(x4, pos, node.attrs["theta"])[0, :, 0, :]
     b = 1
     for d in lead:
         b *= d
     x4 = x.reshape(b, s, 1, x.shape[-1])
-    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
-    y = cm.apply_rope(x4, pos, node.attrs["theta"])
+    if pos is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    else:
+        positions = jnp.full((b, s), pos, jnp.int32)
+    y = cm.apply_rope(x4, positions, node.attrs["theta"])
     return y.reshape(*lead, s, x.shape[-1])
 
 
@@ -147,6 +166,8 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
             uses[i] += 1
     for o in graph.outputs:
         uses[o] += 1                            # outputs never freed
+    for nid in graph.cache_updates.values():
+        uses[nid] += 1                          # carried into the next step
 
     live = 0
     peak = 0
@@ -181,7 +202,9 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
             put(node.id, _matmul(node, a, b, bias, weight_resident=wres,
                                  npe_quant=npe_quant, bits=bits))
         elif op == "softmax":
-            put(node.id, _softmax(node, get(node.inputs[0]),
+            x = get(node.inputs[0])
+            posv = (get(node.inputs[1]) if len(node.inputs) > 1 else None)
+            put(node.id, _softmax(node, x, pos=posv,
                                   use_pwl=use_pwl, segments=segments))
         elif op == "layernorm":
             x, gamma = get(node.inputs[0]), get(node.inputs[1])
@@ -196,7 +219,9 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
             fn = nvu.activation(node.attrs["fn"], use_pwl, segments)
             put(node.id, fn(get(node.inputs[0])))
         elif op == "rope":
-            put(node.id, _rope(node, get(node.inputs[0])))
+            x = get(node.inputs[0])
+            posv = (get(node.inputs[1]) if len(node.inputs) > 1 else None)
+            put(node.id, _rope(node, x, posv))
         elif op == "add":
             put(node.id, get(node.inputs[0]) + get(node.inputs[1]))
         elif op == "mul":
@@ -204,10 +229,80 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
         elif op == "concat":
             put(node.id, jnp.concatenate([get(i) for i in node.inputs],
                                          axis=node.attrs["axis"]))
+        elif op == "reshape":
+            x = get(node.inputs[0])
+            src = graph.node(node.inputs[0]).shape
+            lead = x.shape[:x.ndim - len(src)]   # preserved batch axes
+            put(node.id, x.reshape(lead + node.shape))
         elif op == "embed":
             tokens, table = get(node.inputs[0]), get(node.inputs[1])
             put(node.id, jnp.take(table, tokens, axis=0))
+        elif op == "cache":
+            put(node.id, jnp.asarray(feeds[node.attrs["name"]],
+                                     jnp.float32))
+        elif op == "cache_append":
+            c = get(node.inputs[0])
+            new = get(node.inputs[1])
+            posv = get(node.inputs[2])
+            cap = node.shape[-2]
+            hit = (jnp.arange(cap, dtype=jnp.int32) == posv)[:, None]
+            put(node.id, jnp.where(hit, new, c))
         else:
             raise NotImplementedError(f"executor has no rule for {op!r}")
 
-    return ExecResult([env[o] for o in graph.outputs], peak, n_instrs)
+    return ExecResult([env[o] for o in graph.outputs], peak, n_instrs,
+                      {name: env[nid]
+                       for name, nid in graph.cache_updates.items()})
+
+
+class DecodeSession:
+    """Stateful execution of a compiled decode stream.
+
+    The software analogue of the overlay serving autoregressively: the
+    instruction stream is compiled ONCE at cache capacity T, the KV caches
+    live across steps (MMEM-resident state), and each `step()` runs the
+    stream at the current `pos` — appending the new k/v, masking softmax to
+    the valid prefix, and advancing the counter.
+
+    `params` is the registry parameter tree; NPE numerics follow `cfg`
+    when given, else the explicit keyword flags (as in `execute`).
+    """
+
+    def __init__(self, compiled: CompiledProgram, params: Any, *,
+                 batch: int = 1, cfg: Optional[ModelConfig] = None,
+                 npe_quant: bool = False, bits: int = 8,
+                 use_pwl: bool = False, segments: int = 16):
+        graph = compiled.graph
+        if not graph.caches:
+            raise ValueError("not a decode graph: no cache nodes "
+                             "(trace with repro.npec.trace.trace_decode)")
+        self.compiled = compiled
+        self.params = params
+        self.cfg = cfg
+        self.kw = dict(npe_quant=npe_quant, bits=bits, use_pwl=use_pwl,
+                       segments=segments)
+        self.caches: Dict[str, jnp.ndarray] = {
+            name: jnp.zeros((batch,) + graph.node(nid).shape, jnp.float32)
+            for name, nid in graph.caches.items()}
+        self.capacity = min(graph.node(nid).shape[-2]
+                            for nid in graph.caches.values())
+        self.pos = 0
+        self._feed_name = next(n for n in graph.inputs if n != "pos")
+
+    def step(self, tokens) -> jnp.ndarray:
+        """Run one decode step.  `tokens`: (B, 1) int32 for full graphs
+        (with embedding/logits head), or a (B, 1, H) hidden-state feed for
+        headless graphs.  Returns the step output ((B, 1, V) logits for
+        full graphs) and advances the cache state."""
+        if self.pos >= self.capacity:
+            raise ValueError(
+                f"KV cache capacity {self.capacity} exhausted at "
+                f"pos={self.pos}; compile a longer stream")
+        feeds: Dict[str, Any] = dict(self.caches)
+        feeds["pos"] = jnp.int32(self.pos)
+        feeds[self._feed_name] = tokens
+        res = execute(self.compiled, self.params, feeds, cfg=self.cfg,
+                      **self.kw)
+        self.caches.update(res.cache_updates)
+        self.pos += 1
+        return res[0]

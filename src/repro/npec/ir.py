@@ -29,7 +29,27 @@ epilogues, never a compute instruction of their own):
                    slice tuples or None), index (single leading row).
   * ``add`` / ``mul``   elementwise (residuals, gated-MLP gating).
   * ``concat``     attrs axis (head merge).
+  * ``reshape``    pure layout change (decode streams flatten a GQA
+                   group's (g, head_dim) attention output into the (1,
+                   g*head_dim) row the output projection consumes).
   * ``embed``      inputs (tokens, table) — MRU gather.
+
+Cache-resident tensors (decode streams, paper's autoregressive serving):
+  * ``cache``         a persistent KV-cache tensor living in MMEM across
+                      decode steps; attrs name.  Registered in
+                      `Graph.caches` so the stateful executor
+                      (repro.npec.exec.DecodeSession) can carry it between
+                      steps.  Shape is the cache *capacity* (T, head_dim).
+  * ``cache_append``  inputs (cache, new, pos) — write the (1, head_dim)
+                      projection into slot `pos` (MWU traffic, folded).
+                      The node's value is the updated cache view; it is
+                      registered in `Graph.cache_updates` under the cache's
+                      name so the executor can persist it.
+
+Decode-step masking: ``softmax`` takes an optional second input — a scalar
+int32 `pos` node — and masks key slots > pos (attr cache_masked); ``rope``
+takes an optional second input rotating every row at position `pos` instead
+of its static row index.
 """
 from __future__ import annotations
 
@@ -37,7 +57,8 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 COMPUTE_OPS = ("matmul", "softmax", "layernorm", "rmsnorm", "act", "rope")
-FOLDED_OPS = ("input", "param", "add", "mul", "concat", "embed")
+FOLDED_OPS = ("input", "param", "add", "mul", "concat", "embed",
+              "reshape", "cache", "cache_append")
 
 
 @dataclass
@@ -58,6 +79,8 @@ class Graph:
         self.nodes: List[Node] = []
         self.inputs: Dict[str, int] = {}      # name -> node id
         self.outputs: List[int] = []
+        self.caches: Dict[str, int] = {}      # name -> cache node id
+        self.cache_updates: Dict[str, int] = {}  # name -> cache_append id
 
     # --- construction ----------------------------------------------------
 
@@ -75,6 +98,12 @@ class Graph:
                   dtype: str = "float32") -> int:
         nid = self.add("input", (), shape, dtype, tag=name, name=name)
         self.inputs[name] = nid
+        return nid
+
+    def add_cache(self, name: str, shape: Tuple[int, ...],
+                  dtype: str = "float32") -> int:
+        nid = self.add("cache", (), shape, dtype, tag=name, name=name)
+        self.caches[name] = nid
         return nid
 
     def mark_output(self, nid: int) -> int:
@@ -136,9 +165,14 @@ class GraphBuilder:
         return self.g.add("matmul", inputs, an.shape[:-2] + (n, m), tag=tag,
                           transpose_b=transpose_b, scale=scale)
 
-    def softmax(self, x, *, causal=False, tag=""):
-        return self.g.add("softmax", (x,), self.g.node(x).shape, tag=tag,
-                          causal=causal)
+    def softmax(self, x, *, causal=False, valid_upto=None, tag=""):
+        """valid_upto: optional scalar int32 node id (`pos`) — key slots
+        with index > pos are masked out (decode over a partial cache)."""
+        if valid_upto is None:
+            return self.g.add("softmax", (x,), self.g.node(x).shape,
+                              tag=tag, causal=causal)
+        return self.g.add("softmax", (x, valid_upto), self.g.node(x).shape,
+                          tag=tag, causal=causal, cache_masked=True)
 
     def layernorm(self, x, gamma, beta=None, *, eps=1e-5, tag=""):
         inputs = (x, gamma) if beta is None else (x, gamma, beta)
@@ -152,9 +186,23 @@ class GraphBuilder:
     def act(self, x, fn: str, tag=""):
         return self.g.add("act", (x,), self.g.node(x).shape, tag=tag, fn=fn)
 
-    def rope(self, x, *, theta=10000.0, tag=""):
-        return self.g.add("rope", (x,), self.g.node(x).shape, tag=tag,
+    def rope(self, x, *, theta=10000.0, pos=None, tag=""):
+        """pos: optional scalar int32 node id — rotate every row at that
+        position (decode step) instead of its static row index."""
+        inputs = (x,) if pos is None else (x, pos)
+        return self.g.add("rope", inputs, self.g.node(x).shape, tag=tag,
                           theta=theta)
+
+    def cache(self, name, shape, dtype="float32"):
+        return self.g.add_cache(name, shape, dtype)
+
+    def cache_append(self, cache, new, pos, tag=""):
+        cn = self.g.node(cache)
+        name = cn.attrs["name"]
+        nid = self.g.add("cache_append", (cache, new, pos), cn.shape,
+                         cn.dtype, tag=tag or f"{name}.append", name=name)
+        self.g.cache_updates[name] = nid
+        return nid
 
     def add(self, a, b, tag=""):
         sa, sb = self.g.node(a).shape, self.g.node(b).shape
@@ -163,6 +211,16 @@ class GraphBuilder:
 
     def mul(self, a, b, tag=""):
         return self.g.add("mul", (a, b), self.g.node(a).shape, tag=tag)
+
+    def reshape(self, x, shape, tag=""):
+        src = self.g.node(x).shape
+        n = m = 1
+        for s in src:
+            n *= s
+        for s in shape:
+            m *= s
+        assert n == m, (src, shape)
+        return self.g.add("reshape", (x,), tuple(shape), tag=tag)
 
     def concat(self, xs, *, axis=-1, tag=""):
         shapes = [self.g.node(x).shape for x in xs]

@@ -18,9 +18,18 @@ Three jobs (paper §5, §6):
    so the micro and macro cost models cannot drift apart.
 
 3. **Dependency resolution** — structural ops (residual adds, head
-   concat, gating muls, embedding gathers) fold into the producing
-   stream's epilogue / MRU traffic, exactly as the hand-built program
-   models them; their consumers inherit the producers' dependencies.
+   concat, gating muls, embedding gathers, and the decode streams'
+   cache / cache_append ops — MMEM-resident state and its MWU write
+   traffic) fold into the producing stream's epilogue / MRU-MWU traffic,
+   exactly as the hand-built program models them; their consumers inherit
+   the producers' dependencies.
+
+Decode streams are dominated by *skinny* matmuls — (1, H) projections
+whose single output row lights up one of the 128 PE rows.  The charged
+cost stays the ideal MAC rate (consistent with the prefill model), and
+`CompiledProgram.mmu_tiling_summary()` reports the ragged 1-row occupancy
+so throughput tables can show what the MMU geometry actually sustains per
+decode step.
 """
 from __future__ import annotations
 
@@ -261,6 +270,26 @@ class CompiledProgram:
         for ins in self.instrs:
             out[ins.unit] = out.get(ins.unit, 0) + ins.cycles
         return out
+
+    def mmu_tiling_summary(self) -> Dict[str, Any]:
+        """Aggregate MMU tiling efficiency: charged (ideal) vs tiled
+        cycles, plus how many matmuls are *skinny* (fewer output rows than
+        the 128 PE rows — every projection in a decode step) and the worst
+        single-matmul efficiency among them."""
+        ideal = tiled = skinny = 0
+        worst = 1.0
+        for ins in self.instrs:
+            if ins.unit != "MMU":
+                continue
+            t = ins.meta["tiling"]
+            ideal += t["ideal_cycles"]
+            tiled += t["tiled_cycles"]
+            if ins.shape[0] < self.hw.mmu_pes:
+                skinny += 1
+                worst = min(worst, t["efficiency"])
+        return dict(ideal_cycles=ideal, tiled_cycles=tiled,
+                    efficiency=(ideal / tiled) if tiled else 1.0,
+                    skinny_matmuls=skinny, worst_skinny_efficiency=worst)
 
 
 def _prod(shape: Tuple[int, ...]) -> int:

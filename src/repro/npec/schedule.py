@@ -19,6 +19,11 @@ precisions).
 program order IS the issue order, so the existing in-order earliest-start
 scheduler in `repro.core.cycles.schedule` reproduces the same timeline —
 that cross-check runs in tests/test_npec.py.
+
+Decode streams (repro.npec.trace.trace_decode) schedule through the same
+machinery: the pos-masked softmaxes overlap the next kv group's skinny
+projections exactly as prefill softmax overlaps the next head's — the
+per-step cost behind core.cycles.autoregressive_cycles.
 """
 from __future__ import annotations
 

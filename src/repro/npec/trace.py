@@ -11,9 +11,17 @@ Supported today:
   * ``bert``   — post-norm encoder (paper Table 1), incl. GQA smoke shapes.
   * ``dense``  — pre-norm decoder blocks (RoPE + GQA + gated/plain MLP),
                  full causal attention.
-Unsupported families raise `CompileError` naming the gap; ROADMAP.md "Open
-items" tracks them (MoE routing, encoder-decoder cross-attention, SSM/RWKV
-recurrences, sliding-window streams).
+Both families trace in two modes:
+  * prefill (`trace_model`) — the whole sequence at once, per-head
+    QK^T/softmax/AV over (S, S) scores;
+  * decode  (`trace_decode`) — ONE new token against a KV cache of
+    capacity T: skinny (1, H) projections, cache-append of the new k/v,
+    a (1, T) QK^T over the cache, a pos-masked 1xT softmax, and the
+    attention-weighted V reduction — mirroring
+    `models/transformer.decode_step` (and the causal
+    `models/bert.decode_step` serving variant) op for op.
+Unsupported families/features raise `CompileError` naming the gap;
+ROADMAP.md "Open items" tracks the remaining ones.
 
 Heads are traced individually (per-head QK^T/softmax/AV), matching the
 overlay's execution granularity — the schedule-level softmax/matmul overlap
@@ -84,30 +92,48 @@ def _attention(b: GraphBuilder, x: int, l: int, *, S: int, H: int, A: int,
     return b.matmul(z, wo, tag=f"{tag}.attn.out")
 
 
+def _plain_mlp(b: GraphBuilder, x: int, l: int, *, H: int, F: int,
+               mlp_bias: bool, act: str, tag: str) -> int:
+    """GELU-class two-matmul MLP (bert / plain dense); returns the down
+    projection (pre-residual)."""
+    b1 = (b.param(("blocks", "mlp", "b1"), (F,), layer=l)
+          if mlp_bias else None)
+    ff1 = b.matmul(x, b.param(("blocks", "mlp", "w1"), (H, F), layer=l),
+                   bias=b1, tag=f"{tag}.ff1")
+    mid = b.act(ff1, act, tag=f"{tag}.act")
+    b2 = (b.param(("blocks", "mlp", "b2"), (H,), layer=l)
+          if mlp_bias else None)
+    return b.matmul(mid, b.param(("blocks", "mlp", "w2"), (F, H), layer=l),
+                    bias=b2, tag=f"{tag}.ff2")
+
+
+def _post_norm_rest(b: GraphBuilder, x: int, proj: int, l: int, *, H: int,
+                    F: int, eps: float, mlp_bias: bool, norm_beta: bool,
+                    tag: str) -> int:
+    """The post-norm sandwich after attention (paper Table 1):
+    X2 = LN(X + attn); X4 = MLP(X2); X5 = LN(X2 + X4).  Shared by the
+    prefill, decode, and dims-only BERT paths so the block structure
+    cannot silently diverge between them."""
+    def ln(inp, name, tagname):
+        gamma = b.param(("blocks", name, "gamma"), (H,), layer=l)
+        beta = (b.param(("blocks", name, "beta"), (H,), layer=l)
+                if norm_beta else None)
+        return b.layernorm(inp, gamma, beta, eps=eps, tag=tagname)
+    ln_a = ln(b.add(x, proj, tag=f"{tag}.res_a"), "ln1", f"{tag}.ln_a")
+    ff2 = _plain_mlp(b, ln_a, l, H=H, F=F, mlp_bias=mlp_bias, act="gelu",
+                     tag=tag)
+    res2 = b.add(ln_a, ff2, tag=f"{tag}.res_b")
+    return ln(res2, "ln2", f"{tag}.ln_b")
+
+
 def _bert_layer(b: GraphBuilder, x: int, l: int, *, S: int, H: int, A: int,
                 KV: int, hd: int, F: int, eps: float, qkv_bias: bool,
                 mlp_bias: bool, tag: str) -> int:
     proj = _attention(b, x, l, S=S, H=H, A=A, KV=KV, hd=hd,
                       qkv_bias=qkv_bias, causal=False, rope_theta=None,
                       tag=tag)
-    res = b.add(x, proj, tag=f"{tag}.res_a")
-    ln_a = b.layernorm(res, b.param(("blocks", "ln1", "gamma"), (H,), layer=l),
-                       b.param(("blocks", "ln1", "beta"), (H,), layer=l),
-                       eps=eps, tag=f"{tag}.ln_a")
-    b1 = (b.param(("blocks", "mlp", "b1"), (F,), layer=l)
-          if mlp_bias else None)
-    ff1 = b.matmul(ln_a, b.param(("blocks", "mlp", "w1"), (H, F), layer=l),
-                   bias=b1, tag=f"{tag}.ff1")
-    gelu = b.act(ff1, "gelu", tag=f"{tag}.gelu")
-    b2 = (b.param(("blocks", "mlp", "b2"), (H,), layer=l)
-          if mlp_bias else None)
-    ff2 = b.matmul(gelu, b.param(("blocks", "mlp", "w2"), (F, H), layer=l),
-                   bias=b2, tag=f"{tag}.ff2")
-    res2 = b.add(ln_a, ff2, tag=f"{tag}.res_b")
-    return b.layernorm(res2,
-                       b.param(("blocks", "ln2", "gamma"), (H,), layer=l),
-                       b.param(("blocks", "ln2", "beta"), (H,), layer=l),
-                       eps=eps, tag=f"{tag}.ln_b")
+    return _post_norm_rest(b, x, proj, l, H=H, F=F, eps=eps,
+                           mlp_bias=mlp_bias, norm_beta=True, tag=tag)
 
 
 def _trace_bert(cfg: ModelConfig, seq: int, layers: Optional[int],
@@ -141,8 +167,7 @@ def _trace_bert(cfg: ModelConfig, seq: int, layers: Optional[int],
 # Dense decoder family (pre-norm GQA + gated/plain MLP)
 # ---------------------------------------------------------------------------
 
-def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
-                 include_embed: bool) -> Graph:
+def _check_dense_supported(cfg: ModelConfig) -> None:
     for feat, msg in (
             (cfg.moe is not None, "MoE routing"),
             (cfg.attention != "full", f"{cfg.attention!r} attention streams"),
@@ -157,6 +182,11 @@ def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
             raise CompileError(
                 f"npec cannot lower {msg} yet for {cfg.name!r} "
                 "(see ROADMAP.md Open items)")
+
+
+def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
+                 include_embed: bool) -> Graph:
+    _check_dense_supported(cfg)
     b = GraphBuilder()
     S, H, A, KV = seq, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
     hd, F = cfg.head_dim, cfg.d_ff
@@ -164,14 +194,7 @@ def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
     theta = cfg.rope_theta if cfg.rope == "standard" else None
 
     def norm(x, path, layer, tag):
-        # mirror models/common.py::apply_norm at its default eps=1e-6,
-        # including the beta parameter when the config carries one
-        gamma = b.param(path + ("gamma",), (H,), layer=layer)
-        if cfg.norm == "layernorm":
-            beta = (b.param(path + ("beta",), (H,), layer=layer)
-                    if cfg.norm_bias else None)
-            return b.layernorm(x, gamma, beta, eps=1e-6, tag=tag)
-        return b.rmsnorm(x, gamma, eps=1e-6, tag=tag)
+        return _dense_norm(b, cfg, x, path, layer, tag)
     if include_embed:
         tokens = b.input("tokens", (S,), dtype="int32")
         x = b.embed(tokens, b.param(("embed",), (cfg.vocab_size, H)),
@@ -186,31 +209,41 @@ def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
                           rope_theta=theta, tag=tag)
         x = b.add(x, attn, tag=f"{tag}.res_a")
         h2 = norm(x, ("blocks", "ln2"), l, f"{tag}.ln2")
-        if cfg.mlp_type == "gated":
-            gt = b.act(b.matmul(
-                h2, b.param(("blocks", "mlp", "wg"), (H, F), layer=l),
-                tag=f"{tag}.ffg"), cfg.activation, tag=f"{tag}.act")
-            up = b.matmul(h2, b.param(("blocks", "mlp", "wu"), (H, F),
-                                      layer=l), tag=f"{tag}.ffu")
-            hmid = b.mul(gt, up, tag=f"{tag}.gate")
-            down = b.matmul(hmid, b.param(("blocks", "mlp", "wd"), (F, H),
-                                          layer=l), tag=f"{tag}.ffd")
-        else:
-            b1 = (b.param(("blocks", "mlp", "b1"), (F,), layer=l)
-                  if cfg.mlp_bias else None)
-            b2 = (b.param(("blocks", "mlp", "b2"), (H,), layer=l)
-                  if cfg.mlp_bias else None)
-            hmid = b.act(b.matmul(
-                h2, b.param(("blocks", "mlp", "w1"), (H, F), layer=l),
-                bias=b1, tag=f"{tag}.ff1"), cfg.activation,
-                tag=f"{tag}.act")
-            down = b.matmul(hmid, b.param(("blocks", "mlp", "w2"), (F, H),
-                                          layer=l), bias=b2,
-                            tag=f"{tag}.ff2")
+        down = _dense_mlp(b, cfg, h2, l, H=H, F=F, tag=tag)
         x = b.add(x, down, tag=f"{tag}.res_b")
     x = norm(x, ("ln_f",), None, "ln_f")
     b.output(x)
     return b.g
+
+
+def _dense_mlp(b: GraphBuilder, cfg: ModelConfig, h2: int, l: int, *,
+               H: int, F: int, tag: str) -> int:
+    """Gated (SwiGLU/GeGLU) or plain MLP for the dense family; returns the
+    down projection (pre-residual)."""
+    if cfg.mlp_type == "gated":
+        gt = b.act(b.matmul(
+            h2, b.param(("blocks", "mlp", "wg"), (H, F), layer=l),
+            tag=f"{tag}.ffg"), cfg.activation, tag=f"{tag}.act")
+        up = b.matmul(h2, b.param(("blocks", "mlp", "wu"), (H, F),
+                                  layer=l), tag=f"{tag}.ffu")
+        hmid = b.mul(gt, up, tag=f"{tag}.gate")
+        return b.matmul(hmid, b.param(("blocks", "mlp", "wd"), (F, H),
+                                      layer=l), tag=f"{tag}.ffd")
+    return _plain_mlp(b, h2, l, H=H, F=F, mlp_bias=cfg.mlp_bias,
+                      act=cfg.activation, tag=tag)
+
+
+def _dense_norm(b: GraphBuilder, cfg: ModelConfig, x: int, path, layer,
+                tag: str) -> int:
+    """models/common.py::apply_norm at its default eps=1e-6, including the
+    beta parameter when the config carries one."""
+    H = cfg.d_model
+    gamma = b.param(tuple(path) + ("gamma",), (H,), layer=layer)
+    if cfg.norm == "layernorm":
+        beta = (b.param(tuple(path) + ("beta",), (H,), layer=layer)
+                if cfg.norm_bias else None)
+        return b.layernorm(x, gamma, beta, eps=1e-6, tag=tag)
+    return b.rmsnorm(x, gamma, eps=1e-6, tag=tag)
 
 
 # ---------------------------------------------------------------------------
@@ -247,6 +280,199 @@ def trace_bert_shape(shape, *, layers: int = 1) -> Graph:
                         A=shape.heads, KV=shape.heads, hd=shape.head_dim,
                         F=shape.d_ff, eps=1e-12, qkv_bias=False,
                         mlp_bias=False, tag=f"enc{l}")
+    b.output(x)
+    return b.g
+
+
+# ---------------------------------------------------------------------------
+# Decode-step tracers: one new token over a KV cache of capacity T
+# ---------------------------------------------------------------------------
+
+def _decode_attention(b: GraphBuilder, x: int, l: int, *, T: int, H: int,
+                      A: int, KV: int, hd: int, qkv_bias: bool,
+                      rope_theta: Optional[float], pos: int,
+                      tag: str) -> int:
+    """Cached one-token attention; returns the output-projection node.
+
+    Per kv head: the new k/v appended into the (T, hd) cache at `pos`
+    (MWU traffic, folded), the group's skinny (1, H) q projections (127
+    of the 128 MMU PE rows idle — reported by the lowering's tiling
+    metadata) stacked into (g, hd), a (g, T) QK^T over the cache, a
+    pos-masked softmax, and the attention-weighted V reduction.  Grouping
+    the query heads of one kv head into a single QK^T/AV stream is how
+    GQA decode actually amortizes the cache read — and it keeps the
+    executor numerically in lockstep with the grouped einsum in
+    models/common.attention_scores.
+    """
+    g = A // KV
+    z_groups = []
+    for j in range(KV):
+        ck = (j * hd, (j + 1) * hd)
+        bk = (b.param(("blocks", "bk"), (hd,), layer=l, cols=ck)
+              if qkv_bias else None)
+        bv = (b.param(("blocks", "bv"), (hd,), layer=l, cols=ck)
+              if qkv_bias else None)
+        k = b.matmul(x, b.param(("blocks", "wk"), (H, hd), layer=l,
+                                cols=ck), bias=bk, tag=f"{tag}.kv{j}.k")
+        if rope_theta is not None:
+            k = b.rope(k, theta=rope_theta, pos=pos,
+                       tag=f"{tag}.kv{j}.k_rope")
+        v = b.matmul(x, b.param(("blocks", "wv"), (H, hd), layer=l,
+                                cols=ck), bias=bv, tag=f"{tag}.kv{j}.v")
+        kc = b.cache(f"{tag}.kv{j}.k", (T, hd))
+        vc = b.cache(f"{tag}.kv{j}.v", (T, hd))
+        kc = b.cache_append(kc, k, pos)
+        vc = b.cache_append(vc, v, pos)
+        q_heads = []
+        for gi in range(g):
+            i = j * g + gi
+            cq = (i * hd, (i + 1) * hd)
+            bq = (b.param(("blocks", "bq"), (hd,), layer=l, cols=cq)
+                  if qkv_bias else None)
+            q = b.matmul(x, b.param(("blocks", "wq"), (H, hd), layer=l,
+                                    cols=cq), bias=bq, tag=f"{tag}.h{i}.q")
+            if rope_theta is not None:
+                q = b.rope(q, theta=rope_theta, pos=pos,
+                           tag=f"{tag}.h{i}.q_rope")
+            q_heads.append(q)
+        qg = (q_heads[0] if g == 1
+              else b.concat(q_heads, axis=-2, tag=f"{tag}.kv{j}.qstack"))
+        qk = b.matmul(qg, kc, transpose_b=True, scale=hd ** -0.5,
+                      tag=f"{tag}.kv{j}.qk")
+        sm = b.softmax(qk, valid_upto=pos, tag=f"{tag}.kv{j}.softmax")
+        av = b.matmul(sm, vc, tag=f"{tag}.kv{j}.av")
+        z_groups.append(av if g == 1
+                        else b.reshape(av, (1, g * hd),
+                                       tag=f"{tag}.kv{j}.flatten"))
+    z = (z_groups[0] if len(z_groups) == 1
+         else b.concat(z_groups, tag=f"{tag}.merge_heads"))
+    wo = b.param(("blocks", "wo"), (A * hd, H), layer=l)
+    return b.matmul(z, wo, tag=f"{tag}.attn.out")
+
+
+def _logits_head(b: GraphBuilder, cfg: ModelConfig, x: int) -> int:
+    """Final vocab projection: tied configs reuse the (V, H) embedding
+    table transposed (still MMU-resident), untied use lm_head (H, V)."""
+    V, H = cfg.vocab_size, cfg.d_model
+    if cfg.tie_embeddings or cfg.family == "bert":
+        return b.matmul(x, b.param(("embed",), (V, H)), transpose_b=True,
+                        tag="logits")
+    return b.matmul(x, b.param(("lm_head",), (H, V)), tag="logits")
+
+
+def _trace_decode_bert(cfg: ModelConfig, cache_len: int,
+                       layers: Optional[int], include_embed: bool) -> Graph:
+    """Causal incremental BERT step, mirroring models/bert.decode_step
+    (post-norm blocks, learned positions gathered at `pos`)."""
+    b = GraphBuilder()
+    T, H, A, KV = cache_len, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd, F = cfg.head_dim, cfg.d_ff
+    L = layers if layers is not None else cfg.num_layers
+    pos = b.input("pos", (), dtype="int32")
+    if include_embed:
+        tokens = b.input("tokens", (1,), dtype="int32")
+        x = b.embed(tokens, b.param(("embed",), (cfg.vocab_size, H)),
+                    tag="embed.tok")
+        pe = b.embed(pos, b.param(("pos_embed",), (cfg.max_position, H)),
+                     tag="embed.pos")
+        x = b.add(x, pe, tag="embed.pos_add")
+        x = b.add(x, b.param(("type_embed",), (H,), index=0),
+                  tag="embed.type")
+        x = b.layernorm(x, b.param(("ln_embed", "gamma"), (H,)),
+                        b.param(("ln_embed", "beta"), (H,)),
+                        eps=1e-12, tag="embed.ln")
+    else:
+        x = b.input("x", (1, H))
+    for l in range(L):
+        tag = f"enc{l}"
+        proj = _decode_attention(b, x, l, T=T, H=H, A=A, KV=KV, hd=hd,
+                                 qkv_bias=cfg.qkv_bias, rope_theta=None,
+                                 pos=pos, tag=tag)
+        x = _post_norm_rest(b, x, proj, l, H=H, F=F, eps=1e-12,
+                            mlp_bias=cfg.mlp_bias, norm_beta=True, tag=tag)
+    if include_embed:
+        x = _logits_head(b, cfg, x)
+    b.output(x)
+    return b.g
+
+
+def _trace_decode_dense(cfg: ModelConfig, cache_len: int,
+                        layers: Optional[int], include_embed: bool) -> Graph:
+    """Pre-norm dense decode step, mirroring models/transformer.decode_step
+    (full-attention layers; ring/window caches are a ROADMAP open item)."""
+    _check_dense_supported(cfg)
+    b = GraphBuilder()
+    T, H, A, KV = cache_len, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd, F = cfg.head_dim, cfg.d_ff
+    L = layers if layers is not None else cfg.num_layers
+    theta = cfg.rope_theta if cfg.rope == "standard" else None
+    pos = b.input("pos", (), dtype="int32")
+    if include_embed:
+        tokens = b.input("tokens", (1,), dtype="int32")
+        x = b.embed(tokens, b.param(("embed",), (cfg.vocab_size, H)),
+                    tag="embed.tok")
+    else:
+        x = b.input("x", (1, H))
+    for l in range(L):
+        tag = f"blk{l}"
+        h = _dense_norm(b, cfg, x, ("blocks", "ln1"), l, f"{tag}.ln1")
+        attn = _decode_attention(b, h, l, T=T, H=H, A=A, KV=KV, hd=hd,
+                                 qkv_bias=cfg.qkv_bias, rope_theta=theta,
+                                 pos=pos, tag=tag)
+        x = b.add(x, attn, tag=f"{tag}.res_a")
+        h2 = _dense_norm(b, cfg, x, ("blocks", "ln2"), l, f"{tag}.ln2")
+        down = _dense_mlp(b, cfg, h2, l, H=H, F=F, tag=tag)
+        x = b.add(x, down, tag=f"{tag}.res_b")
+    x = _dense_norm(b, cfg, x, ("ln_f",), None, "ln_f")
+    if include_embed:
+        x = _logits_head(b, cfg, x)
+    b.output(x)
+    return b.g
+
+
+_DECODE_TRACERS = {"bert": _trace_decode_bert, "dense": _trace_decode_dense}
+
+
+def trace_decode(cfg: ModelConfig, cache_len: int, *,
+                 layers: Optional[int] = None,
+                 include_embed: bool = True) -> Graph:
+    """Emit the one-new-token decode graph for `cfg` over a KV cache of
+    capacity `cache_len`.
+
+    The graph takes a scalar int32 `pos` input (the current cache length):
+    the new k/v append at slot `pos`, softmax masks slots > pos, and RoPE
+    rotates at `pos` — so ONE compiled stream serves every step t < T,
+    exactly how the overlay would execute autoregressive serving (load the
+    stream once, re-run it per token).  Executed statefully by
+    repro.npec.exec.DecodeSession; step outputs match
+    `models/transformer.decode_step` / `models/bert.decode_step`
+    (tests/test_npec_decode.py).
+    """
+    tracer = _DECODE_TRACERS.get(cfg.family)
+    if tracer is None:
+        raise CompileError(
+            f"npec has no decode tracer for family {cfg.family!r} "
+            f"({cfg.name!r}) yet (see ROADMAP.md Open items)")
+    return tracer(cfg, cache_len, layers, include_embed)
+
+
+def trace_decode_bert_shape(shape, cache_len: int, *, layers: int = 1) -> Graph:
+    """Headless decode-step graph from a raw `core.cycles.BertShape` — the
+    dims-only path `core.cycles` uses to cost autoregressive serving (no
+    ModelConfig, no biases, no embedding/logit head; per-layer streams are
+    identical, so cycle totals scale linearly in layer count)."""
+    b = GraphBuilder()
+    pos = b.input("pos", (), dtype="int32")
+    x = b.input("x", (1, shape.hidden))
+    for l in range(layers):
+        tag = f"enc{l}"
+        proj = _decode_attention(b, x, l, T=cache_len, H=shape.hidden,
+                                 A=shape.heads, KV=shape.heads,
+                                 hd=shape.head_dim, qkv_bias=False,
+                                 rope_theta=None, pos=pos, tag=tag)
+        x = _post_norm_rest(b, x, proj, l, H=shape.hidden, F=shape.d_ff,
+                            eps=1e-12, mlp_bias=False, norm_beta=False,
+                            tag=tag)
     b.output(x)
     return b.g
 
@@ -300,34 +526,89 @@ def _check_bert(args) -> None:
     assert err < 1e-2, "executor diverges from the jnp model"
 
 
+def _check_decode(args) -> None:
+    """Compiled decode stream vs the family's decode_step, rolled out over
+    a smoke-scale cache.  The reference runs op-by-op (disable_jit) — XLA
+    fusion would otherwise introduce ulp-level FMA noise; op-for-op the
+    stream is bitwise faithful (tests/test_npec_decode.py gates 1e-6)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.overlay import NPEHardware
+    from repro.models import registry
+    from repro.npec import compile_decode
+    from repro.npec.exec import DecodeSession
+
+    hw = NPEHardware(vrwidth=args.vrwidth)
+    scfg = dataclasses.replace(get_config(args.model, smoke=True),
+                               dtype="float32")
+    B, T = 2, 8
+    params = registry.init_params(scfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                scfg.vocab_size)
+    sess = DecodeSession(compile_decode(scfg, T, hw, bits=args.bits),
+                         params, batch=B)
+    L, KV, hd = scfg.num_layers, scfg.num_kv_heads, scfg.head_dim
+    cache = {"full": {"k": jnp.zeros((L, B, T, KV, hd), jnp.float32),
+                      "v": jnp.zeros((L, B, T, KV, hd), jnp.float32)}}
+    err = 0.0
+    with jax.disable_jit():
+        for t in range(T):
+            ref, cache = registry.decode_step(scfg, params, cache,
+                                              tokens[:, t:t + 1],
+                                              jnp.int32(t))
+            got = sess.step(tokens[:, t:t + 1])
+            err = max(err, float(np.max(np.abs(
+                np.asarray(got) - np.asarray(ref, np.float32)))))
+    print(f"decode stream vs decode_step ({T} tokens): max|err| = {err:.2e}")
+    assert err < 1e-6, "decode stream diverges from decode_step"
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--model", default="bert_base")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--bits", type=int, default=16)
     ap.add_argument("--vrwidth", type=int, default=1024)
+    ap.add_argument("--decode", type=int, default=0, metavar="T",
+                    help="compile a one-token decode step over a KV cache "
+                         "of capacity T instead of a prefill stream")
     ap.add_argument("--check", action="store_true",
-                    help="cross-check vs the hand-built program + jnp model")
+                    help="cross-check vs the hand-built program + jnp model "
+                         "(and the decode_step rollout)")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config
     from repro.core.overlay import NPEHardware
-    from repro.npec import compile_model, greedy_schedule
+    from repro.npec import compile_decode, compile_model, greedy_schedule
 
     cfg = get_config(args.model)
     hw = NPEHardware(vrwidth=args.vrwidth)
-    compiled = compile_model(cfg, args.seq, hw, bits=args.bits,
-                             include_embed=False)
+    if args.decode:
+        compiled = compile_decode(cfg, args.decode, hw, bits=args.bits,
+                                  include_embed=False)
+    else:
+        compiled = compile_model(cfg, args.seq, hw, bits=args.bits,
+                                 include_embed=False)
     stats = greedy_schedule(compiled)
     print(f"{args.model}: {compiled.graph!r}")
     print(f"lowered to {len(compiled.instrs)} instrs "
           f"{compiled.counts_by_unit()}; scheduled "
           f"{stats['total_cycles']:.0f} cycles "
           f"(MMU util {100 * stats['mmu_util']:.1f}%)")
+    if args.decode:
+        t = compiled.mmu_tiling_summary()
+        print(f"skinny matmuls: {t['skinny_matmuls']} "
+              f"(MMU row occupancy {100 * t['efficiency']:.2f}%)")
     if args.check:
-        if cfg.family != "bert":
-            raise SystemExit("--check requires a BERT-family model")
-        _check_bert(args)
+        if cfg.family == "bert" and not args.decode:
+            _check_bert(args)
+        if cfg.family in _DECODE_TRACERS:
+            _check_decode(args)
         print("npec check OK")
 
 

@@ -280,3 +280,23 @@ def test_unsupported_family_raises_compile_error():
 def test_cli_trace_runs():
     from repro.npec import trace as trace_cli
     trace_cli.main(["--model", "bert_base", "--seq", "64"])
+
+
+def test_npec_cycle_record_regression():
+    """The committed compiler-vs-hand record must be reproducible
+    bit-for-bit from the current compiler (the decode analogue lives in
+    tests/test_npec_decode.py)."""
+    import json
+    import sys
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root))            # benchmarks/ lives at root
+    import benchmarks.paper_tables as pt
+
+    record = json.loads((root / "results" / "npec_cycles.json").read_text())
+    assert record["schema"] == "npec_cycles/v1"
+    assert pt.npec_vs_hand() == record["rows"], (
+        "compiler cycle model drifted from results/npec_cycles.json — "
+        "regenerate with `python -m benchmarks.run` if the change is "
+        "intentional")

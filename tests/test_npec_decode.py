@@ -1,0 +1,186 @@
+"""Decode-stream validation (repro.npec KV-cache compilation).
+
+Three gates:
+  * functional — a compiled decode stream executed statefully
+    (DecodeSession) for >= 8 tokens matches the family reference
+    (`models/transformer.decode_step` for dense, `models/bert.decode_step`
+    for bert) to 1e-6 in float mode and 5e-3 in NPE mode.  The reference
+    runs op-by-op (jax.disable_jit) — op-for-op the stream is bitwise
+    faithful; XLA's FMA fusion in the jitted reference would otherwise
+    add ulp-level noise that has nothing to do with the compiler;
+  * structure — decode graphs carry cache-resident tensors, every matmul
+    is skinny (1 or g output rows against 128 PE rows), and the tiling
+    metadata reports the resulting ragged 1-row efficiency;
+  * cycle regression — recomputing the autoregressive throughput table
+    reproduces results/npec_decode_cycles.json exactly (the cost model is
+    deterministic; drift means the compiler or cost model changed and the
+    record must be regenerated via `python -m benchmarks.run`).
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import cycles as cy
+from repro.core.overlay import NPEHardware
+from repro import npec
+
+HW = NPEHardware(vrwidth=1024)
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+# ---------------------------------------------------------------------------
+# Functional: compiled stream rollout vs the jnp decode_step references
+# ---------------------------------------------------------------------------
+
+def _rollout_err(name: str, *, steps: int, npe: bool, bits: int) -> float:
+    """Max abs logits error over a `steps`-token rollout, compiled stream
+    (DecodeSession) vs registry.decode_step, float32 caches both sides."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import registry
+
+    cfg = dataclasses.replace(get_config(name, smoke=True), dtype="float32")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 2, steps
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                cfg.vocab_size)
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    cache = {"full": {"k": jnp.zeros((L, B, T, KV, hd), jnp.float32),
+                      "v": jnp.zeros((L, B, T, KV, hd), jnp.float32)}}
+    ref_cfg = cfg.with_npe(quant_bits=bits, segments=16) if npe else cfg
+    compiled = npec.compile_decode(cfg, T, HW, bits=bits)
+    sess = npec.DecodeSession(compiled, params, batch=B,
+                              cfg=ref_cfg if npe else None)
+    err = 0.0
+    with jax.disable_jit():
+        for t in range(T):
+            ref, cache = registry.decode_step(ref_cfg, params, cache,
+                                              tokens[:, t:t + 1],
+                                              jnp.int32(t))
+            got = sess.step(tokens[:, t:t + 1])
+            err = max(err, float(np.max(np.abs(
+                np.asarray(got) - np.asarray(ref, np.float32)))))
+    assert sess.pos == T
+    return err
+
+
+@pytest.mark.parametrize("name", ["glm4_9b", "bert_base"])
+def test_decode_stream_matches_decode_step_float(name):
+    """ISSUE gate: >= 8-token rollout matches decode_step to 1e-6 (float)."""
+    assert _rollout_err(name, steps=10, npe=False, bits=16) < 1e-6
+
+
+@pytest.mark.parametrize("name", ["glm4_9b", "bert_base"])
+def test_decode_stream_matches_decode_step_npe_mode(name):
+    """ISSUE gate: same rollout in NPE mode (int8 MMU + PWL NVU) to 5e-3."""
+    assert _rollout_err(name, steps=8, npe=True, bits=8) < 5e-3
+
+
+def test_session_capacity_guard():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import registry
+
+    cfg = dataclasses.replace(get_config("bert_base", smoke=True),
+                              dtype="float32")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, 1), 0,
+                             cfg.vocab_size)
+    sess = npec.DecodeSession(npec.compile_decode(cfg, 2, HW, bits=16),
+                              params)
+    sess.step(tok)
+    sess.step(tok)
+    with pytest.raises(ValueError, match="capacity"):
+        sess.step(tok)
+
+
+def test_session_rejects_prefill_graph():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import registry
+
+    cfg = dataclasses.replace(get_config("bert_base", smoke=True),
+                              dtype="float32")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="decode graph"):
+        npec.DecodeSession(npec.compile_model(cfg, 8, HW, bits=16), params)
+
+
+def test_decode_unsupported_family_raises_compile_error():
+    from repro.configs import get_config
+    with pytest.raises(npec.CompileError):
+        npec.trace_decode(get_config("rwkv6_3b", smoke=True), 16)
+    with pytest.raises(npec.CompileError):
+        npec.trace_decode(get_config("granite_moe_1b_a400m", smoke=True), 16)
+
+
+# ---------------------------------------------------------------------------
+# Structure: cache-resident tensors + skinny-matmul tiling
+# ---------------------------------------------------------------------------
+
+def test_decode_graph_structure_bert_shape():
+    """One decode layer of the paper's BERT: same instruction mix as one
+    prefill encoder (63 MMU + 15 NVU), every matmul skinny, caches for
+    every kv head, and the ragged 1-row MMU efficiency exposed."""
+    sh = cy.BertShape(seq=512)
+    compiled = npec.compile_decode_bert_shape(HW, sh, 512, 16, layers=1)
+    assert compiled.counts_by_unit() == {"MMU": 63, "NVU": 15}
+    g = compiled.graph
+    assert len(g.caches) == 2 * sh.heads            # k + v per kv head
+    assert set(g.cache_updates) == set(g.caches)
+    t = compiled.mmu_tiling_summary()
+    assert t["skinny_matmuls"] == 63                # every matmul is 1-row
+    # a 1-row matmul lights up 1 of the 128 PE rows at best
+    assert t["efficiency"] <= 1.0 / HW.mmu_pes + 1e-9
+    for ins in compiled.instrs:
+        if ins.unit == "MMU":
+            assert ins.shape[0] == 1
+
+
+def test_skinny_tile_matmul_geometry():
+    """tile_matmul on a (1, H) decode projection: one PE-row tile, full
+    K-depth tiling, efficiency = 1/128 of the aligned rate."""
+    t = npec.tile_matmul(HW, 1, 768, 64, 16)
+    assert t["row_tiles"] == 1
+    assert t["k_tiles"] == 48
+    assert t["efficiency"] == pytest.approx(
+        t["ideal_cycles"] / t["tiled_cycles"])
+    assert t["efficiency"] < 0.01
+
+
+def test_decode_cycles_scale_with_cache_len():
+    """Per-step decode cycles must grow with the resident cache length
+    (the QK^T and softmax scale with t; the projections do not)."""
+    sh = cy.BertShape(seq=64)
+    short = cy.decode_step_cycles(HW, sh, 65, 16)
+    long = cy.decode_step_cycles(HW, sh, 512, 16)
+    assert long["total_cycles"] > short["total_cycles"]
+    assert short["mmu_efficiency"] < 0.01
+
+
+# ---------------------------------------------------------------------------
+# Cycle-count regression guard vs results/npec_decode_cycles.json
+# ---------------------------------------------------------------------------
+
+def test_decode_cycle_record_regression():
+    """The committed autoregressive throughput record must be reproducible
+    bit-for-bit from the current compiler + cost model."""
+    import sys
+    sys.path.insert(0, str(RESULTS.parent))     # benchmarks/ lives at root
+    import benchmarks.paper_tables as pt
+
+    path = RESULTS / "npec_decode_cycles.json"
+    record = json.loads(path.read_text())
+    assert record["schema"] == "npec_decode_cycles/v1"
+    got = pt.npec_decode()
+    assert got == record["rows"], (
+        "autoregressive cycle model drifted from results/"
+        "npec_decode_cycles.json — regenerate with `python -m "
+        "benchmarks.run` if the change is intentional")
