@@ -3,9 +3,10 @@
 One function per paper artifact; each returns rows and prints a compact
 CSV.  benchmarks/run.py drives them all.  Paper-quoted values are printed
 alongside ours with the deviation, so faithfulness is auditable in the
-output itself.  Two tables go beyond the paper: `npec_vs_hand` (compiler
-vs hand-built prefill programs) and `npec_decode` (autoregressive
-prefill+decode tokens/sec from compiled KV-cache streams).
+output itself.  Three tables go beyond the paper: `npec_vs_hand` (compiler
+vs hand-built prefill programs), `npec_decode` (autoregressive
+prefill+decode tokens/sec from compiled KV-cache streams), and `npec_moe`
+(compiled MoE routing super-blocks for granite/llama4).
 """
 from __future__ import annotations
 
@@ -202,6 +203,41 @@ def npec_decode(prefill_lens=(64, 128), new_tokens=32,
     return out
 
 
+def npec_moe(seq_lens=(64, 128), bits_list=(8, 16)) -> List[Dict]:
+    """MoE routing streams (beyond the paper, which predates MoE NLP):
+    one compiled super-block per (arch, seq, bits) — granite (all-MoE,
+    32 experts top-8) and llama4 (interleaved dense+MoE, 128 experts
+    top-1 + shared expert) at FULL config scale, reporting scheduled
+    cycles, per-unit instruction counts (MRU/MWU = dispatch/combine
+    traffic), the expert capacity C, and the skinny-tile MMU efficiency
+    the C-row per-expert matmuls sustain (see
+    core.cycles.moe_layer_cycles)."""
+    from repro.configs import get_config
+
+    hw = NPEHardware(vrwidth=1024)
+    out = []
+    for name in ("granite_moe_1b_a400m", "llama4_maverick_400b_a17b"):
+        cfg = get_config(name)
+        for bits in bits_list:
+            for s in seq_lens:
+                r = cy.moe_layer_cycles(hw, cfg, s, bits)
+                counts = r["counts"]
+                out.append(dict(
+                    arch=name, seq=s, mmu_bits=bits,
+                    experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
+                    capacity=int(r["capacity"]),
+                    super_block_cycles=int(r["super_block_cycles"]),
+                    total_cycles=int(r["total_cycles"]),
+                    mmu_instrs=counts.get("MMU", 0),
+                    nvu_instrs=counts.get("NVU", 0),
+                    mru_instrs=counts.get("MRU", 0),
+                    mwu_instrs=counts.get("MWU", 0),
+                    skinny_matmuls=int(r["skinny_matmuls"]),
+                    mmu_util=round(r["mmu_util"], 3),
+                    mmu_eff=round(r["mmu_efficiency"], 4)))
+    return out
+
+
 ALL = {
     "table2_throughput_requirements": table2,
     "table3_nvu_throughput": table3,
@@ -212,4 +248,5 @@ ALL = {
     "sec5_5_npe_accuracy": npe_accuracy,
     "npec_vs_hand": npec_vs_hand,
     "npec_decode": npec_decode,
+    "npec_moe": npec_moe,
 }

@@ -5,9 +5,11 @@ a wall-clock microbench of every Pallas kernel (interpret mode on CPU —
 numbers validate plumbing, not TPU perf; TPU perf is the §Roofline story).
 Also writes machine-readable records so PRs have a compiler-perf
 trajectory to track: npec-compiled vs hand-built BERT cycle counts per
-(seq, bits) to results/npec_cycles.json, and autoregressive prefill+decode
+(seq, bits) to results/npec_cycles.json, autoregressive prefill+decode
 throughput from compiled KV-cache streams to
-results/npec_decode_cycles.json (guarded by tests/test_npec_decode.py).
+results/npec_decode_cycles.json (guarded by tests/test_npec_decode.py),
+and compiled MoE routing super-blocks to results/npec_moe_cycles.json
+(guarded by tests/test_npec_conformance.py).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -76,6 +78,7 @@ def write_npec_record(path: Path, rows=None,
     if rows is None:
         from benchmarks import paper_tables
         rows = (paper_tables.npec_decode() if "decode" in schema
+                else paper_tables.npec_moe() if "moe" in schema
                 else paper_tables.npec_vs_hand())
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(
@@ -92,10 +95,13 @@ def main(argv=None):
     ap.add_argument("--json-out-decode",
                     default="results/npec_decode_cycles.json",
                     help="autoregressive decode cycle record ('' disables)")
+    ap.add_argument("--json-out-moe",
+                    default="results/npec_moe_cycles.json",
+                    help="MoE routing-stream cycle record ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_tables
-    npec_rows = decode_rows = None
+    npec_rows = decode_rows = moe_rows = None
     for name, fn in paper_tables.ALL.items():
         t0 = time.perf_counter()
         rows = fn()
@@ -105,12 +111,17 @@ def main(argv=None):
             npec_rows = rows
         elif name == "npec_decode":
             decode_rows = rows
+        elif name == "npec_moe":
+            moe_rows = rows
 
     if args.json_out:
         write_npec_record(Path(args.json_out), npec_rows)
     if args.json_out_decode:
         write_npec_record(Path(args.json_out_decode), decode_rows,
                           schema="npec_decode_cycles/v1")
+    if args.json_out_moe:
+        write_npec_record(Path(args.json_out_moe), moe_rows,
+                          schema="npec_moe_cycles/v1")
 
     if not args.skip_kernels:
         _print_table("kernel_microbench", bench_kernels(args.quick))

@@ -11,6 +11,9 @@ python -m pytest -x -q
 # against the hand-built program, the jnp model, and a decode rollout
 python -m repro.npec.trace --model bert_base --check
 
+# MoE routing streams: compiled granite stream vs the jnp forward (exact)
+python -m repro.npec.trace --model granite_moe_1b_a400m --seq 64 --check
+
 # docs drift gate: the ISA reference must cite the hardware constants
 # actually defined in core/overlay.py (PE count, multiplier counts,
 # vector register file, VLIW slot mix, default VRWIDTH)
@@ -34,4 +37,27 @@ if missing:
     raise SystemExit(
         f"docs/isa.md out of sync with core/overlay.py — missing {missing}")
 print("docs/isa.md constants check OK")
+PY
+
+# cross-family compiler conformance matrix (family x seq x NPE mode):
+# every traceable family through trace -> lower -> schedule -> exec vs
+# its jnp reference, plus the MoE cycle-record regression guard
+python -m pytest -q tests/test_npec_conformance.py
+
+# docs drift gate: docs/compiler.md's "MoE tracer" section must name the
+# MoE IR ops actually defined in repro/npec/ir.py (MOE_OPS)
+python - <<'PY'
+from pathlib import Path
+from repro.npec import ir
+
+doc = Path("docs/compiler.md").read_text()
+if "MoE tracer" not in doc:
+    raise SystemExit("docs/compiler.md is missing the 'MoE tracer' section")
+section = doc[doc.index("MoE tracer"):]
+missing = [op for op in ir.MOE_OPS if f"`{op}`" not in section]
+if missing:
+    raise SystemExit(
+        "docs/compiler.md MoE tracer section out of sync with "
+        f"repro/npec/ir.py — missing {missing}")
+print("docs/compiler.md MoE op names check OK")
 PY

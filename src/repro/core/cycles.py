@@ -273,6 +273,49 @@ def throughput_inf_s(hw: NPEHardware, shape: BertShape, bits: int,
 
 
 # ---------------------------------------------------------------------------
+# MoE layers — npec-compiled (there is no hand-built MoE program; like the
+# decode streams, the compiler IS the source)
+# ---------------------------------------------------------------------------
+
+def moe_layer_cycles(hw: NPEHardware, cfg, seq: int, bits: int,
+                     nvu_source: str = "paper") -> Dict[str, float]:
+    """Cycles for one MoE *super-block* of `cfg` — `interleave - 1` dense
+    layers plus one MoE layer, the repeating unit of granite (interleave=1:
+    just the MoE layer) and llama4 (interleave=2: dense + MoE) — compiled
+    through repro.npec and list-scheduled.  Totals scale by
+    num_layers / interleave (per-super-block streams are identical;
+    headless dims-only path, no embedding/logit head).
+
+    Beyond the timeline the summary reports what makes MoE streams
+    different from dense ones: the expert capacity C (the tile height of
+    every per-expert matmul), the MRU/MWU dispatch-traffic instruction
+    counts, and the skinny-tile MMU efficiency those C-row matmuls
+    actually sustain against the 128 PE rows."""
+    if cfg.moe is None:
+        raise ValueError(f"{cfg.name!r} is not an MoE config")
+    from repro import npec
+    step = cfg.moe.interleave
+    compiled = npec.compile_model(cfg, seq, hw, bits=bits,
+                                  nvu_source=nvu_source, layers=step,
+                                  include_embed=False)
+    stats = npec.greedy_schedule(compiled)
+    counts = compiled.counts_by_unit()
+    tiling = compiled.mmu_tiling_summary()
+    n_super = cfg.num_layers // step
+    return {
+        "super_block_cycles": stats["total_cycles"],
+        "total_cycles": stats["total_cycles"] * n_super,
+        "mmu_busy": stats["mmu_busy"] * n_super,
+        "nvu_busy": stats["nvu_busy"] * n_super,
+        "mmu_util": stats["mmu_util"],
+        "mmu_efficiency": tiling["efficiency"],
+        "skinny_matmuls": tiling["skinny_matmuls"],
+        "capacity": npec.moe_capacity(cfg, seq),
+        "counts": counts,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Analytic tables (2 and 4)
 # ---------------------------------------------------------------------------
 

@@ -48,6 +48,31 @@ def specs(cfg: ModelConfig, n_layers: int) -> Dict[str, Any]:
     return s
 
 
+def dispatch_mask(expert_ids_flat, num_experts: int, capacity: int):
+    """GShard dispatch tensor (b, t, E, C) from flattened expert ids
+    (b, t): one-hot cumsum position-in-expert, capacity drop (slots past
+    C scatter to nothing).  Cumsums of 0/1 floats are exact, so the drop
+    decisions are deterministic.  Shared with the npec functional
+    executor (repro.npec.exec) so the compiled MoE streams' dispatch is
+    bitwise identical to `apply`'s by construction."""
+    b, t = expert_ids_flat.shape
+    oh_e = jax.nn.one_hot(expert_ids_flat, num_experts,
+                          dtype=jnp.float32)                # (b, t, E)
+    pos_in = jnp.cumsum(oh_e, axis=1) - oh_e                # before me
+    pos = jnp.sum(pos_in * oh_e, axis=-1)                   # (b, t)
+    slot = jnp.where(pos < capacity, pos, capacity).astype(jnp.int32)
+    oh_c = jax.nn.one_hot(slot, capacity + 1,
+                          dtype=jnp.float32)[..., :capacity]  # dropped -> 0
+    return oh_e[..., None] * oh_c[..., :, None, :].reshape(b, t, 1, capacity)
+
+
+def renormalize_gates(gate_vals):
+    """Softmax-gate renormalization over the selected top-k (shared with
+    the npec executor's `topk` values node)."""
+    return gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+
 def _router_probs(cfg: ModelConfig, logits):
     m = cfg.moe
     if m.router_act == "sigmoid":
@@ -77,20 +102,12 @@ def apply(cfg: ModelConfig, p, x):
     probs = _router_probs(cfg, logits)                     # (b, s, E)
     gate_vals, expert_ids = jax.lax.top_k(probs, k)        # (b, s, k)
     if m.router_act == "softmax" and k > 1:
-        gate_vals = gate_vals / jnp.maximum(
-            jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+        gate_vals = renormalize_gates(gate_vals)
 
     t = s * k
     cap = max(1, int(s * k / E * m.capacity_factor))
-    oh_e = jax.nn.one_hot(expert_ids.reshape(b, t), E,
-                          dtype=jnp.float32)               # (b, t, E)
-    pos_in = jnp.cumsum(oh_e, axis=1) - oh_e               # before me
-    pos = jnp.sum(pos_in * oh_e, axis=-1)                  # (b, t)
-    slot = jnp.where(pos < cap, pos, cap).astype(jnp.int32)
-    oh_c = jax.nn.one_hot(slot, cap + 1,
-                          dtype=jnp.float32)[..., :cap]    # dropped -> all 0
-    dispatch = (oh_e[..., None] * oh_c[..., :, None, :]
-                .reshape(b, t, 1, cap)).astype(x.dtype)    # (b, t, E, C)
+    dispatch = dispatch_mask(expert_ids.reshape(b, t), E,
+                             cap).astype(x.dtype)          # (b, t, E, C)
     dispatch = constrain(dispatch, ("batch", None, "expert", None))
 
     x_rep = jnp.repeat(x, k, axis=1) if k > 1 else x       # (b, t, D)

@@ -7,7 +7,9 @@ layer, a four-stage pipeline:
 
     trace    (repro.npec.trace)    ModelConfig -> graph IR: per-head
              matmul / softmax / norm / activation dataflow with shape and
-             dtype metadata, one explicit emitter per model family; both
+             dtype metadata, one explicit emitter per model family (bert,
+             dense, moe — MoE routing as topk/gather/scatter_slot ops
+             with capacity-bounded per-expert matmul streams); both
              prefill graphs (trace_model) and one-token KV-cache decode
              graphs (trace_decode — cache-resident tensors, cache-append,
              pos-masked softmax).
@@ -56,8 +58,9 @@ from repro.npec.ir import Graph, GraphBuilder, Node
 from repro.npec.lower import (CompiledProgram, LoweredInstr, lower,
                               nvu_microprogram, tile_matmul)
 from repro.npec.schedule import greedy_schedule, issue_order
-from repro.npec.trace import (CompileError, trace_bert_shape, trace_decode,
-                              trace_decode_bert_shape, trace_model)
+from repro.npec.trace import (CompileError, moe_capacity, trace_bert_shape,
+                              trace_decode, trace_decode_bert_shape,
+                              trace_model, trace_moe_block)
 from repro.npec.exec import DecodeSession, ExecResult, execute
 
 

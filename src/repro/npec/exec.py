@@ -13,7 +13,13 @@ Semantics mirror the jnp modules op-for-op:
   * QK^T / AV        -> f32-accumulated einsums on the activation path
                         (never quantized, matching `common.attention_scores`);
   * softmax / norms / activations -> `nvu.softmax` / layernorm / rmsnorm /
-                        `nvu.activation` in float or PWL mode.
+                        `nvu.activation` in float or PWL mode;
+  * MoE routing       -> `jax.lax.top_k` + the GShard one-hot-cumsum
+                        capacity dispatch / gate-weighted combine,
+                        replicating `models/moe.apply` line for line
+                        (router/expert matmuls are float-pinned via the
+                        matmul `quantize=False` attr, exactly as the
+                        reference computes them).
 
 Buffers live in a node-indexed environment and are freed at last use —
 the executor reports the resulting peak live footprint, the quantity the
@@ -77,6 +83,11 @@ def _resolve_param(params, node: Node) -> jnp.ndarray:
 
 def _matmul(node: Node, a, b, bias, *, weight_resident: bool,
             npe_quant: bool, bits: int):
+    if weight_resident and not node.attrs.get("quantize", True):
+        # float-pinned weight matmul (MoE router / expert streams):
+        # `models/moe.apply` computes these as plain activation-dtype
+        # einsums even in NPE mode, so the stream must too
+        weight_resident = False
     if weight_resident:
         # MMU-resident weight (quantizable); a transposed resident weight
         # (the tied-embedding logits head) is stored transposed, exactly as
@@ -140,6 +151,81 @@ def _rope(node: Node, x, pos=None):
     return y.reshape(*lead, s, x.shape[-1])
 
 
+def _topk(node: Node, x):
+    """jax.lax.top_k over the last axis, exactly as `models/moe.apply`;
+    the values node optionally renormalizes the selected gates (softmax
+    routers with k > 1, via the shared `moe.renormalize_gates`)."""
+    import jax
+
+    from repro.models import moe as moe_mod
+
+    vals, ids = jax.lax.top_k(x, node.attrs["k"])
+    if node.attrs["out"] == "indices":
+        return ids.astype(jnp.int32)
+    if node.attrs.get("renorm"):
+        vals = moe_mod.renormalize_gates(vals)
+    return vals
+
+
+def _dispatch_mask(ids_flat, num_experts: int, capacity: int):
+    """The GShard dispatch tensor (b, t, E, C) — the SAME
+    `models/moe.dispatch_mask` the reference calls, so compiled streams'
+    capacity-drop decisions are bitwise identical by construction."""
+    from repro.models import moe as moe_mod
+
+    return moe_mod.dispatch_mask(ids_flat, num_experts, capacity)
+
+
+def _dispatch_mask_cached(memo, key, ids_flat, num_experts, capacity):
+    """The dispatch mask is needed twice per MoE layer (scatter + combine)
+    from the SAME indices node — memoize it per execute() call, keyed by
+    the ids node id."""
+    if memo is None:
+        return _dispatch_mask(ids_flat, num_experts, capacity)
+    k = (key, num_experts, capacity)
+    if k not in memo:
+        memo[k] = _dispatch_mask(ids_flat, num_experts, capacity)
+    return memo[k]
+
+
+def _scatter_slot(node: Node, x, ids, *, memo=None, key=None):
+    """Capacity-bounded dispatch: (.., S, D) tokens -> (.., E, C, D) slot
+    buffers (token-slots past capacity drop to zero rows)."""
+    e = node.attrs["num_experts"]
+    cap = node.attrs["capacity"]
+    k = node.attrs["top_k"]
+    lead = x.shape[:-2]
+    s, d = x.shape[-2:]
+    xf = x.reshape((-1, s, d))
+    dispatch = _dispatch_mask_cached(memo, key, ids.reshape((-1, s * k)),
+                                     e, cap)
+    x_rep = jnp.repeat(xf, k, axis=1) if k > 1 else xf
+    buf = jnp.einsum("btec,btd->becd", dispatch, x_rep)
+    return buf.reshape(lead + (e, cap, d))
+
+
+def _gather_combine(node: Node, stacked, ids, gates, *, memo=None,
+                    key=None):
+    """Weighted combine of the (.., E*C, D) stacked expert outputs back to
+    (.., S, D) token order; dropped slots contribute zero and gates are
+    NOT renormalized after the drop — `models/moe.apply` semantics."""
+    e = node.attrs["num_experts"]
+    cap = node.attrs["capacity"]
+    k = node.attrs["top_k"]
+    lead = stacked.shape[:-2]
+    d = stacked.shape[-1]
+    s = node.shape[-2]
+    t = s * k
+    out_buf = stacked.reshape((-1, e, cap, d))
+    dispatch = _dispatch_mask_cached(memo, key, ids.reshape((-1, t)),
+                                     e, cap)
+    gated = dispatch * gates.reshape((-1, t))[..., None, None]
+    out = jnp.einsum("btec,becd->btd", gated, out_buf)
+    if k > 1:
+        out = out.reshape(-1, s, k, d).sum(axis=2)
+    return out.reshape(lead + (s, d))
+
+
 def _nbytes(x) -> int:
     return int(x.size) * x.dtype.itemsize
 
@@ -171,6 +257,7 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
 
     live = 0
     peak = 0
+    mask_memo: Dict[Any, jnp.ndarray] = {}   # per-call dispatch-mask cache
 
     def put(nid: int, val):
         nonlocal live, peak
@@ -240,6 +327,26 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
         elif op == "cache":
             put(node.id, jnp.asarray(feeds[node.attrs["name"]],
                                      jnp.float32))
+        elif op == "topk":
+            x = get(node.inputs[0])
+            if len(node.inputs) > 1:
+                get(node.inputs[1])     # indices ride the values pass
+            put(node.id, _topk(node, x))
+        elif op == "scatter_slot":
+            put(node.id, _scatter_slot(node, get(node.inputs[0]),
+                                       get(node.inputs[1]),
+                                       memo=mask_memo,
+                                       key=node.inputs[1]))
+        elif op == "gather":
+            if node.attrs["mode"] == "expert":
+                buf = get(node.inputs[0])
+                put(node.id, buf[..., node.attrs["index"], :, :])
+            else:
+                put(node.id, _gather_combine(node, get(node.inputs[0]),
+                                             get(node.inputs[1]),
+                                             get(node.inputs[2]),
+                                             memo=mask_memo,
+                                             key=node.inputs[1]))
         elif op == "cache_append":
             c = get(node.inputs[0])
             new = get(node.inputs[1])

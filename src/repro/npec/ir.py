@@ -50,15 +50,44 @@ Decode-step masking: ``softmax`` takes an optional second input — a scalar
 int32 `pos` node — and masks key slots > pos (attr cache_masked); ``rope``
 takes an optional second input rotating every row at position `pos` instead
 of its static row index.
+
+MoE routing ops (mixture-of-experts streams, mirroring `models/moe.apply`'s
+GShard-style capacity dispatch; `MOE_OPS` below is the canonical list the
+docs-drift gate in scripts/ci.sh checks against docs/compiler.md):
+  * ``topk``          inputs (probs,) for the values node, (probs, values)
+                      for the indices node; attrs k, out ("values" |
+                      "indices"), renorm (softmax-gate renormalization over
+                      the selected k).  The values node is an NVU
+                      instruction (k max-select passes); the indices node
+                      is produced by the same pass and folds.
+  * ``scatter_slot``  inputs (x, expert_ids) — capacity-bounded dispatch:
+                      the S*k token-slots scatter into an (E, C, D) buffer
+                      at their position-in-expert, dropping slots past
+                      capacity C (GShard cumsum semantics).  Lowered to MWU
+                      scatter traffic; attrs num_experts, capacity, top_k.
+  * ``gather``        expert mode (attrs mode="expert", index=e): slice
+                      expert e's (C, D) rows from the dispatch buffer (MRU
+                      read).  Combine mode (mode="combine"; inputs
+                      (stacked, expert_ids, gates)): gather every surviving
+                      token-slot's expert output back to token order and
+                      combine weighted by the gates — dropped slots
+                      contribute zero, exactly as `models/moe.apply`.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
-COMPUTE_OPS = ("matmul", "softmax", "layernorm", "rmsnorm", "act", "rope")
+COMPUTE_OPS = ("matmul", "softmax", "layernorm", "rmsnorm", "act", "rope",
+               "topk")
 FOLDED_OPS = ("input", "param", "add", "mul", "concat", "embed",
               "reshape", "cache", "cache_append")
+# MoE routing ops: `topk` values lower to an NVU instruction; `gather` /
+# `scatter_slot` lower to MRU/MWU traffic instructions (memory ops, not
+# compute).  This tuple is what the ci.sh docs gate greps docs/compiler.md
+# for, so the documented op set cannot drift from the IR.
+MOE_OPS = ("topk", "gather", "scatter_slot")
+MEMORY_OPS = ("gather", "scatter_slot")
 
 
 @dataclass
@@ -86,7 +115,8 @@ class Graph:
 
     def add(self, op: str, inputs: Tuple[int, ...], shape: Tuple[int, ...],
             dtype: str = "float32", tag: str = "", **attrs) -> int:
-        assert op in COMPUTE_OPS or op in FOLDED_OPS, op
+        assert (op in COMPUTE_OPS or op in FOLDED_OPS
+                or op in MEMORY_OPS), op
         nid = len(self.nodes)
         for i in inputs:
             assert 0 <= i < nid, f"node {nid} ({op}) references future node {i}"
@@ -152,7 +182,10 @@ class GraphBuilder:
                           cols=cols, index=index)
 
     def matmul(self, a, b, bias=None, *, transpose_b=False, scale=None,
-               tag=""):
+               quantize=True, tag=""):
+        """quantize=False pins a weight-resident matmul to the float path
+        even in NPE mode — MoE router/expert matmuls, which
+        `models/moe.apply` computes as plain activation-dtype einsums."""
         an, bn = self.g.node(a), self.g.node(b)
         n, k = an.shape[-2], an.shape[-1]
         if transpose_b:
@@ -163,7 +196,8 @@ class GraphBuilder:
             m = bn.shape[-1]
         inputs = (a, b) if bias is None else (a, b, bias)
         return self.g.add("matmul", inputs, an.shape[:-2] + (n, m), tag=tag,
-                          transpose_b=transpose_b, scale=scale)
+                          transpose_b=transpose_b, scale=scale,
+                          quantize=quantize)
 
     def softmax(self, x, *, causal=False, valid_upto=None, tag=""):
         """valid_upto: optional scalar int32 node id (`pos`) — key slots
@@ -203,6 +237,48 @@ class GraphBuilder:
                          cn.dtype, tag=tag or f"{name}.append", name=name)
         self.g.cache_updates[name] = nid
         return nid
+
+    def topk(self, x, k, *, renorm=False, tag=""):
+        """Top-k selection over the last axis; returns (values_id,
+        indices_id).  renorm=True renormalizes the selected values to sum
+        to one (softmax-gate renormalization, `models/moe.apply`).  The
+        indices node takes the values node as a second input: both are
+        produced by the same NVU max-select pass, so the indices fold onto
+        it in lowering."""
+        xs = self.g.node(x).shape
+        shape = xs[:-1] + (k,)
+        vals = self.g.add("topk", (x,), shape, tag=f"{tag}.gates" if tag
+                          else "", k=k, out="values", renorm=renorm)
+        idx = self.g.add("topk", (x, vals), shape, dtype="int32",
+                         tag=f"{tag}.ids" if tag else "", k=k,
+                         out="indices")
+        return vals, idx
+
+    def scatter_slot(self, x, expert_ids, *, num_experts, capacity, top_k,
+                     tag=""):
+        """Capacity-bounded dispatch of (S, D) tokens into an
+        (num_experts, capacity, D) expert-slot buffer (MWU scatter)."""
+        d = self.g.node(x).shape[-1]
+        return self.g.add("scatter_slot", (x, expert_ids),
+                          (num_experts, capacity, d), tag=tag,
+                          num_experts=num_experts, capacity=capacity,
+                          top_k=top_k)
+
+    def gather(self, src, *, index=None, expert_ids=None, gates=None,
+               num_experts=None, capacity=None, top_k=None, tag=""):
+        """MRU gather.  With `index`: slice expert `index`'s (C, D) rows
+        from the dispatch buffer.  With (expert_ids, gates): the weighted
+        combine of the (E*C, D) stacked expert outputs back to (S, D)
+        token order (dropped slots contribute zero)."""
+        if index is not None:
+            sn = self.g.node(src).shape
+            return self.g.add("gather", (src,), sn[-2:], tag=tag,
+                              mode="expert", index=index)
+        s = self.g.node(expert_ids).shape[-2]
+        d = self.g.node(src).shape[-1]
+        return self.g.add("gather", (src, expert_ids, gates), (s, d),
+                          tag=tag, mode="combine", num_experts=num_experts,
+                          capacity=capacity, top_k=top_k)
 
     def add(self, a, b, tag=""):
         sa, sb = self.g.node(a).shape, self.g.node(b).shape

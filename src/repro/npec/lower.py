@@ -30,6 +30,19 @@ cost stays the ideal MAC rate (consistent with the prefill model), and
 `CompiledProgram.mmu_tiling_summary()` reports the ragged 1-row occupancy
 so throughput tables can show what the MMU geometry actually sustains per
 decode step.
+
+MoE routing streams add three more op classes:
+  * ``topk`` (values) -> an NVU instruction of k max-select passes, each
+    costed at the elementwise PWL-class (gelu) rate over the probability
+    rows (the NVU has no sorter — top-k is k vector-max sweeps);
+  * ``scatter_slot`` -> an MWU scatter instruction (one cycle per
+    dispatched token-slot row) and ``gather`` -> an MRU instruction (one
+    cycle per row read), making the dispatch/combine *traffic* visible in
+    the schedule instead of folding it;
+  * the E per-expert FFN matmuls are ordinary MMU instructions over
+    C-row tiles, so `mmu_tiling_summary()` charges their skinny-tile
+    padding exactly like decode's 1-row projections (C < 128 PE rows for
+    every realistic capacity).
 """
 from __future__ import annotations
 
@@ -350,6 +363,51 @@ def lower(graph: Graph, hw: NPEHardware, bits: int = 16,
                           vregs_used=micro.regs_used,
                           unroll=micro.unroll,
                           model_cycles=model_cycles)))
+            node_to_instr[node.id] = idx
+            node_deps[node.id] = (idx,)
+        elif node.op == "topk":
+            if node.attrs["out"] == "indices":
+                # produced by the values node's NVU pass — folds onto it
+                node_deps[node.id] = deps
+                continue
+            # k max-select passes over the probability rows, each at the
+            # elementwise PWL-class (gelu) rate: load, vector max-compare
+            # chain, store — the NVU has no sorter, so top-k is k sweeps
+            n_el = _prod(graph.node(node.inputs[0]).shape)
+            k = node.attrs["k"]
+            cycles = k * nvu_cycles(hw, "gelu", n_el, nvu_source)
+            idx = len(instrs)
+            instrs.append(LoweredInstr(
+                "NVU", "topk", cycles, deps, node.tag, (n_el,), node.id,
+                meta=dict(ir_op="topk", k=k, routine="gelu",
+                          passes=k)))
+            node_to_instr[node.id] = idx
+            node_deps[node.id] = (idx,)
+        elif node.op == "scatter_slot":
+            # MWU scatter: every one of the S*k token-slots writes its
+            # D-element row into the expert-slot buffer (or drops) — one
+            # row per cycle of write traffic
+            s = graph.node(node.inputs[0]).shape[-2]
+            rows = s * node.attrs["top_k"]
+            idx = len(instrs)
+            instrs.append(LoweredInstr(
+                "MWU", "scatter", rows, deps, node.tag, node.shape,
+                node.id, meta=dict(rows=rows,
+                                   capacity=node.attrs["capacity"],
+                                   num_experts=node.attrs["num_experts"])))
+            node_to_instr[node.id] = idx
+            node_deps[node.id] = (idx,)
+        elif node.op == "gather":
+            # MRU gather: expert mode reads the expert's C slot rows;
+            # combine mode reads each surviving token-slot's output row
+            if node.attrs["mode"] == "expert":
+                rows = node.shape[-2]
+            else:
+                rows = node.shape[-2] * node.attrs["top_k"]
+            idx = len(instrs)
+            instrs.append(LoweredInstr(
+                "MRU", "gather", rows, deps, node.tag, node.shape,
+                node.id, meta=dict(rows=rows, mode=node.attrs["mode"])))
             node_to_instr[node.id] = idx
             node_deps[node.id] = (idx,)
         else:

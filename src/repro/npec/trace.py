@@ -11,7 +11,17 @@ Supported today:
   * ``bert``   — post-norm encoder (paper Table 1), incl. GQA smoke shapes.
   * ``dense``  — pre-norm decoder blocks (RoPE + GQA + gated/plain MLP),
                  full causal attention.
-Both families trace in two modes:
+  * ``moe``    — dense blocks whose FFN is a mixture-of-experts every
+                 `interleave` layers (granite: all-MoE; llama4:
+                 interleaved + shared expert): router logits as an MMU
+                 matmul, router probabilities as NVU softmax/sigmoid,
+                 top-k selection + capacity-bounded dispatch as
+                 topk/gather/scatter_slot IR ops, per-expert FFN matmuls
+                 gated by capacity C = max(1, int(S*k/E * cf)), and
+                 the gate-weighted combine — mirroring `models/moe.apply`
+                 (including softmax-gate renormalization and
+                 overflow-drop semantics) op for op.
+bert and dense trace in two modes:
   * prefill (`trace_model`) — the whole sequence at once, per-head
     QK^T/softmax/AV over (S, S) scores;
   * decode  (`trace_decode`) — ONE new token against a KV cache of
@@ -167,9 +177,11 @@ def _trace_bert(cfg: ModelConfig, seq: int, layers: Optional[int],
 # Dense decoder family (pre-norm GQA + gated/plain MLP)
 # ---------------------------------------------------------------------------
 
-def _check_dense_supported(cfg: ModelConfig) -> None:
+def _check_block_supported(cfg: ModelConfig, *, moe_ok: bool = False) -> None:
+    """Feature gates shared by the dense and moe families; `moe_ok` lets
+    the moe tracer accept the MoE config it exists to lower."""
     for feat, msg in (
-            (cfg.moe is not None, "MoE routing"),
+            (cfg.moe is not None and not moe_ok, "MoE routing"),
             (cfg.attention != "full", f"{cfg.attention!r} attention streams"),
             (cfg.parallel_block, "parallel attn+mlp blocks"),
             (cfg.qk_norm, "per-head qk-norm"),
@@ -182,6 +194,10 @@ def _check_dense_supported(cfg: ModelConfig) -> None:
             raise CompileError(
                 f"npec cannot lower {msg} yet for {cfg.name!r} "
                 "(see ROADMAP.md Open items)")
+
+
+def _check_dense_supported(cfg: ModelConfig) -> None:
+    _check_block_supported(cfg, moe_ok=False)
 
 
 def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
@@ -212,6 +228,8 @@ def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
         down = _dense_mlp(b, cfg, h2, l, H=H, F=F, tag=tag)
         x = b.add(x, down, tag=f"{tag}.res_b")
     x = norm(x, ("ln_f",), None, "ln_f")
+    if include_embed:
+        x = _logits_head(b, cfg, x)
     b.output(x)
     return b.g
 
@@ -247,10 +265,141 @@ def _dense_norm(b: GraphBuilder, cfg: ModelConfig, x: int, path, layer,
 
 
 # ---------------------------------------------------------------------------
+# MoE family (granite: every layer; llama4: every `interleave`-th layer)
+# ---------------------------------------------------------------------------
+
+def moe_capacity(cfg: ModelConfig, seq: int) -> int:
+    """Expert capacity C = max(1, int(S*k/E * capacity_factor)) — the
+    per-sequence slot budget `models/moe.apply` dispatches into."""
+    m = cfg.moe
+    return max(1, int(seq * m.top_k / m.num_experts * m.capacity_factor))
+
+
+def _moe_ffn(b: GraphBuilder, cfg: ModelConfig, x: int, mi: int, *, S: int,
+             tag: str):
+    """One MoE FFN block mirroring `models/moe.apply` op for op:
+    router matmul (MMU) -> softmax/sigmoid probabilities (NVU) -> top-k
+    gates + indices (renormalized for softmax routers with k > 1) ->
+    capacity-bounded scatter into (E, C, D) slot buffers (MWU) -> E
+    per-expert gated-MLP matmul streams over C-row tiles (skinny when
+    C < 128 PE rows) -> gate-weighted combine gather (MRU) -> optional
+    shared expert.  Router and expert matmuls are pinned to the float
+    path (`quantize=False`): the reference computes them as plain
+    activation-dtype einsums even in NPE mode; the shared expert routes
+    through `cm.dense` and stays quantizable.
+
+    Returns (out_node, aux) where aux exposes the routing nodes
+    (gates/ids/dispatch/combine) for conformance and property tests.
+    """
+    m = cfg.moe
+    H, F, E, k = cfg.d_model, cfg.d_ff, m.num_experts, m.top_k
+    cap = moe_capacity(cfg, S)
+    router = b.param(("blocks", "moe", "router"), (H, E), layer=mi)
+    logits = b.matmul(x, router, quantize=False, tag=f"{tag}.router")
+    if m.router_act == "sigmoid":
+        probs = b.act(logits, "sigmoid", tag=f"{tag}.router_probs")
+    else:
+        probs = b.softmax(logits, tag=f"{tag}.router_probs")
+    renorm = m.router_act == "softmax" and k > 1
+    gates, ids = b.topk(probs, k, renorm=renorm, tag=f"{tag}.topk")
+    buf = b.scatter_slot(x, ids, num_experts=E, capacity=cap, top_k=k,
+                         tag=f"{tag}.dispatch")
+    outs = []
+    for e in range(E):
+        etag = f"{tag}.x{e}"
+        xe = b.gather(buf, index=e, tag=f"{etag}.gather")
+        wg = b.param(("blocks", "moe", "wg"), (H, F), layer=mi, index=e)
+        wu = b.param(("blocks", "moe", "wu"), (H, F), layer=mi, index=e)
+        wd = b.param(("blocks", "moe", "wd"), (F, H), layer=mi, index=e)
+        gt = b.act(b.matmul(xe, wg, quantize=False, tag=f"{etag}.ffg"),
+                   cfg.activation, tag=f"{etag}.act")
+        up = b.matmul(xe, wu, quantize=False, tag=f"{etag}.ffu")
+        h = b.mul(gt, up, tag=f"{etag}.gate")
+        outs.append(b.matmul(h, wd, quantize=False, tag=f"{etag}.ffd"))
+    stacked = (outs[0] if E == 1
+               else b.concat(outs, axis=-2, tag=f"{tag}.expert_stack"))
+    out = b.gather(stacked, expert_ids=ids, gates=gates, num_experts=E,
+                   capacity=cap, top_k=k, tag=f"{tag}.combine")
+    aux = dict(gates=gates, ids=ids, dispatch=buf, combine=out)
+    if m.shared_expert:
+        sg = b.act(b.matmul(x, b.param(("blocks", "moe", "shared", "wg"),
+                                       (H, F), layer=mi),
+                            tag=f"{tag}.shared.ffg"),
+                   cfg.activation, tag=f"{tag}.shared.act")
+        su = b.matmul(x, b.param(("blocks", "moe", "shared", "wu"), (H, F),
+                                 layer=mi), tag=f"{tag}.shared.ffu")
+        sh = b.mul(sg, su, tag=f"{tag}.shared.gate")
+        sd = b.matmul(sh, b.param(("blocks", "moe", "shared", "wd"), (F, H),
+                                  layer=mi), tag=f"{tag}.shared.ffd")
+        out = b.add(out, sd, tag=f"{tag}.shared.res")
+    return out, aux
+
+
+def _trace_moe(cfg: ModelConfig, seq: int, layers: Optional[int],
+               include_embed: bool) -> Graph:
+    """Pre-norm decoder stack whose FFN is MoE on every `interleave`-th
+    layer (`models/transformer.layer_is_moe` pattern: layer l is MoE iff
+    (l+1) % interleave == 0) and a dense MLP otherwise — mirroring
+    `models/transformer.apply` for family "moe"."""
+    _check_block_supported(cfg, moe_ok=True)
+    b = GraphBuilder()
+    S, H, A, KV = seq, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd, F = cfg.head_dim, cfg.d_ff
+    L = layers if layers is not None else cfg.num_layers
+    theta = cfg.rope_theta if cfg.rope == "standard" else None
+    step = cfg.moe.interleave
+    if include_embed:
+        tokens = b.input("tokens", (S,), dtype="int32")
+        x = b.embed(tokens, b.param(("embed",), (cfg.vocab_size, H)),
+                    tag="embed.tok")
+    else:
+        x = b.input("x", (S, H))
+    mi = di = 0                      # moe / dense-mlp stacked-param indices
+    for l in range(L):
+        tag = f"blk{l}"
+        h = _dense_norm(b, cfg, x, ("blocks", "ln1"), l, f"{tag}.ln1")
+        attn = _attention(b, h, l, S=S, H=H, A=A, KV=KV, hd=hd,
+                          qkv_bias=cfg.qkv_bias, causal=cfg.causal,
+                          rope_theta=theta, tag=tag)
+        x = b.add(x, attn, tag=f"{tag}.res_a")
+        h2 = _dense_norm(b, cfg, x, ("blocks", "ln2"), l, f"{tag}.ln2")
+        if (l + 1) % step == 0:
+            down, _ = _moe_ffn(b, cfg, h2, mi, S=S, tag=tag)
+            mi += 1
+        else:
+            down = _dense_mlp(b, cfg, h2, di, H=H, F=F, tag=tag)
+            di += 1
+        x = b.add(x, down, tag=f"{tag}.res_b")
+    x = _dense_norm(b, cfg, x, ("ln_f",), None, "ln_f")
+    if include_embed:
+        x = _logits_head(b, cfg, x)
+    b.output(x)
+    return b.g
+
+
+def trace_moe_block(cfg: ModelConfig, seq: int, *, layer: int = 0,
+                    debug_outputs: bool = False) -> Graph:
+    """Graph of ONE MoE FFN block over an (S, D) hidden-state input — the
+    isolated unit the dispatch property tests validate bitwise against
+    `models/moe.apply` (feed params under {"blocks": {"moe": ...}}).
+    debug_outputs=True additionally marks the routing intermediates
+    (gates, indices, dispatch buffer) as graph outputs."""
+    b = GraphBuilder()
+    x = b.input("x", (seq, cfg.d_model))
+    out, aux = _moe_ffn(b, cfg, x, layer, S=seq, tag=f"moe{layer}")
+    b.output(out)
+    if debug_outputs:
+        b.output(aux["gates"])
+        b.output(aux["ids"])
+        b.output(aux["dispatch"])
+    return b.g
+
+
+# ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
 
-_TRACERS = {"bert": _trace_bert, "dense": _trace_dense}
+_TRACERS = {"bert": _trace_bert, "dense": _trace_dense, "moe": _trace_moe}
 
 
 def trace_model(cfg: ModelConfig, seq: int, *, layers: Optional[int] = None,
@@ -450,9 +599,12 @@ def trace_decode(cfg: ModelConfig, cache_len: int, *,
     """
     tracer = _DECODE_TRACERS.get(cfg.family)
     if tracer is None:
+        gap = ("MoE decode streams (per-token capacity-1 dispatch)"
+               if cfg.family == "moe"
+               else f"decode streams for family {cfg.family!r}")
         raise CompileError(
-            f"npec has no decode tracer for family {cfg.family!r} "
-            f"({cfg.name!r}) yet (see ROADMAP.md Open items)")
+            f"npec cannot lower {gap} yet ({cfg.name!r}) "
+            "(see ROADMAP.md Open items)")
     return tracer(cfg, cache_len, layers, include_embed)
 
 
@@ -524,6 +676,38 @@ def _check_bert(args) -> None:
     err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
     print(f"functional executor vs jnp encoder: max|err| = {err:.2e}")
     assert err < 1e-2, "executor diverges from the jnp model"
+
+
+def _check_moe(args) -> None:
+    """Compiled MoE prefill stream vs the family's jnp forward at smoke
+    scale (op-by-op reference, see _check_decode for the disable_jit
+    rationale); gated at the conformance suite's float tolerance."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.overlay import NPEHardware
+    from repro.models import registry
+    from repro.npec import compile_model, execute
+
+    hw = NPEHardware(vrwidth=args.vrwidth)
+    scfg = dataclasses.replace(get_config(args.model, smoke=True),
+                               dtype="float32")
+    S = 16
+    params = registry.init_params(scfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0,
+                                scfg.vocab_size)
+    compiled = compile_model(scfg, S, hw, bits=args.bits)
+    with jax.disable_jit():
+        got = execute(compiled, params, {"tokens": tokens})[0]
+        want = registry.apply(scfg, params, tokens, remat=False)
+    err = float(np.max(np.abs(np.asarray(got)
+                              - np.asarray(want, np.float32))))
+    print(f"moe stream vs registry.apply ({scfg.moe.num_experts} experts, "
+          f"top-{scfg.moe.top_k}): max|err| = {err:.2e}")
+    assert err < 1e-6, "moe stream diverges from the jnp forward"
 
 
 def _check_decode(args) -> None:
@@ -607,6 +791,8 @@ def main(argv=None) -> None:
     if args.check:
         if cfg.family == "bert" and not args.decode:
             _check_bert(args)
+        if cfg.family == "moe" and not args.decode:
+            _check_moe(args)
         if cfg.family in _DECODE_TRACERS:
             _check_decode(args)
         print("npec check OK")

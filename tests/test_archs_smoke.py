@@ -109,6 +109,37 @@ def test_decode_matches_forward_rwkv():
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.parametrize("arch", ["granite_moe_1b_a400m",
+                                  "llama4_maverick_400b_a17b"])
+def test_npec_moe_compile_smoke(arch):
+    """ISSUE gate: the MoE archs compile through the NPE compiler (no
+    CompileError) and schedule to a busy two-unit timeline with routing
+    traffic on MRU/MWU."""
+    from repro import npec
+    from repro.core.overlay import NPEHardware
+
+    cfg = get_config(arch, smoke=True)
+    compiled = npec.compile_model(cfg, 16, NPEHardware(), bits=8,
+                                  include_embed=False)
+    stats = npec.greedy_schedule(compiled)
+    assert stats["total_cycles"] > 0
+    counts = compiled.counts_by_unit()
+    assert counts["MMU"] > 0 and counts["NVU"] > 0
+    assert counts["MRU"] > 0 and counts["MWU"] > 0
+
+
+@pytest.mark.parametrize("arch", ["whisper_base", "rwkv6_3b", "hymba_1_5b"])
+def test_npec_unsupported_families_still_raise(arch):
+    """The remaining un-lowerable families fail loudly with a message
+    naming the gap (family + config + ROADMAP pointer)."""
+    from repro import npec
+
+    cfg = get_config(arch, smoke=True)
+    with pytest.raises(npec.CompileError, match="ROADMAP") as ei:
+        npec.trace_model(cfg, 16)
+    assert cfg.family in str(ei.value) or cfg.name in str(ei.value)
+
+
 def test_sliding_window_cache_ring():
     """Ring cache beyond the window must match the full forward."""
     import dataclasses

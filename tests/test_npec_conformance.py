@@ -1,0 +1,180 @@
+"""Cross-family compiler conformance suite (repro.npec).
+
+ONE parametrized matrix — family × seq × NPE mode — drives every traceable
+family through the full pipeline (trace -> lower -> schedule -> exec) and
+gates the executed stream against that family's jnp reference with the
+shared tolerance fixtures from tests/conftest.py (float 1e-6, NPE 5e-3).
+Adding a tracer family means adding ONE row to `CASES` (and its reference
+callable), not a new test file — bert, dense, and moe all register here.
+
+References run op-by-op (`jax.disable_jit`): op-for-op the compiled
+streams are bitwise faithful to the jnp models, and XLA's FMA fusion in a
+jitted reference would add ulp noise unrelated to the compiler.
+
+Also here: the MoE structural gates (routing ops present, capacity
+formula, dispatch traffic on MRU/MWU, skinny per-expert tiles) and the
+bit-exact regression guard for results/npec_moe_cycles.json.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import npec
+from repro.configs import get_config
+
+
+# ---------------------------------------------------------------------------
+# The conformance matrix: one row per traceable family
+# ---------------------------------------------------------------------------
+
+def _bert_reference(cfg, params, tokens):
+    """bert traces to encoder hidden states (no logits head)."""
+    from repro.models import bert as bert_mod
+    from repro.models import common as cm
+    return bert_mod.encode(cfg, cm.cast_tree(params, cfg.dtype), tokens)
+
+
+def _logits_reference(cfg, params, tokens):
+    """dense/moe prefill traces end at the logits head — compare against
+    the family's full forward (`registry.apply`)."""
+    from repro.models import registry
+    return registry.apply(cfg, params, tokens, remat=False)
+
+
+# arch -> reference callable.  One entry per (family, interesting variant):
+# bert (post-norm encoder), glm4 (dense pre-norm GQA), granite (all-MoE,
+# softmax top-8 router), llama4 (interleaved MoE, sigmoid top-1 router +
+# shared expert).  Future families (whisper, rwkv6, starcoder2) add rows.
+CASES = {
+    "bert_base": _bert_reference,
+    "glm4_9b": _logits_reference,
+    "granite_moe_1b_a400m": _logits_reference,
+    "llama4_maverick_400b_a17b": _logits_reference,
+}
+
+SEQS = (8, 16)
+MODES = ("float", "npe")
+
+
+def _setup(arch, seq):
+    import jax
+    from repro.models import registry
+
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype="float32")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, seq), 0,
+                                cfg.vocab_size)
+    return cfg, params, tokens
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("seq", SEQS)
+@pytest.mark.parametrize("arch", sorted(CASES))
+def test_conformance_matrix(arch, seq, mode, tol_for, npe_hw):
+    """ISSUE gate: every traceable family's compiled stream matches its
+    jnp reference — float 1e-6, NPE mode (int8 MMU + PWL NVU) 5e-3."""
+    import jax
+
+    cfg, params, tokens = _setup(arch, seq)
+    bits = 8 if mode == "npe" else 16
+    ref_cfg = (cfg.with_npe(quant_bits=bits, segments=16)
+               if mode == "npe" else cfg)
+    compiled = npec.compile_model(cfg, seq, npe_hw, bits=bits)
+    stats = npec.greedy_schedule(compiled)
+    assert stats["total_cycles"] > 0
+    with jax.disable_jit():
+        got = npec.execute(compiled, params, {"tokens": tokens},
+                           cfg=ref_cfg)[0]
+        want = CASES[arch](ref_cfg, params, tokens)
+    err = float(np.max(np.abs(np.asarray(got)
+                              - np.asarray(want, np.float32))))
+    assert err <= tol_for(mode), (arch, seq, mode, err)
+
+
+# ---------------------------------------------------------------------------
+# MoE structural gates
+# ---------------------------------------------------------------------------
+
+MOE_ARCHS = ["granite_moe_1b_a400m", "llama4_maverick_400b_a17b"]
+
+
+@pytest.mark.parametrize("arch", MOE_ARCHS)
+def test_moe_stream_structure(arch, npe_hw):
+    """MoE graphs carry the routing ops; dispatch/combine lower to MRU/MWU
+    traffic; capacity follows C = max(1, int(S*k/E * cf)); and every
+    per-expert FFN matmul is a skinny C-row tile charged by
+    mmu_tiling_summary."""
+    cfg = get_config(arch, smoke=True)
+    S = 16
+    compiled = npec.compile_model(cfg, S, npe_hw, bits=16,
+                                  include_embed=False)
+    g = compiled.graph
+    ops = g.count_ops()
+    m = cfg.moe
+    n_moe = cfg.num_layers // m.interleave
+    cap = npec.moe_capacity(cfg, S)
+    assert cap == max(1, int(S * m.top_k / m.num_experts
+                             * m.capacity_factor))
+    # two topk nodes (values + indices) and one scatter per MoE layer;
+    # E expert gathers + 1 combine gather per MoE layer
+    assert ops["topk"] == 2 * n_moe
+    assert ops["scatter_slot"] == n_moe
+    assert ops["gather"] == (m.num_experts + 1) * n_moe
+    for n in g.nodes:
+        if n.op == "scatter_slot":
+            assert n.shape == (m.num_experts, cap, cfg.d_model)
+            assert n.attrs["capacity"] == cap
+    counts = compiled.counts_by_unit()
+    assert counts["MWU"] == n_moe                      # one scatter each
+    assert counts["MRU"] == (m.num_experts + 1) * n_moe
+    # per-expert FFN matmuls are C-row tiles -> skinny vs the 128 PE rows
+    expert_mms = [i for i in compiled.instrs
+                  if i.unit == "MMU" and ".x" in i.tag and i.shape[0] == cap]
+    assert len(expert_mms) == 3 * m.num_experts * n_moe
+    for i in expert_mms:
+        assert i.meta["tiling"]["efficiency"] <= cap / npe_hw.mmu_pes + 1e-9
+    # the NVU carries the router nonlinearity and the top-k sweeps
+    nvu_topk = [i for i in compiled.instrs
+                if i.unit == "NVU" and i.op == "topk"]
+    assert len(nvu_topk) == n_moe
+    for i in nvu_topk:
+        assert i.meta["passes"] == m.top_k
+
+
+@pytest.mark.parametrize("arch", MOE_ARCHS)
+def test_moe_router_matmuls_stay_float(arch, npe_hw):
+    """Router/expert matmuls are pinned to the float path (the reference
+    computes them as plain einsums even in NPE mode); the shared expert
+    and attention projections stay quantizable."""
+    cfg = get_config(arch, smoke=True)
+    g = npec.trace_model(cfg, 8, include_embed=False)
+    routed = [n for n in g.nodes if n.op == "matmul"
+              and (".router" in n.tag or ".x" in n.tag)]
+    assert routed
+    for n in routed:
+        assert n.attrs["quantize"] is False, n.tag
+    rest = [n for n in g.nodes if n.op == "matmul"
+            and not (".router" in n.tag or ".x" in n.tag)]
+    assert rest
+    for n in rest:
+        assert n.attrs["quantize"] is True, n.tag
+
+
+def test_moe_decode_still_raises_with_named_gap():
+    """Decode MoE streams are a ROADMAP follow-up; the gap is named."""
+    with pytest.raises(npec.CompileError, match="MoE decode"):
+        npec.trace_decode(get_config("granite_moe_1b_a400m", smoke=True), 16)
+
+
+# ---------------------------------------------------------------------------
+# Cycle-record regression guard vs results/npec_moe_cycles.json
+# ---------------------------------------------------------------------------
+
+def test_moe_cycle_record_regression():
+    """The committed MoE routing-stream cycle record must be reproducible
+    bit-for-bit from the current compiler + cost model (scheduler changes
+    that shift MoE cycle counts fail loudly here)."""
+    from conftest import assert_cycle_record
+    assert_cycle_record("npec_moe_cycles.json", "npec_moe_cycles/v1",
+                        "npec_moe")

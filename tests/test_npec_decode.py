@@ -17,8 +17,6 @@ Three gates:
     record must be regenerated via `python -m benchmarks.run`).
 """
 import dataclasses
-import json
-from pathlib import Path
 
 import numpy as np
 import pytest
@@ -28,7 +26,6 @@ from repro.core.overlay import NPEHardware
 from repro import npec
 
 HW = NPEHardware(vrwidth=1024)
-RESULTS = Path(__file__).resolve().parent.parent / "results"
 
 
 # ---------------------------------------------------------------------------
@@ -172,15 +169,6 @@ def test_decode_cycles_scale_with_cache_len():
 def test_decode_cycle_record_regression():
     """The committed autoregressive throughput record must be reproducible
     bit-for-bit from the current compiler + cost model."""
-    import sys
-    sys.path.insert(0, str(RESULTS.parent))     # benchmarks/ lives at root
-    import benchmarks.paper_tables as pt
-
-    path = RESULTS / "npec_decode_cycles.json"
-    record = json.loads(path.read_text())
-    assert record["schema"] == "npec_decode_cycles/v1"
-    got = pt.npec_decode()
-    assert got == record["rows"], (
-        "autoregressive cycle model drifted from results/"
-        "npec_decode_cycles.json — regenerate with `python -m "
-        "benchmarks.run` if the change is intentional")
+    from conftest import assert_cycle_record
+    assert_cycle_record("npec_decode_cycles.json", "npec_decode_cycles/v1",
+                        "npec_decode")
