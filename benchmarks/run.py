@@ -8,8 +8,10 @@ trajectory to track: npec-compiled vs hand-built BERT cycle counts per
 (seq, bits) to results/npec_cycles.json, autoregressive prefill+decode
 throughput from compiled KV-cache streams to
 results/npec_decode_cycles.json (guarded by tests/test_npec_decode.py),
-and compiled MoE routing super-blocks to results/npec_moe_cycles.json
-(guarded by tests/test_npec_conformance.py).
+compiled MoE routing super-blocks to results/npec_moe_cycles.json
+(guarded by tests/test_npec_conformance.py), and batched-decode serving
+streams + engine runs to results/npec_serve_cycles.json (guarded by
+tests/test_npec_runtime.py).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -79,6 +81,7 @@ def write_npec_record(path: Path, rows=None,
         from benchmarks import paper_tables
         rows = (paper_tables.npec_decode() if "decode" in schema
                 else paper_tables.npec_moe() if "moe" in schema
+                else paper_tables.npec_serve() if "serve" in schema
                 else paper_tables.npec_vs_hand())
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(
@@ -98,10 +101,13 @@ def main(argv=None):
     ap.add_argument("--json-out-moe",
                     default="results/npec_moe_cycles.json",
                     help="MoE routing-stream cycle record ('' disables)")
+    ap.add_argument("--json-out-serve",
+                    default="results/npec_serve_cycles.json",
+                    help="batched-serve cycle record ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_tables
-    npec_rows = decode_rows = moe_rows = None
+    npec_rows = decode_rows = moe_rows = serve_rows = None
     for name, fn in paper_tables.ALL.items():
         t0 = time.perf_counter()
         rows = fn()
@@ -113,6 +119,8 @@ def main(argv=None):
             decode_rows = rows
         elif name == "npec_moe":
             moe_rows = rows
+        elif name == "npec_serve":
+            serve_rows = rows
 
     if args.json_out:
         write_npec_record(Path(args.json_out), npec_rows)
@@ -122,6 +130,9 @@ def main(argv=None):
     if args.json_out_moe:
         write_npec_record(Path(args.json_out_moe), moe_rows,
                           schema="npec_moe_cycles/v1")
+    if args.json_out_serve:
+        write_npec_record(Path(args.json_out_serve), serve_rows,
+                          schema="npec_serve_cycles/v1")
 
     if not args.skip_kernels:
         _print_table("kernel_microbench", bench_kernels(args.quick))

@@ -61,3 +61,37 @@ if missing:
         f"repro/npec/ir.py — missing {missing}")
 print("docs/compiler.md MoE op names check OK")
 PY
+
+# serving smoke: the compiled-stream engine end to end (batched decode
+# stream + compiled prefill + cycle clock) on a tiny workload
+python -m repro.launch.serve --backend npec --smoke
+
+# docs drift gate: docs/serving.md's occupancy/latency constants must
+# match the committed serve record (results/npec_serve_cycles.json)
+python - <<'PY'
+import json
+from pathlib import Path
+
+rec = json.loads(Path("results/npec_serve_cycles.json").read_text())
+assert rec["schema"] == "npec_serve_cycles/v1"
+doc = Path("docs/serving.md").read_text()
+step = {(r["batch"], r["mmu_bits"]): r for r in rec["rows"]
+        if r["kind"] == "step"}
+eng = {r["mmu_bits"]: r for r in rec["rows"] if r["kind"] == "engine"}
+needed = {
+    "B=1 occupancy": f"{100 * step[(1, 16)]['mmu_row_occupancy']:.2f}%",
+    "B=8 occupancy": f"{100 * step[(8, 16)]['mmu_row_occupancy']:.2f}%",
+    "B=8 occupancy gain": f"{step[(8, 16)]['occupancy_gain']:.2f}",
+    "B=1 sustained tok/s (16-bit)": f"{step[(1, 16)]['sustained_tok_s']:.1f} tok/s",
+    "B=8 sustained tok/s (16-bit)": f"{step[(8, 16)]['sustained_tok_s']:.1f} tok/s",
+    "engine p50 (8-bit)": f"{eng[8]['p50_ms']:.2f} ms",
+    "engine p99 (8-bit)": f"{eng[8]['p99_ms']:.2f} ms",
+    "engine tok/s (8-bit)": f"{eng[8]['tok_s']:.1f} tokens/sec",
+}
+missing = [k for k, token in needed.items() if token not in doc]
+if missing:
+    raise SystemExit(
+        f"docs/serving.md out of sync with results/npec_serve_cycles.json "
+        f"— missing {missing}")
+print("docs/serving.md serving constants check OK")
+PY

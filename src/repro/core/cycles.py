@@ -238,6 +238,44 @@ def decode_step_cycles(hw: NPEHardware, shape: BertShape, cache_len: int,
     }
 
 
+def batched_decode_step_cycles(hw: NPEHardware, shape: BertShape,
+                               cache_len: int, batch: int, bits: int,
+                               nvu_source: str = "paper") -> Dict[str, float]:
+    """Cycles for ONE *batched* decode step: `batch` serving slots share a
+    single compiled stream (repro.npec.trace, `trace_decode(batch=B)`), so
+    every weight projection is a merged B-row MMU tile and the PE-row
+    occupancy rises toward B/128 (`mmu_efficiency`) from the ~1/128 a
+    per-sequence stream sustains.  One layer is compiled and scaled by
+    `shape.encoders`, like `decode_step_cycles`.
+
+    `total_cycles` charges the ideal MAC rate (the paper's own budget
+    model — B tokens per step, so cycles/token is total/B);
+    `sustained_cycles` additionally charges the skinny-tile padding the
+    128-PE-row geometry actually pays (`mmu_tiling_summary`), which is
+    where batching buys real throughput: `sustained_tok_s` grows ~linearly
+    in B while the ideal-rate `tok_s` stays flat."""
+    from repro import npec
+    compiled = npec.compile_decode_bert_shape(hw, shape, cache_len, bits,
+                                              nvu_source=nvu_source,
+                                              layers=1, batch=batch)
+    stats = npec.greedy_schedule(compiled)
+    tiling = compiled.mmu_tiling_summary()
+    total = stats["total_cycles"] * shape.encoders
+    padding = (tiling["tiled_cycles"] - tiling["ideal_cycles"]) \
+        * shape.encoders
+    sustained = total + padding
+    return {
+        "total_cycles": total,
+        "sustained_cycles": sustained,
+        "cycles_per_token": total / batch,
+        "tok_s": batch * hw.clock_hz / total if total else 0.0,
+        "sustained_tok_s": (batch * hw.clock_hz / sustained
+                            if sustained else 0.0),
+        "mmu_util": stats["mmu_util"],
+        "mmu_efficiency": tiling["efficiency"],
+    }
+
+
 def autoregressive_cycles(hw: NPEHardware, shape: BertShape, new_tokens: int,
                           bits: int, nvu_source: str = "paper") -> Dict[str, float]:
     """Prefill (`shape.seq` tokens through the encoder program) + decode

@@ -70,15 +70,19 @@ def int_matmul(aq: jnp.ndarray, bq: jnp.ndarray) -> jnp.ndarray:
 
 
 def quant_dense(x: jnp.ndarray, w: QTensor, bias: Optional[jnp.ndarray] = None,
-                act_bits: int = 8) -> jnp.ndarray:
+                act_bits: int = 8,
+                act_axis: Optional[int] = None) -> jnp.ndarray:
     """The MMU primitive: quantize activations, integer matmul, dequantize.
 
     Weight scales are per-output-channel (shape (1, N) after keepdims), so
     dequantization is a single row-broadcast multiply in the epilogue —
-    exactly the MMU's "accumulate then quantize" stage.
+    exactly the MMU's "accumulate then quantize" stage.  `act_axis=0`
+    scales activations per ROW instead of per tensor — the batched decode
+    streams' semantic, where each row of a merged (B, K) tile is a
+    different sequence's activation vector arriving separately.
     """
     dt = x.dtype
-    xa = quantize(x, act_bits, axis=None)
+    xa = quantize(x, act_bits, axis=act_axis)
     acc = int_matmul(xa.q, w.q)                        # int32
     out = acc.astype(jnp.float32) * (xa.scale * w.scale.reshape(1, -1))
     if bias is not None:
@@ -89,12 +93,16 @@ def quant_dense(x: jnp.ndarray, w: QTensor, bias: Optional[jnp.ndarray] = None,
 
 def dense_maybe_quant(x: jnp.ndarray, w: jnp.ndarray,
                       bias: Optional[jnp.ndarray] = None,
-                      npe_quant: bool = False, bits: int = 8) -> jnp.ndarray:
+                      npe_quant: bool = False, bits: int = 8,
+                      act_axis: Optional[int] = None) -> jnp.ndarray:
     """Dense layer that routes through the MMU when the NPE mode is on.
 
     `w` is kept in float master form (training still works); quantization is
     applied functionally, matching the paper's post-training quantization
-    flow ([28] Q8BERT-style symmetric).
+    flow ([28] Q8BERT-style symmetric).  `act_axis=0` quantizes activation
+    rows independently (after flattening lead axes): bitwise-identical to
+    per-tensor for a single row, and what keeps a merged batched-decode
+    tile equivalent to its B independent per-sequence rows.
     """
     if not npe_quant:
         return x @ w if bias is None else x @ w + bias
@@ -103,14 +111,14 @@ def dense_maybe_quant(x: jnp.ndarray, w: jnp.ndarray,
     if bits == 8:
         # True integer path: int8 x int8 -> int32 is exact for K <= 2^17.
         wq = quantize(w, bits, axis=1)
-        y = quant_dense(x2, wq, bias, act_bits=bits)
+        y = quant_dense(x2, wq, bias, act_bits=bits, act_axis=act_axis)
     else:
         # 16-bit MMU mode.  int16 products overflow int32 accumulators and
         # the TPU MXU has no int16 mode, so the 16-bit variant is modeled as
         # fake-quantization to the int16 grid with f32 accumulation — the
         # quantization error (the quantity under study) is identical; only
         # accumulator rounding differs (f32 vs the FPGA's wide adders).
-        xq = fake_quantize(x2.astype(jnp.float32), bits, axis=None)
+        xq = fake_quantize(x2.astype(jnp.float32), bits, axis=act_axis)
         wq = fake_quantize(w.astype(jnp.float32), bits, axis=1)
         y = xq @ wq
         if bias is not None:

@@ -1,15 +1,29 @@
 """Batched serving driver (the paper's deployment scenario).
 
-Continuous-batching-lite: a fixed pool of B decode slots; finished or
-empty slots are refilled from the request queue, prefill runs per refill
-(padded to the slot's prompt), decode advances all slots one token per
-step with a single jit'd serve_step.  Latency percentiles are reported
-against the paper's conversational-AI target (10-15 ms/inference for
-BERT-class models — paper §3.1).
+Two backends:
+
+  * ``--backend jnp`` (default): continuous-batching-lite over the jit'd
+    decode step — a fixed pool of B decode slots; each admitted request
+    gets a REAL prefill pass (one multi-token `decode_step` call on its
+    slot's cache slice — not the old token-by-token loop that ran one
+    full-batch decode step per prompt token and let concurrent slots'
+    zero-token feeds overwrite each other's caches), then decode advances
+    all slots one token per step.  Latency is host wall-clock.
+
+  * ``--backend npec``: the compiled-stream serving engine
+    (`repro.npec.runtime.NPEEngine`) — ONE batched decode stream with B
+    in-stream slots (B-row MMU projection tiles), compiled prefill per
+    admitted request, and p50/p99 latency + tokens/sec derived from
+    `greedy_schedule` cycle counts at the overlay's 200 MHz — the numbers
+    the paper's §3.1 conversational-AI target (10-15 ms/inference) is
+    about.  See docs/serving.md; the benchmark table lives in
+    results/npec_serve_cycles.json.
 
 For encoder-only BERT, "serving" is one encoder pass per request batch —
 see examples/serve_bert.py, which reproduces the paper's latency table
 with the NPE cycle model alongside wall-clock CPU numbers.
+
+CI smoke: PYTHONPATH=src python -m repro.launch.serve --backend npec --smoke
 """
 from __future__ import annotations
 
@@ -49,7 +63,7 @@ class ServeStats:
 
 
 class Server:
-    """Decode-slot server for autoregressive models."""
+    """Decode-slot server for autoregressive models (jnp backend)."""
 
     def __init__(self, arch: str, smoke: bool = True, batch: int = 4,
                  max_seq: int = 128, npe: bool = False):
@@ -70,20 +84,37 @@ class Server:
         with self.mesh, R.active_rules(self.rules):
             self.params = registry.init_params(cfg, key)
             self.decode = jax.jit(build_decode_step(run))
+            # prefill: the raw decode_step (logits + cache) on a 1-slot
+            # cache slice; jit recompiles per prompt length, as the old
+            # per-token path did per shape
+            self.prefill = jax.jit(
+                lambda p, c, t, pos: registry.decode_step(cfg, p, c, t,
+                                                          pos))
             self.cache = cm.init_params(
                 registry.cache_specs(cfg, batch, max_seq), key)
+        # multi-token prefill through decode_step needs append-at-pos
+        # caches everywhere; ring (windowed) caches fall back to a
+        # per-token loop on the slot's own cache slice
+        self._full_only = set(self.cache) == {"full"}
 
     def prefill_prompt(self, slot: int, prompt: np.ndarray):
-        """Feed a prompt token-by-token into one slot's cache region.
-
-        (Per-slot prefill via the decode path keeps the example simple;
-        the production prefill_step batch-lowered in launch/steps.py is
-        what the dry-run exercises at 32k.)"""
-        for t, tok in enumerate(prompt):
-            toks = np.zeros((self.batch, 1), np.int32)
-            toks[slot, 0] = tok
-            _, self.cache = self.decode(self.params, self.cache,
-                                        jnp.asarray(toks), jnp.int32(t))
+        """Prefill ONE slot with a real prefill pass: the whole prompt
+        through `decode_step` (s = len(prompt), positions 0..S-1) on this
+        slot's cache slice — one pass per request instead of one
+        full-batch zero-token step per prompt token, and no cross-slot
+        cache clobbering from the pad feeds."""
+        sub = jax.tree.map(lambda a: a[:, slot:slot + 1], self.cache)
+        if self._full_only:
+            toks = jnp.asarray(prompt, jnp.int32)[None]          # (1, S)
+            _, sub = self.prefill(self.params, sub, toks, jnp.int32(0))
+        else:
+            for t, tok in enumerate(prompt):                     # ring caches
+                _, sub = self.prefill(self.params, sub,
+                                      jnp.asarray([[tok]], jnp.int32),
+                                      jnp.int32(t))
+        self.cache = jax.tree.map(
+            lambda full, part: full.at[:, slot:slot + 1].set(part),
+            self.cache, sub)
 
     def generate(self, prompts: List[np.ndarray], gen_tokens: int = 8
                  ) -> ServeStats:
@@ -107,18 +138,69 @@ class Server:
         return stats
 
 
+def run_npec(args) -> Dict[str, float]:
+    """Compiled-stream serving: NPEEngine over the synthetic workload;
+    latency/throughput from compiled-stream cycle counts."""
+    from repro.core.overlay import NPEHardware
+    from repro.npec.runtime import NPEEngine
+
+    cfg = get_config(args.arch, smoke=True)
+    if args.dtype_float32:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    max_prompt = args.capacity - args.gen
+    if max_prompt < 4:
+        raise SystemExit(
+            f"--capacity ({args.capacity}) must be at least --gen "
+            f"({args.gen}) + 4: prompts are 4..{max_prompt} tokens and "
+            "every request must fit prompt + generation in its cache slot")
+    engine = NPEEngine(cfg, NPEHardware(vrwidth=args.vrwidth),
+                       slots=args.batch, capacity=args.capacity,
+                       max_new_tokens=args.gen, bits=args.bits,
+                       npe=args.npe, params=params)
+    reqs = SyntheticRequests(cfg.vocab_size, max_prompt=min(16, max_prompt))
+    for i in range(args.requests):
+        engine.submit(reqs.request(i))
+    report = engine.run().report()
+    print(f"npec engine ({args.arch}, B={args.batch} slots, "
+          f"T={args.capacity}, {args.bits}-bit MMU @ "
+          f"{engine.hw.clock_hz / 1e6:.0f} MHz):")
+    for k, v in report.items():
+        print(f"  {k}: {v}")
+    return report
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4_9b")
+    ap.add_argument("--backend", choices=("jnp", "npec"), default="jnp")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=48,
+                    help="npec: compiled KV-cache capacity per slot")
+    ap.add_argument("--bits", type=int, default=16)
+    ap.add_argument("--vrwidth", type=int, default=1024)
     ap.add_argument("--npe", action="store_true")
+    ap.add_argument("--dtype-float32", action="store_true",
+                    help="npec: force float32 params (test parity)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload (CI): 2 slots, 4 requests, 4 tokens")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.batch, args.requests, args.gen = 2, 4, 4
+        args.capacity = min(args.capacity, 24)
+    if args.backend == "npec":
+        run_npec(args)
+        print("serve OK")
+        return
     srv = Server(args.arch, smoke=True, batch=args.batch, npe=args.npe)
     reqs = SyntheticRequests(srv.cfg.vocab_size, max_prompt=16)
     prompts = [reqs.request(i) for i in range(args.batch)]
     stats = srv.generate(prompts, gen_tokens=args.gen)
     print(stats.report())
+    print("serve OK")
 
 
 if __name__ == "__main__":

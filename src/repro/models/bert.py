@@ -92,7 +92,8 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
         params["pos_embed"], pos, s, 0)[None].astype(x.dtype)
     x = x + params["type_embed"][0][None, None].astype(x.dtype)
     x = cm.apply_norm(cfg, params["ln_embed"], x, eps=1e-12)
-    positions = jnp.full((b, s), pos, jnp.int32)
+    positions = jnp.broadcast_to(
+        pos + jnp.arange(s, dtype=jnp.int32), (b, s))   # multi-token prefill
     cf = cache["full"]
 
     def layer_body(carry, operands):

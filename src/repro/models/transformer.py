@@ -371,7 +371,11 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
     """
     x = cm.embed(tokens, params["embed"]).astype(jnp.dtype(cfg.dtype))
     b, s, _ = x.shape
-    positions = jnp.full((b, s), pos, jnp.int32)
+    # pos + arange so a multi-token call (s > 1: a whole-prompt prefill
+    # into the cache, launch/serve.py) rotates/masks each row at its own
+    # position; single-token decode (s == 1) is unchanged
+    positions = jnp.broadcast_to(
+        pos + jnp.arange(s, dtype=jnp.int32), (b, s))
     if cfg.rope == "mrope":
         positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
     if cfg.rope == "learned":

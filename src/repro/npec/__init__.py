@@ -29,7 +29,12 @@ Entry points:
     compile_model(cfg, seq, hw, ...)    trace + lower a registered model
                                         (prefill).
     compile_decode(cfg, T, hw, ...)     trace + lower a one-token decode
-                                        step over a KV cache of capacity T.
+                                        step over a KV cache of capacity T
+                                        (batch=B: one merged B-slot stream,
+                                        B-row MMU tiles, per-slot banks).
+    compile_prefill(cfg, S, hw, ...)    serving prefill: causal pass with
+                                        kv exports that seed a decode
+                                        slot's cache banks.
     compile_bert_shape(hw, shape, ...)  dims-only BERT path used as the
                                         `backend="npec"` of core.cycles.
     compile_decode_bert_shape(...)      dims-only decode step — the cost
@@ -38,7 +43,11 @@ Entry points:
     greedy_schedule / issue_order       schedule a CompiledProgram.
     execute / DecodeSession             run it numerically (DecodeSession
                                         carries KV-cache state across
-                                        steps).
+                                        steps; batched-slot streams get
+                                        per-slot pos/reset/load_slot).
+
+The serving layer over all of this lives in repro.npec.runtime
+(`NPEEngine`: continuous batching + cycle-clocked latency; docs/serving.md).
 
 Cross-checks: the compiled BERT-base stream matches the hand-built program
 in `core.cycles.build_encoder_program` on per-unit instruction counts and
@@ -60,7 +69,7 @@ from repro.npec.lower import (CompiledProgram, LoweredInstr, lower,
 from repro.npec.schedule import greedy_schedule, issue_order
 from repro.npec.trace import (CompileError, moe_capacity, trace_bert_shape,
                               trace_decode, trace_decode_bert_shape,
-                              trace_model, trace_moe_block)
+                              trace_model, trace_moe_block, trace_prefill)
 from repro.npec.exec import DecodeSession, ExecResult, execute
 
 
@@ -86,20 +95,40 @@ def compile_bert_shape(hw: NPEHardware, shape, bits: int,
 def compile_decode(cfg: ModelConfig, cache_len: int,
                    hw: Optional[NPEHardware] = None, *, bits: int = 16,
                    nvu_source: str = "paper", layers: Optional[int] = None,
-                   include_embed: bool = True) -> CompiledProgram:
+                   include_embed: bool = True,
+                   batch: int = 1) -> CompiledProgram:
     """Trace one decode step of `cfg` over a KV cache of capacity
     `cache_len` and lower it to the overlay.  Execute statefully with
-    `DecodeSession`."""
+    `DecodeSession`.  batch=B compiles the merged B-slot stream the
+    serving engine (repro.npec.runtime) clocks: B-row projection tiles,
+    per-slot cache banks, a (B,) pos vector."""
     hw = hw if hw is not None else NPEHardware()
     return lower(trace_decode(cfg, cache_len, layers=layers,
-                              include_embed=include_embed),
+                              include_embed=include_embed, batch=batch),
+                 hw, bits=bits, nvu_source=nvu_source)
+
+
+def compile_prefill(cfg: ModelConfig, seq: int,
+                    hw: Optional[NPEHardware] = None, *, bits: int = 16,
+                    nvu_source: str = "paper", layers: Optional[int] = None,
+                    include_embed: bool = True) -> CompiledProgram:
+    """Trace + lower the *serving prefill* stream for a `seq`-token
+    prompt: causal, ends at the logits head, and exports each kv head's
+    (S, head_dim) k/v rows (`Graph.kv_exports`) so `DecodeSession.
+    load_slot` can seed a decode slot from one executed pass."""
+    hw = hw if hw is not None else NPEHardware()
+    return lower(trace_prefill(cfg, seq, layers=layers,
+                               include_embed=include_embed),
                  hw, bits=bits, nvu_source=nvu_source)
 
 
 def compile_decode_bert_shape(hw: NPEHardware, shape, cache_len: int,
                               bits: int, *, nvu_source: str = "paper",
-                              layers: int = 1) -> CompiledProgram:
+                              layers: int = 1,
+                              batch: int = 1) -> CompiledProgram:
     """Compile a dims-only decode step for a `core.cycles.BertShape` —
-    the per-step cost model behind autoregressive serving tables."""
-    return lower(trace_decode_bert_shape(shape, cache_len, layers=layers),
+    the per-step cost model behind autoregressive serving tables.
+    batch=B merges B decode slots into one stream (B-row MMU tiles)."""
+    return lower(trace_decode_bert_shape(shape, cache_len, layers=layers,
+                                         batch=batch),
                  hw, bits=bits, nvu_source=nvu_source)

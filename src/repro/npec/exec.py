@@ -42,6 +42,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Union
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 from repro.core import nvu
@@ -59,6 +60,10 @@ class ExecResult:
     # name -> post-step cache value (decode graphs only); DecodeSession
     # persists these into the next step's feeds
     cache_updates: Dict[str, jnp.ndarray] = None
+    # canonical cache name -> (S, head_dim) k/v rows (serving-prefill
+    # graphs only, `trace_prefill`); DecodeSession.load_slot seeds a
+    # decode slot's cache banks from these
+    kv_exports: Dict[str, jnp.ndarray] = None
 
     def __getitem__(self, i: int) -> jnp.ndarray:
         return self.outputs[i]
@@ -82,7 +87,7 @@ def _resolve_param(params, node: Node) -> jnp.ndarray:
 
 
 def _matmul(node: Node, a, b, bias, *, weight_resident: bool,
-            npe_quant: bool, bits: int):
+            npe_quant: bool, bits: int, act_axis=None):
     if weight_resident and not node.attrs.get("quantize", True):
         # float-pinned weight matmul (MoE router / expert streams):
         # `models/moe.apply` computes these as plain activation-dtype
@@ -93,7 +98,8 @@ def _matmul(node: Node, a, b, bias, *, weight_resident: bool,
         # (the tied-embedding logits head) is stored transposed, exactly as
         # models/common.logits_out feeds embed.T to the quantized dense
         w = jnp.swapaxes(b, -1, -2) if node.attrs.get("transpose_b") else b
-        y = dense_maybe_quant(a, w, None, npe_quant=npe_quant, bits=bits)
+        y = dense_maybe_quant(a, w, None, npe_quant=npe_quant, bits=bits,
+                              act_axis=act_axis)
     elif node.attrs.get("transpose_b"):
         y = jnp.einsum("...ik,...jk->...ij", a, b,
                        preferred_element_type=jnp.float32)
@@ -136,7 +142,9 @@ def _rmsnorm(node: Node, x, gamma, *, use_pwl: bool, segments: int):
 
 def _rope(node: Node, x, pos=None):
     """pos=None rotates row i at position i (prefill); a scalar `pos`
-    rotates every row there (decode: the one new token)."""
+    rotates every row there (decode: the one new token); a (B,) vector
+    rotates row s at pos[s] (batched decode: one merged projection, one
+    new token per slot)."""
     s = x.shape[-2]
     lead = x.shape[:-2]
     b = 1
@@ -145,6 +153,8 @@ def _rope(node: Node, x, pos=None):
     x4 = x.reshape(b, s, 1, x.shape[-1])
     if pos is None:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    elif jnp.ndim(pos) == 1:
+        positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, s))
     else:
         positions = jnp.full((b, s), pos, jnp.int32)
     y = cm.apply_rope(x4, positions, node.attrs["theta"])
@@ -245,6 +255,14 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
         npe_quant, bits = cfg.npe_quant, cfg.npe_quant_bits
         use_pwl, segments = cfg.npe_pwl, cfg.npe_pwl_segments
 
+    # batched-slot decode streams (vector `pos` input) quantize MMU
+    # activations per ROW: each row of a merged (B, K) tile is a different
+    # sequence's activation vector, so per-row scales keep the stream
+    # bitwise-equivalent to B independent per-sequence rollouts
+    pos_nid = graph.inputs.get("pos")
+    act_axis = (0 if pos_nid is not None and graph.node(pos_nid).shape
+                else None)
+
     env: Dict[int, jnp.ndarray] = {}
     uses = {n.id: 0 for n in graph.nodes}
     for n in graph.nodes:
@@ -254,6 +272,8 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
         uses[o] += 1                            # outputs never freed
     for nid in graph.cache_updates.values():
         uses[nid] += 1                          # carried into the next step
+    for nid in graph.kv_exports.values():
+        uses[nid] += 1                          # handed to load_slot
 
     live = 0
     peak = 0
@@ -287,7 +307,8 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
             bias = get(node.inputs[2]) if len(node.inputs) > 2 else None
             wres = graph.node(node.inputs[1]).op == "param"
             put(node.id, _matmul(node, a, b, bias, weight_resident=wres,
-                                 npe_quant=npe_quant, bits=bits))
+                                 npe_quant=npe_quant, bits=bits,
+                                 act_axis=act_axis))
         elif op == "softmax":
             x = get(node.inputs[0])
             posv = (get(node.inputs[1]) if len(node.inputs) > 1 else None)
@@ -351,15 +372,30 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
             c = get(node.inputs[0])
             new = get(node.inputs[1])
             posv = get(node.inputs[2])
+            slot = node.attrs.get("slot")
+            if slot is not None:
+                # batched stream: row `slot` of the merged (B, hd)
+                # projection, written at this slot's own position
+                new = new[..., slot:slot + 1, :]
+                posv = posv[..., slot]
             cap = node.shape[-2]
             hit = (jnp.arange(cap, dtype=jnp.int32) == posv)[:, None]
             put(node.id, jnp.where(hit, new, c))
+        elif op == "slot_select":
+            x = get(node.inputs[0])
+            i = node.attrs["index"]
+            if len(graph.node(node.inputs[0]).shape) == 1:
+                put(node.id, x[..., i])
+            else:
+                put(node.id, x[..., i:i + 1, :])
         else:
             raise NotImplementedError(f"executor has no rule for {op!r}")
 
     return ExecResult([env[o] for o in graph.outputs], peak, n_instrs,
                       {name: env[nid]
-                       for name, nid in graph.cache_updates.items()})
+                       for name, nid in graph.cache_updates.items()},
+                      {name: env[nid]
+                       for name, nid in graph.kv_exports.items()})
 
 
 class DecodeSession:
@@ -370,6 +406,20 @@ class DecodeSession:
     live across steps (MMEM-resident state), and each `step()` runs the
     stream at the current `pos` — appending the new k/v, masking softmax to
     the valid prefix, and advancing the counter.
+
+    Two stream shapes (distinguished by the graph's `pos` input):
+
+      * **per-sequence** (scalar `pos`, `trace_decode(batch=1)`): one
+        position counter; feeds may carry a leading batch axis and the
+        whole graph vectorizes over it (`batch=` sizes the caches).
+      * **batched-slot** ((B,) `pos`, `trace_decode(batch=B)`): B serving
+        slots live *inside* the stream — per-slot cache banks
+        (`...slotS.k/v`), a per-slot position vector, merged B-row weight
+        projections.  Slots advance independently: `step(tokens, active=)`
+        bumps only active slots, `reset_slot` recycles one for a new
+        request, and `load_slot` seeds its banks from an executed prefill
+        (`trace_prefill` kv exports).  This is the stream the serving
+        engine (repro.npec.runtime) clocks.
 
     `params` is the registry parameter tree; NPE numerics follow `cfg`
     when given, else the explicit keyword flags (as in `execute`).
@@ -388,28 +438,109 @@ class DecodeSession:
         self.cfg = cfg
         self.kw = dict(npe_quant=npe_quant, bits=bits, use_pwl=use_pwl,
                        segments=segments)
+        pos_shape = graph.node(graph.inputs["pos"]).shape
+        self.slots = pos_shape[0] if pos_shape else 1
+        self.batched = bool(pos_shape)
+        if self.batched and batch != 1:
+            raise ValueError(
+                "batched-slot streams carry their slots in-graph; "
+                "feed-level vectorization (batch != 1) does not apply")
+        lead = () if self.batched else (batch,)
         self.caches: Dict[str, jnp.ndarray] = {
-            name: jnp.zeros((batch,) + graph.node(nid).shape, jnp.float32)
+            name: jnp.zeros(lead + graph.node(nid).shape, jnp.float32)
             for name, nid in graph.caches.items()}
         self.capacity = min(graph.node(nid).shape[-2]
                             for nid in graph.caches.values())
-        self.pos = 0
+        self.pos = np.zeros(self.slots, np.int64) if self.batched else 0
         self._feed_name = next(n for n in graph.inputs if n != "pos")
 
-    def step(self, tokens) -> jnp.ndarray:
-        """Run one decode step.  `tokens`: (B, 1) int32 for full graphs
-        (with embedding/logits head), or a (B, 1, H) hidden-state feed for
-        headless graphs.  Returns the step output ((B, 1, V) logits for
-        full graphs) and advances the cache state."""
-        if self.pos >= self.capacity:
+    # --- per-sequence and batched stepping --------------------------------
+
+    def step(self, tokens, active=None) -> jnp.ndarray:
+        """Run one decode step.
+
+        Per-sequence streams: `tokens` is (B, 1) int32 for full graphs
+        (with embedding/logits head), or (B, 1, H) hidden states for
+        headless graphs; returns (B, 1, V) logits (resp. hidden states)
+        and advances the shared position.
+
+        Batched-slot streams: `tokens` is (B,) (or (B, 1)) int32 — one
+        token per slot — or (B, H) hidden states for headless graphs;
+        `active` optionally masks which slots advance their position
+        (idle slots still flow through the fixed stream, their outputs
+        are ignored and their counters hold).  Returns the (B, V) step
+        output.  Either mode raises on a pos overflow past the compiled
+        cache capacity instead of silently masking to garbage.
+        """
+        if not self.batched:
+            if self.pos >= self.capacity:
+                raise ValueError(
+                    f"KV cache capacity {self.capacity} exhausted at "
+                    f"pos={self.pos}; compile a longer stream")
+            feeds: Dict[str, Any] = dict(self.caches)
+            feeds["pos"] = jnp.int32(self.pos)
+            feeds[self._feed_name] = tokens
+            res = execute(self.compiled, self.params, feeds, cfg=self.cfg,
+                          **self.kw)
+            self.caches.update(res.cache_updates)
+            self.pos += 1
+            return res[0]
+        active = (np.ones(self.slots, bool) if active is None
+                  else np.asarray(active, bool))
+        over = np.flatnonzero(active & (self.pos >= self.capacity))
+        if over.size:
             raise ValueError(
-                f"KV cache capacity {self.capacity} exhausted at "
-                f"pos={self.pos}; compile a longer stream")
-        feeds: Dict[str, Any] = dict(self.caches)
-        feeds["pos"] = jnp.int32(self.pos)
-        feeds[self._feed_name] = tokens
+                f"KV cache capacity {self.capacity} exhausted for slot(s) "
+                f"{over.tolist()} at pos={self.pos[over].tolist()}; evict "
+                "or compile a longer stream")
+        toks = jnp.asarray(tokens)
+        if toks.ndim == 2 and toks.shape[-1] == 1 and toks.dtype != jnp.float32:
+            toks = toks[:, 0]
+        feeds = dict(self.caches)
+        feeds["pos"] = jnp.asarray(self.pos, jnp.int32)
+        feeds[self._feed_name] = toks
         res = execute(self.compiled, self.params, feeds, cfg=self.cfg,
                       **self.kw)
         self.caches.update(res.cache_updates)
-        self.pos += 1
+        self.pos = self.pos + active.astype(self.pos.dtype)
         return res[0]
+
+    # --- slot lifecycle (batched streams; the engine's admit/evict) -------
+
+    def _check_slot(self, slot: int) -> None:
+        if not self.batched:
+            raise ValueError("slot lifecycle applies to batched-slot "
+                             "streams (trace_decode(batch=B)) only")
+        if not 0 <= slot < self.slots:
+            raise ValueError(f"slot {slot} out of range [0, {self.slots})")
+
+    def reset_slot(self, slot: int) -> None:
+        """Recycle one slot: zero its cache banks and position counter."""
+        self._check_slot(slot)
+        key = f".slot{slot}."
+        for name in self.caches:
+            if key in name:
+                self.caches[name] = jnp.zeros_like(self.caches[name])
+        self.pos[slot] = 0
+
+    def load_slot(self, slot: int, kv: Dict[str, jnp.ndarray],
+                  n_tokens: int) -> None:
+        """Seed one slot from an executed serving prefill: `kv` maps the
+        canonical cache names (`ExecResult.kv_exports`) to (S, head_dim)
+        rows, written into this slot's banks at positions [0, S); the
+        slot's counter starts at `n_tokens`."""
+        self._check_slot(slot)
+        if n_tokens > self.capacity:
+            raise ValueError(
+                f"prefill of {n_tokens} tokens exceeds the compiled cache "
+                f"capacity {self.capacity}")
+        self.reset_slot(slot)
+        for name, rows in kv.items():
+            base, leaf = name.rsplit(".", 1)
+            bank = f"{base}.slot{slot}.{leaf}"
+            if bank not in self.caches:
+                raise KeyError(f"no cache bank {bank!r} for export {name!r}")
+            arr = jnp.asarray(rows, jnp.float32)
+            arr = arr.reshape(arr.shape[-2:])       # drop any lead axes
+            self.caches[bank] = self.caches[bank].at[: arr.shape[0]].set(arr)
+        self.pos[slot] = n_tokens

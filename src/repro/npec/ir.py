@@ -51,6 +51,19 @@ int32 `pos` node — and masks key slots > pos (attr cache_masked); ``rope``
 takes an optional second input rotating every row at position `pos` instead
 of its static row index.
 
+Batched decode streams (B serving slots sharing ONE stream — the runtime
+engine's step, see repro.npec.runtime) add two wrinkles:
+  * the `pos` input is a (B,) int32 *vector* (one cache length per slot);
+    ``rope`` rotates row s at pos[s], and per-slot softmax masking reads
+    its scalar through ``slot_select``;
+  * ``slot_select``  inputs (x,); attrs index (slot id).  Slices slot s's
+                     row out of a merged (B, ...) tensor — (B, D) -> (1, D)
+                     keep-dim, or the (B,) pos vector -> scalar.  Pure
+                     MRU row addressing, folded like concat/reshape;
+  * ``cache_append`` gains an optional `slot` attr: the new-k/v operand is
+                     the merged (B, head_dim) projection and row `slot`
+                     is written into that slot's bank at pos[slot].
+
 MoE routing ops (mixture-of-experts streams, mirroring `models/moe.apply`'s
 GShard-style capacity dispatch; `MOE_OPS` below is the canonical list the
 docs-drift gate in scripts/ci.sh checks against docs/compiler.md):
@@ -81,7 +94,7 @@ from typing import Any, Dict, List, Optional, Tuple
 COMPUTE_OPS = ("matmul", "softmax", "layernorm", "rmsnorm", "act", "rope",
                "topk")
 FOLDED_OPS = ("input", "param", "add", "mul", "concat", "embed",
-              "reshape", "cache", "cache_append")
+              "reshape", "cache", "cache_append", "slot_select")
 # MoE routing ops: `topk` values lower to an NVU instruction; `gather` /
 # `scatter_slot` lower to MRU/MWU traffic instructions (memory ops, not
 # compute).  This tuple is what the ci.sh docs gate greps docs/compiler.md
@@ -110,6 +123,9 @@ class Graph:
         self.outputs: List[int] = []
         self.caches: Dict[str, int] = {}      # name -> cache node id
         self.cache_updates: Dict[str, int] = {}  # name -> cache_append id
+        # serving-prefill graphs: canonical cache name ("enc0.kv0.k") ->
+        # the (S, head_dim) node whose rows seed a decode cache bank
+        self.kv_exports: Dict[str, int] = {}
 
     # --- construction ----------------------------------------------------
 
@@ -230,13 +246,26 @@ class GraphBuilder:
     def cache(self, name, shape, dtype="float32"):
         return self.g.add_cache(name, shape, dtype)
 
-    def cache_append(self, cache, new, pos, tag=""):
+    def cache_append(self, cache, new, pos, *, slot=None, tag=""):
+        """slot=s (batched decode streams): `new` is the merged (B, hd)
+        projection and `pos` the (B,) per-slot position vector — row s is
+        written into this cache bank at pos[s]."""
         cn = self.g.node(cache)
         name = cn.attrs["name"]
         nid = self.g.add("cache_append", (cache, new, pos), cn.shape,
-                         cn.dtype, tag=tag or f"{name}.append", name=name)
+                         cn.dtype, tag=tag or f"{name}.append", name=name,
+                         slot=slot)
         self.g.cache_updates[name] = nid
         return nid
+
+    def slot_select(self, x, index, tag=""):
+        """Slice slot `index`'s row out of a merged batched tensor:
+        (B, D) -> (1, D) keep-dim, or a (B,) pos vector -> scalar ()."""
+        xs = self.g.node(x).shape
+        assert len(xs) in (1, 2), xs
+        shape = () if len(xs) == 1 else (1,) + tuple(xs[1:])
+        return self.g.add("slot_select", (x,), shape,
+                          dtype=self.g.node(x).dtype, tag=tag, index=index)
 
     def topk(self, x, k, *, renorm=False, tag=""):
         """Top-k selection over the last axis; returns (values_id,

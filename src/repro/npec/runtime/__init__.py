@@ -1,0 +1,26 @@
+"""repro.npec.runtime — compiled-stream serving engine.
+
+The compiler (repro.npec) turns models into overlay instruction streams;
+this package *serves* from them: `NPEEngine` continuous-batches requests
+over ONE batched decode stream (B slots, B-row MMU projection tiles, see
+`trace_decode(batch=B)`), admits each request with a compiled prefill
+pass that seeds its slot's cache banks, and clocks every step with the
+`greedy_schedule` cycles of the actual compiled streams — so p50/p99
+latency and tokens/sec are properties of the compiled programs at the
+overlay's frequency, not of the host.
+
+    from repro.npec.runtime import NPEEngine
+    eng = NPEEngine(cfg, hw, slots=8, capacity=64, params=params)
+    eng.submit(prompt_tokens)
+    stats = eng.run()          # EngineStats; stats.report() -> p50/p99...
+
+Wired into `launch/serve.py --backend npec`, benchmarked by
+`benchmarks/paper_tables.py::npec_serve` (record:
+results/npec_serve_cycles.json), documented in docs/serving.md.
+"""
+from repro.npec.runtime.batch import Request, RequestQueue, SlotPool
+from repro.npec.runtime.clock import CycleClock, LatencyTracker
+from repro.npec.runtime.engine import EngineStats, NPEEngine
+
+__all__ = ["CycleClock", "EngineStats", "LatencyTracker", "NPEEngine",
+           "Request", "RequestQueue", "SlotPool"]

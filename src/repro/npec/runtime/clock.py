@@ -1,0 +1,56 @@
+"""Cycle clock: deterministic serving time from compiled-stream schedules.
+
+The overlay is a single in-order machine clocked at `NPEHardware.clock_hz`
+(200 MHz): the ICU consumes one instruction stream at a time, so serving
+time is just the sum of the scheduled stream lengths the engine chose to
+run — a prefill stream per admitted request, one batched decode stream
+per generation step.  `CycleClock` accumulates those cycle counts and
+converts them to wall-clock milliseconds at the overlay's frequency;
+every latency number the engine reports (p50/p99, tokens/sec) is derived
+from this counter, never from host wall-clock, which makes engine runs
+bit-reproducible (results/npec_serve_cycles.json is regression-guarded).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclass
+class CycleClock:
+    """Monotonic cycle counter at a fixed overlay frequency."""
+    clock_hz: float
+    cycles: int = 0
+
+    def advance(self, cycles: float) -> int:
+        """Charge a scheduled stream; returns the new timestamp."""
+        if cycles < 0:
+            raise ValueError(f"cannot advance by {cycles} cycles")
+        self.cycles += int(round(cycles))
+        return self.cycles
+
+    def ms(self, cycles: float = None) -> float:
+        """Milliseconds for `cycles` (default: the current timestamp)."""
+        c = self.cycles if cycles is None else cycles
+        return 1e3 * c / self.clock_hz
+
+
+@dataclass
+class LatencyTracker:
+    """Per-request latency aggregation over clock timestamps (cycles)."""
+    clock: CycleClock
+    samples_ms: List[float] = field(default_factory=list)
+
+    def record(self, start_cycle: int, end_cycle: int) -> float:
+        ms = self.clock.ms(end_cycle - start_cycle)
+        self.samples_ms.append(ms)
+        return ms
+
+    def percentiles(self, ps=(50, 99)) -> Dict[str, float]:
+        if not self.samples_ms:
+            return {f"p{p}_ms": 0.0 for p in ps}
+        lat = np.asarray(self.samples_ms)
+        return {f"p{p}_ms": round(float(np.percentile(lat, p)), 4)
+                for p in ps}

@@ -1,0 +1,233 @@
+"""NPEEngine: a compiled-stream serving engine with batched decode.
+
+The paper's deployment scenario is real-time conversational AI (§3.1,
+10-15 ms/inference); the overlay executes it by loading compiled
+instruction streams and re-running them (docs/isa.md).  This engine is
+that serving loop in software, end-to-end on compiled programs:
+
+  * **one batched decode stream** — compiled ONCE at `trace_decode(
+    batch=B)`: B slots share the stream, weight projections run as B-row
+    MMU tiles (occupancy ~B/128 instead of the ~0.78% a 1-row decode
+    matmul sustains), each slot keeps its own cache bank and position;
+  * **compiled prefill per admitted request** — `compile_prefill` at the
+    prompt's length (memoized per length): one causal pass seeds the
+    slot's cache banks (`DecodeSession.load_slot`) and yields the first
+    generated token, instead of S skinny decode steps;
+  * **continuous batching** — FIFO queue + B-slot pool: admit into free
+    slots, decode all occupied slots one token per step, evict on EOS or
+    token budget (repro.npec.runtime.batch);
+  * **a cycle clock** — every step charges `greedy_schedule` cycles of
+    the *actual* compiled stream; p50/p99 latency and tokens/sec come
+    from that counter at the overlay's frequency, never from host
+    wall-clock (repro.npec.runtime.clock), so runs are bit-reproducible.
+
+`params=None` runs the engine *cost-only*: the admission/eviction and
+cycle accounting are identical but no numerics execute (generated tokens
+are pad zeros) — this is what `benchmarks/paper_tables.py::npec_serve`
+records, keeping results/npec_serve_cycles.json free of platform-BLAS
+noise.  With `params`, every step runs the functional executor, so the
+served tokens are the compiled streams' actual outputs (validated against
+per-sequence `DecodeSession` rollouts in tests/test_npec_runtime.py).
+
+Families without decode streams (moe: per-token capacity-1 dispatch is a
+ROADMAP open item) raise `CompileError` at construction — before any
+scheduling, so the failure names the gap instead of crashing mid-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.overlay import NPEHardware
+from repro.npec import (CompiledProgram, DecodeSession, compile_decode,
+                        compile_prefill, execute, greedy_schedule)
+from repro.npec.runtime.batch import Request, RequestQueue, SlotPool
+from repro.npec.runtime.clock import CycleClock, LatencyTracker
+
+
+@dataclass
+class EngineStats:
+    """Cycle-derived serving summary (all latencies at the overlay's
+    clock; `sustained_*` additionally charges the MMU tiling padding the
+    128-PE-row geometry actually pays — see `mmu_tiling_summary`)."""
+    requests: List[Request] = field(default_factory=list)
+    total_cycles: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    decode_step_cycles: int = 0
+    sustained_step_cycles: int = 0
+    mmu_row_occupancy: float = 0.0
+    clock_hz: float = 200e6
+    latency: Optional[LatencyTracker] = None
+    first_token: Optional[LatencyTracker] = None
+
+    def report(self) -> Dict[str, float]:
+        gen = sum(len(r.generated) for r in self.requests)
+        out = {"requests": len(self.requests), "generated_tokens": gen}
+        out.update(self.latency.percentiles() if self.latency else {})
+        if self.first_token:
+            ft = self.first_token.percentiles(ps=(50,))
+            out["first_token_p50_ms"] = ft["p50_ms"]
+        out["tokens_per_sec"] = (
+            round(gen * self.clock_hz / self.total_cycles, 1)
+            if self.total_cycles else 0.0)
+        out["decode_step_cycles"] = self.decode_step_cycles
+        out["sustained_step_cycles"] = self.sustained_step_cycles
+        out["mmu_row_occupancy"] = round(self.mmu_row_occupancy, 4)
+        out["total_cycles"] = self.total_cycles
+        out["decode_steps"] = self.decode_steps
+        out["prefills"] = self.prefills
+        return out
+
+
+class NPEEngine:
+    """Continuous-batching serving engine over compiled overlay streams."""
+
+    def __init__(self, cfg: ModelConfig, hw: Optional[NPEHardware] = None,
+                 *, slots: int = 4, capacity: int = 64,
+                 max_new_tokens: int = 16, bits: int = 16,
+                 npe: bool = False, params: Any = None,
+                 nvu_source: str = "paper", eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.hw = hw if hw is not None else NPEHardware()
+        self.slots = slots
+        self.capacity = capacity
+        self.max_new_tokens = max_new_tokens
+        self.bits = bits
+        self.eos_id = eos_id
+        self.nvu_source = nvu_source
+        # compile the batched decode stream FIRST: unsupported families
+        # (moe decode) raise CompileError here, before any scheduling
+        self.decode_prog = compile_decode(cfg, capacity, self.hw, bits=bits,
+                                          nvu_source=nvu_source, batch=slots)
+        sched = greedy_schedule(self.decode_prog)
+        tiling = self.decode_prog.mmu_tiling_summary()
+        self.step_cycles = int(sched["total_cycles"])
+        # what the 128-PE-row geometry sustains: the charged (ideal-rate)
+        # schedule plus the skinny-tile padding cycles it hides
+        self.sustained_step_cycles = self.step_cycles + int(
+            tiling["tiled_cycles"] - tiling["ideal_cycles"])
+        self.mmu_row_occupancy = tiling["efficiency"]
+
+        self.numeric = params is not None
+        self._npe_cfg = (cfg.with_npe(quant_bits=bits) if npe else None)
+        self.params = params
+        self.session = (DecodeSession(self.decode_prog, params,
+                                      cfg=self._npe_cfg)
+                        if self.numeric else None)
+
+        self.clock = CycleClock(self.hw.clock_hz)
+        self.queue = RequestQueue()
+        self.pool = SlotPool(slots)
+        self._next_tok = np.zeros(slots, np.int32)
+        self._prefill_cache: Dict[int, CompiledProgram] = {}
+        self.stats = EngineStats(
+            decode_step_cycles=self.step_cycles,
+            sustained_step_cycles=self.sustained_step_cycles,
+            mmu_row_occupancy=self.mmu_row_occupancy,
+            clock_hz=self.hw.clock_hz)
+        self.stats.latency = LatencyTracker(self.clock)
+        self.stats.first_token = LatencyTracker(self.clock)
+
+    # --- request intake ---------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: Optional[int] = None) -> Request:
+        """Queue a prompt; its cache slot must fit prompt + generation."""
+        prompt = np.asarray(prompt, np.int32)
+        new = max_new_tokens if max_new_tokens is not None \
+            else self.max_new_tokens
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if new < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {new} (prefill always "
+                "emits the first generated token)")
+        if prompt.size + new > self.capacity:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({new}) exceeds "
+                f"the compiled cache capacity {self.capacity}")
+        req = self.queue.submit(prompt, max_new_tokens=new,
+                                eos_id=self.eos_id,
+                                submit_cycle=self.clock.cycles)
+        self.stats.requests.append(req)
+        return req
+
+    # --- serving loop -----------------------------------------------------
+
+    def _prefill_program(self, seq: int) -> CompiledProgram:
+        if seq not in self._prefill_cache:
+            self._prefill_cache[seq] = compile_prefill(
+                self.cfg, seq, self.hw, bits=self.bits,
+                nvu_source=self.nvu_source)
+        return self._prefill_cache[seq]
+
+    def _admit(self, slot: int, req: Request) -> None:
+        """Compiled prefill: charge the scheduled stream, seed the slot's
+        cache banks, emit the first generated token."""
+        prog = self._prefill_program(len(req.prompt))
+        req.admit_cycle = self.clock.cycles
+        self.clock.advance(greedy_schedule(prog)["total_cycles"])
+        self.stats.prefills += 1
+        if self.numeric:
+            res = execute(prog, self.params, {"tokens": req.prompt},
+                          cfg=self._npe_cfg)
+            self.session.load_slot(slot, res.kv_exports, len(req.prompt))
+            tok = int(np.argmax(np.asarray(res[0])[..., -1, :]))
+        else:
+            tok = 0                 # cost-only: pad token, no numerics
+        self.pool.bind(slot, req)
+        req.generated.append(tok)
+        req.first_token_cycle = self.clock.cycles
+        self.stats.first_token.record(req.submit_cycle, self.clock.cycles)
+        self._next_tok[slot] = tok
+        if not req.wants_more():
+            self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        req = self.pool.release(slot)
+        req.finish_cycle = self.clock.cycles
+        self.stats.latency.record(req.submit_cycle, req.finish_cycle)
+        if self.numeric:
+            self.session.reset_slot(slot)
+        self._next_tok[slot] = 0
+
+    def step(self) -> bool:
+        """Admit into free slots, then decode every occupied slot one
+        token with the batched stream.  Returns False when idle (nothing
+        admitted AND nothing decoding — admissions alone count as
+        progress: a request can finish at its first token)."""
+        admitted = 0
+        for slot in self.pool.free_ids():
+            if not self.queue:
+                break
+            self._admit(slot, self.queue.pop())
+            admitted += 1
+        active = self.pool.active_mask()
+        if not active.any():
+            return admitted > 0
+        self.clock.advance(self.step_cycles)
+        self.stats.decode_steps += 1
+        if self.numeric:
+            out = np.asarray(self.session.step(self._next_tok,
+                                               active=active))
+            next_tok = np.argmax(out[..., :], axis=-1).astype(np.int32)
+        else:
+            next_tok = np.zeros(self.slots, np.int32)
+        for slot, req in self.pool.active():
+            tok = int(next_tok[slot])
+            req.generated.append(tok)
+            self._next_tok[slot] = tok
+            if not req.wants_more():
+                self._finish(slot)
+        return True
+
+    def run(self) -> EngineStats:
+        """Drain the queue; returns the cycle-derived stats."""
+        while self.queue or len(self.pool):
+            if not self.step():
+                break
+        self.stats.total_cycles = self.clock.cycles
+        return self.stats

@@ -60,12 +60,18 @@ class CompileError(NotImplementedError):
 
 def _attention(b: GraphBuilder, x: int, l: int, *, S: int, H: int, A: int,
                KV: int, hd: int, qkv_bias: bool, causal: bool,
-               rope_theta: Optional[float], tag: str) -> int:
+               rope_theta: Optional[float], tag: str,
+               export_kv: bool = False) -> int:
     """Per-head multi-head attention; returns the output-projection node.
 
     Heads are emitted in plain dataflow order (q,k,v,qk,softmax,av per
     head) — deferring the AV matmuls past the next head's projections is
     the *scheduler's* job, not the tracer's.
+
+    export_kv=True (serving prefill, `trace_prefill`) registers each kv
+    head's post-rope (S, hd) k and v nodes in `Graph.kv_exports` under the
+    decode streams' canonical cache names, so a runtime engine can seed a
+    slot's cache banks from one prefill pass.
     """
     g = A // KV
     kv_nodes = {}
@@ -92,6 +98,9 @@ def _attention(b: GraphBuilder, x: int, l: int, *, S: int, H: int, A: int,
             v = b.matmul(x, b.param(("blocks", "wv"), (H, hd), layer=l,
                                     cols=ck), bias=bv, tag=f"{tag}.h{i}.v")
             kv_nodes[j] = (k, v)
+            if export_kv:
+                b.g.kv_exports[f"{tag}.kv{j}.k"] = k
+                b.g.kv_exports[f"{tag}.kv{j}.v"] = v
         k, v = kv_nodes[j]
         qk = b.matmul(q, k, transpose_b=True, scale=hd ** -0.5,
                       tag=f"{tag}.h{i}.qk")
@@ -138,16 +147,22 @@ def _post_norm_rest(b: GraphBuilder, x: int, proj: int, l: int, *, H: int,
 
 def _bert_layer(b: GraphBuilder, x: int, l: int, *, S: int, H: int, A: int,
                 KV: int, hd: int, F: int, eps: float, qkv_bias: bool,
-                mlp_bias: bool, tag: str) -> int:
+                mlp_bias: bool, tag: str, causal: bool = False,
+                export_kv: bool = False) -> int:
     proj = _attention(b, x, l, S=S, H=H, A=A, KV=KV, hd=hd,
-                      qkv_bias=qkv_bias, causal=False, rope_theta=None,
-                      tag=tag)
+                      qkv_bias=qkv_bias, causal=causal, rope_theta=None,
+                      tag=tag, export_kv=export_kv)
     return _post_norm_rest(b, x, proj, l, H=H, F=F, eps=eps,
                            mlp_bias=mlp_bias, norm_beta=True, tag=tag)
 
 
 def _trace_bert(cfg: ModelConfig, seq: int, layers: Optional[int],
-                include_embed: bool) -> Graph:
+                include_embed: bool, *, causal: bool = False,
+                logits_head: bool = False, export_kv: bool = False) -> Graph:
+    """causal/logits_head/export_kv are the *serving prefill* variant
+    (`trace_prefill`): causal masking + a vocab head + kv exports mirror
+    what an incremental `models/bert.decode_step` rollout over the prompt
+    computes — the bidirectional default is the paper's encoder."""
     b = GraphBuilder()
     S, H, A, KV = seq, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
     hd, F = cfg.head_dim, cfg.d_ff
@@ -168,7 +183,10 @@ def _trace_bert(cfg: ModelConfig, seq: int, layers: Optional[int],
     for l in range(L):
         x = _bert_layer(b, x, l, S=S, H=H, A=A, KV=KV, hd=hd, F=F,
                         eps=1e-12, qkv_bias=cfg.qkv_bias,
-                        mlp_bias=cfg.mlp_bias, tag=f"enc{l}")
+                        mlp_bias=cfg.mlp_bias, tag=f"enc{l}",
+                        causal=causal, export_kv=export_kv)
+    if logits_head and include_embed:
+        x = _logits_head(b, cfg, x)
     b.output(x)
     return b.g
 
@@ -201,7 +219,7 @@ def _check_dense_supported(cfg: ModelConfig) -> None:
 
 
 def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
-                 include_embed: bool) -> Graph:
+                 include_embed: bool, *, export_kv: bool = False) -> Graph:
     _check_dense_supported(cfg)
     b = GraphBuilder()
     S, H, A, KV = seq, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
@@ -222,7 +240,7 @@ def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
         h = norm(x, ("blocks", "ln1"), l, f"{tag}.ln1")
         attn = _attention(b, h, l, S=S, H=H, A=A, KV=KV, hd=hd,
                           qkv_bias=cfg.qkv_bias, causal=cfg.causal,
-                          rope_theta=theta, tag=tag)
+                          rope_theta=theta, tag=tag, export_kv=export_kv)
         x = b.add(x, attn, tag=f"{tag}.res_a")
         h2 = norm(x, ("blocks", "ln2"), l, f"{tag}.ln2")
         down = _dense_mlp(b, cfg, h2, l, H=H, F=F, tag=tag)
@@ -440,7 +458,8 @@ def trace_bert_shape(shape, *, layers: int = 1) -> Graph:
 def _decode_attention(b: GraphBuilder, x: int, l: int, *, T: int, H: int,
                       A: int, KV: int, hd: int, qkv_bias: bool,
                       rope_theta: Optional[float], pos: int,
-                      tag: str) -> int:
+                      tag: str, B: int = 1,
+                      pos_slots: Optional[list] = None) -> int:
     """Cached one-token attention; returns the output-projection node.
 
     Per kv head: the new k/v appended into the (T, hd) cache at `pos`
@@ -452,8 +471,23 @@ def _decode_attention(b: GraphBuilder, x: int, l: int, *, T: int, H: int,
     GQA decode actually amortizes the cache read — and it keeps the
     executor numerically in lockstep with the grouped einsum in
     models/common.attention_scores.
+
+    B > 1 is the *batched* decode stream (repro.npec.runtime): B serving
+    slots share one stream, so every weight projection is a single merged
+    B-row MMU tile (occupancy ~B/128 instead of ~1/128) over the stacked
+    slot states, `pos` is a (B,) vector (rope rotates row s at pos[s]),
+    and each slot keeps its own cache bank (`{tag}.kv{j}.slot{s}.k/v`)
+    with its own pos-masked QK^T/softmax/AV stream — attention cannot
+    merge across slots because every slot attends to a different cache.
+    `pos_slots[s]` is the hoisted scalar slot_select of pos for softmax
+    masking.
     """
     g = A // KV
+    if B > 1:
+        return _decode_attention_batched(
+            b, x, l, T=T, H=H, A=A, KV=KV, hd=hd, qkv_bias=qkv_bias,
+            rope_theta=rope_theta, pos=pos, pos_slots=pos_slots, tag=tag,
+            B=B)
     z_groups = []
     for j in range(KV):
         ck = (j * hd, (j + 1) * hd)
@@ -499,6 +533,72 @@ def _decode_attention(b: GraphBuilder, x: int, l: int, *, T: int, H: int,
     return b.matmul(z, wo, tag=f"{tag}.attn.out")
 
 
+def _decode_attention_batched(b: GraphBuilder, x: int, l: int, *, T: int,
+                              H: int, A: int, KV: int, hd: int,
+                              qkv_bias: bool, rope_theta: Optional[float],
+                              pos: int, pos_slots: list, tag: str,
+                              B: int) -> int:
+    """B-slot cached attention over a merged (B, H) hidden state: merged
+    B-row k/v/q projections, per-slot cache banks + masked attention
+    streams, and a merged B-row output projection.  See _decode_attention.
+    """
+    g = A // KV
+    z_parts: list = [[] for _ in range(B)]      # slot -> per-kv-head rows
+    for j in range(KV):
+        ck = (j * hd, (j + 1) * hd)
+        bk = (b.param(("blocks", "bk"), (hd,), layer=l, cols=ck)
+              if qkv_bias else None)
+        bv = (b.param(("blocks", "bv"), (hd,), layer=l, cols=ck)
+              if qkv_bias else None)
+        k = b.matmul(x, b.param(("blocks", "wk"), (H, hd), layer=l,
+                                cols=ck), bias=bk, tag=f"{tag}.kv{j}.k")
+        if rope_theta is not None:
+            k = b.rope(k, theta=rope_theta, pos=pos,
+                       tag=f"{tag}.kv{j}.k_rope")
+        v = b.matmul(x, b.param(("blocks", "wv"), (H, hd), layer=l,
+                                cols=ck), bias=bv, tag=f"{tag}.kv{j}.v")
+        banks = []
+        for s in range(B):
+            kc = b.cache(f"{tag}.kv{j}.slot{s}.k", (T, hd))
+            vc = b.cache(f"{tag}.kv{j}.slot{s}.v", (T, hd))
+            kc = b.cache_append(kc, k, pos, slot=s)
+            vc = b.cache_append(vc, v, pos, slot=s)
+            banks.append((kc, vc))
+        q_heads = []
+        for gi in range(g):
+            i = j * g + gi
+            cq = (i * hd, (i + 1) * hd)
+            bq = (b.param(("blocks", "bq"), (hd,), layer=l, cols=cq)
+                  if qkv_bias else None)
+            q = b.matmul(x, b.param(("blocks", "wq"), (H, hd), layer=l,
+                                    cols=cq), bias=bq, tag=f"{tag}.h{i}.q")
+            if rope_theta is not None:
+                q = b.rope(q, theta=rope_theta, pos=pos,
+                           tag=f"{tag}.h{i}.q_rope")
+            q_heads.append(q)
+        for s in range(B):
+            stag = f"{tag}.kv{j}.s{s}"
+            rows = [b.slot_select(q, s, tag=f"{stag}.q{gi}")
+                    for gi, q in enumerate(q_heads)]
+            qg = (rows[0] if g == 1
+                  else b.concat(rows, axis=-2, tag=f"{stag}.qstack"))
+            kc, vc = banks[s]
+            qk = b.matmul(qg, kc, transpose_b=True, scale=hd ** -0.5,
+                          tag=f"{stag}.qk")
+            sm = b.softmax(qk, valid_upto=pos_slots[s],
+                           tag=f"{stag}.softmax")
+            av = b.matmul(sm, vc, tag=f"{stag}.av")
+            z_parts[s].append(av if g == 1
+                              else b.reshape(av, (1, g * hd),
+                                             tag=f"{stag}.flatten"))
+    z_slots = [(parts[0] if len(parts) == 1
+                else b.concat(parts, tag=f"{tag}.s{s}.merge_heads"))
+               for s, parts in enumerate(z_parts)]
+    z = b.concat(z_slots, axis=-2, tag=f"{tag}.merge_slots")
+    wo = b.param(("blocks", "wo"), (A * hd, H), layer=l)
+    return b.matmul(z, wo, tag=f"{tag}.attn.out")
+
+
 def _logits_head(b: GraphBuilder, cfg: ModelConfig, x: int) -> int:
     """Final vocab projection: tied configs reuse the (V, H) embedding
     table transposed (still MMU-resident), untied use lm_head (H, V)."""
@@ -509,17 +609,29 @@ def _logits_head(b: GraphBuilder, cfg: ModelConfig, x: int) -> int:
     return b.matmul(x, b.param(("lm_head",), (H, V)), tag="logits")
 
 
+def _decode_inputs(b: GraphBuilder, batch: int):
+    """The decode stream's pos input: a scalar for per-sequence streams, a
+    (B,) vector (plus hoisted per-slot scalar selects for softmax masking)
+    for batched streams."""
+    if batch == 1:
+        return b.input("pos", (), dtype="int32"), None
+    pos = b.input("pos", (batch,), dtype="int32")
+    return pos, [b.slot_select(pos, s, tag=f"pos.s{s}")
+                 for s in range(batch)]
+
+
 def _trace_decode_bert(cfg: ModelConfig, cache_len: int,
-                       layers: Optional[int], include_embed: bool) -> Graph:
+                       layers: Optional[int], include_embed: bool,
+                       batch: int = 1) -> Graph:
     """Causal incremental BERT step, mirroring models/bert.decode_step
     (post-norm blocks, learned positions gathered at `pos`)."""
     b = GraphBuilder()
     T, H, A, KV = cache_len, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
     hd, F = cfg.head_dim, cfg.d_ff
     L = layers if layers is not None else cfg.num_layers
-    pos = b.input("pos", (), dtype="int32")
+    pos, pos_slots = _decode_inputs(b, batch)
     if include_embed:
-        tokens = b.input("tokens", (1,), dtype="int32")
+        tokens = b.input("tokens", (batch,), dtype="int32")
         x = b.embed(tokens, b.param(("embed",), (cfg.vocab_size, H)),
                     tag="embed.tok")
         pe = b.embed(pos, b.param(("pos_embed",), (cfg.max_position, H)),
@@ -531,12 +643,13 @@ def _trace_decode_bert(cfg: ModelConfig, cache_len: int,
                         b.param(("ln_embed", "beta"), (H,)),
                         eps=1e-12, tag="embed.ln")
     else:
-        x = b.input("x", (1, H))
+        x = b.input("x", (batch, H))
     for l in range(L):
         tag = f"enc{l}"
         proj = _decode_attention(b, x, l, T=T, H=H, A=A, KV=KV, hd=hd,
                                  qkv_bias=cfg.qkv_bias, rope_theta=None,
-                                 pos=pos, tag=tag)
+                                 pos=pos, tag=tag, B=batch,
+                                 pos_slots=pos_slots)
         x = _post_norm_rest(b, x, proj, l, H=H, F=F, eps=1e-12,
                             mlp_bias=cfg.mlp_bias, norm_beta=True, tag=tag)
     if include_embed:
@@ -546,7 +659,8 @@ def _trace_decode_bert(cfg: ModelConfig, cache_len: int,
 
 
 def _trace_decode_dense(cfg: ModelConfig, cache_len: int,
-                        layers: Optional[int], include_embed: bool) -> Graph:
+                        layers: Optional[int], include_embed: bool,
+                        batch: int = 1) -> Graph:
     """Pre-norm dense decode step, mirroring models/transformer.decode_step
     (full-attention layers; ring/window caches are a ROADMAP open item)."""
     _check_dense_supported(cfg)
@@ -555,19 +669,20 @@ def _trace_decode_dense(cfg: ModelConfig, cache_len: int,
     hd, F = cfg.head_dim, cfg.d_ff
     L = layers if layers is not None else cfg.num_layers
     theta = cfg.rope_theta if cfg.rope == "standard" else None
-    pos = b.input("pos", (), dtype="int32")
+    pos, pos_slots = _decode_inputs(b, batch)
     if include_embed:
-        tokens = b.input("tokens", (1,), dtype="int32")
+        tokens = b.input("tokens", (batch,), dtype="int32")
         x = b.embed(tokens, b.param(("embed",), (cfg.vocab_size, H)),
                     tag="embed.tok")
     else:
-        x = b.input("x", (1, H))
+        x = b.input("x", (batch, H))
     for l in range(L):
         tag = f"blk{l}"
         h = _dense_norm(b, cfg, x, ("blocks", "ln1"), l, f"{tag}.ln1")
         attn = _decode_attention(b, h, l, T=T, H=H, A=A, KV=KV, hd=hd,
                                  qkv_bias=cfg.qkv_bias, rope_theta=theta,
-                                 pos=pos, tag=tag)
+                                 pos=pos, tag=tag, B=batch,
+                                 pos_slots=pos_slots)
         x = b.add(x, attn, tag=f"{tag}.res_a")
         h2 = _dense_norm(b, cfg, x, ("blocks", "ln2"), l, f"{tag}.ln2")
         down = _dense_mlp(b, cfg, h2, l, H=H, F=F, tag=tag)
@@ -584,7 +699,7 @@ _DECODE_TRACERS = {"bert": _trace_decode_bert, "dense": _trace_decode_dense}
 
 def trace_decode(cfg: ModelConfig, cache_len: int, *,
                  layers: Optional[int] = None,
-                 include_embed: bool = True) -> Graph:
+                 include_embed: bool = True, batch: int = 1) -> Graph:
     """Emit the one-new-token decode graph for `cfg` over a KV cache of
     capacity `cache_len`.
 
@@ -596,6 +711,12 @@ def trace_decode(cfg: ModelConfig, cache_len: int, *,
     repro.npec.exec.DecodeSession; step outputs match
     `models/transformer.decode_step` / `models/bert.decode_step`
     (tests/test_npec_decode.py).
+
+    batch=B > 1 emits the *batched* decode stream (the serving engine's
+    step, repro.npec.runtime): B slots share one stream, weight
+    projections merge into B-row MMU tiles, `pos` becomes a (B,) vector,
+    and each slot keeps its own cache bank — bitwise-equivalent to B
+    independent per-sequence rollouts (tests/test_npec_runtime.py).
     """
     tracer = _DECODE_TRACERS.get(cfg.family)
     if tracer is None:
@@ -605,23 +726,63 @@ def trace_decode(cfg: ModelConfig, cache_len: int, *,
         raise CompileError(
             f"npec cannot lower {gap} yet ({cfg.name!r}) "
             "(see ROADMAP.md Open items)")
-    return tracer(cfg, cache_len, layers, include_embed)
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    return tracer(cfg, cache_len, layers, include_embed, batch)
 
 
-def trace_decode_bert_shape(shape, cache_len: int, *, layers: int = 1) -> Graph:
+def trace_prefill(cfg: ModelConfig, seq: int, *,
+                  layers: Optional[int] = None,
+                  include_embed: bool = True) -> Graph:
+    """Emit the *serving prefill* graph for a `seq`-token prompt: a causal
+    prefill pass whose per-kv-head post-rope (S, hd) k/v tensors are
+    registered in `Graph.kv_exports` under the decode streams' canonical
+    cache names, so one executed prefill seeds a decode slot's cache banks
+    (`DecodeSession.load_slot`) — numerically what rolling the prompt
+    token-by-token through the decode stream computes, at full-width MMU
+    tiles instead of S skinny 1-row steps.
+
+    bert traces its *causal* serving variant with the logits head
+    (mirroring an incremental `models/bert.decode_step` rollout over the
+    prompt, NOT the bidirectional encoder); dense traces its ordinary
+    causal prefill.  Families without decode streams raise `CompileError`
+    (the serving engine needs both halves).
+    """
+    if cfg.family == "bert":
+        return _trace_bert(cfg, seq, layers, include_embed, causal=True,
+                           logits_head=True, export_kv=True)
+    if cfg.family == "dense":
+        if not cfg.causal:
+            raise CompileError(
+                f"npec serving prefill needs a causal model; {cfg.name!r} "
+                "is bidirectional")
+        return _trace_dense(cfg, seq, layers, include_embed, export_kv=True)
+    gap = ("MoE decode streams (per-token capacity-1 dispatch)"
+           if cfg.family == "moe"
+           else f"decode streams for family {cfg.family!r}")
+    raise CompileError(
+        f"npec cannot lower {gap} yet ({cfg.name!r}), so it cannot serve "
+        "this family (see ROADMAP.md Open items)")
+
+
+def trace_decode_bert_shape(shape, cache_len: int, *, layers: int = 1,
+                            batch: int = 1) -> Graph:
     """Headless decode-step graph from a raw `core.cycles.BertShape` — the
     dims-only path `core.cycles` uses to cost autoregressive serving (no
     ModelConfig, no biases, no embedding/logit head; per-layer streams are
-    identical, so cycle totals scale linearly in layer count)."""
+    identical, so cycle totals scale linearly in layer count).  batch=B
+    emits the merged B-slot stream (core.cycles.batched_decode_step_cycles).
+    """
     b = GraphBuilder()
-    pos = b.input("pos", (), dtype="int32")
-    x = b.input("x", (1, shape.hidden))
+    pos, pos_slots = _decode_inputs(b, batch)
+    x = b.input("x", (batch, shape.hidden))
     for l in range(layers):
         tag = f"enc{l}"
         proj = _decode_attention(b, x, l, T=cache_len, H=shape.hidden,
                                  A=shape.heads, KV=shape.heads,
                                  hd=shape.head_dim, qkv_bias=False,
-                                 rope_theta=None, pos=pos, tag=tag)
+                                 rope_theta=None, pos=pos, tag=tag,
+                                 B=batch, pos_slots=pos_slots)
         x = _post_norm_rest(b, x, proj, l, H=shape.hidden, F=shape.d_ff,
                             eps=1e-12, mlp_bias=False, norm_beta=False,
                             tag=tag)
