@@ -3,12 +3,14 @@
 One function per paper artifact; each returns rows and prints a compact
 CSV.  benchmarks/run.py drives them all.  Paper-quoted values are printed
 alongside ours with the deviation, so faithfulness is auditable in the
-output itself.  Four tables go beyond the paper: `npec_vs_hand` (compiler
+output itself.  Five tables go beyond the paper: `npec_vs_hand` (compiler
 vs hand-built prefill programs), `npec_decode` (autoregressive
 prefill+decode tokens/sec from compiled KV-cache streams), `npec_moe`
-(compiled MoE routing super-blocks for granite/llama4), and `npec_serve`
+(compiled MoE routing super-blocks for granite/llama4), `npec_serve`
 (batched decode streams + the continuous-batching serving engine,
-repro.npec.runtime).
+repro.npec.runtime), and `npec_stream` (tile-streaming vs whole-op DAG
+scheduling per family and per decode batch — the dag -> streaming
+latency delta).
 """
 from __future__ import annotations
 
@@ -187,7 +189,9 @@ def npec_decode(prefill_lens=(64, 128), new_tokens=32,
     `decode_tok_s` is the steady-state generation rate, `e2e_tok_s`
     counts the prefill against the generated tokens, and `mmu_1row_eff`
     is what the 128-PE-row MMU geometry actually sustains on the decode
-    step's 1-row matmuls."""
+    step's 1-row matmuls.  Both phases charge padded tile cycles under
+    the tile-streaming schedule (cycle_model="streaming"), so these ARE
+    sustained-rate numbers."""
     hw = NPEHardware(vrwidth=1024)
     out = []
     for bits in bits_list:
@@ -247,17 +251,20 @@ def npec_serve(batches=(1, 2, 4, 8), bits_list=(8, 16),
     `kind="step"` rows sweep the batched decode stream at paper-BERT
     dims: B slots share one stream, weight projections become B-row MMU
     tiles, and `mmu_row_occupancy` rises toward B/128 from the ~0.78% a
-    per-sequence (B=1) stream sustains.  `total_cycles` charges the ideal
-    MAC rate (cycles/token is flat in B); `sustained_tok_s` additionally
-    charges the skinny-tile padding the 128-PE-row geometry actually pays
-    — the throughput batching buys.
+    per-sequence (B=1) stream sustains.  Matmuls charge padded tile
+    cycles (ragged-tile charging), so `step_cycles` IS what the
+    128-PE-row geometry sustains and `tok_s` grows ~linearly in B —
+    the throughput batching buys; `dag_cycles` sits alongside the
+    streaming `step_cycles` so the tile-streaming delta is on record.
 
     `kind="engine"` rows run the full continuous-batching engine
     (NPEEngine, cost-only: identical admission/eviction + cycle
     accounting, no numerics — keeps this record free of platform-BLAS
-    noise) over the synthetic ragged-prompt workload at FULL bert_base
-    scale, reporting cycle-derived p50/p99 latency and tokens/sec at the
-    overlay's 200 MHz."""
+    noise) over the EOS-aware synthetic ragged-prompt workload (each
+    request samples a stop token, so completions are ragged, not
+    budget-only) at FULL bert_base scale, reporting cycle-derived
+    p50/p99 latency and tokens/sec at the overlay's 200 MHz under the
+    streaming cycle model (both step costs recorded)."""
     from repro.configs import get_config
     from repro.core.overlay import NPEHardware
     from repro.data.pipeline import SyntheticRequests
@@ -274,9 +281,9 @@ def npec_serve(batches=(1, 2, 4, 8), bits_list=(8, 16),
             out.append(dict(
                 kind="step", batch=b, mmu_bits=bits, cache_len=cache_len,
                 step_cycles=int(r["total_cycles"]),
+                dag_cycles=int(r["dag_cycles"]),
                 cycles_per_token=int(r["cycles_per_token"]),
                 tok_s=round(r["tok_s"], 1),
-                sustained_tok_s=round(r["sustained_tok_s"], 1),
                 mmu_row_occupancy=round(r["mmu_efficiency"], 4),
                 occupancy_gain=round(r["mmu_efficiency"] / base, 2)))
     cfg = get_config("bert_base")
@@ -285,20 +292,78 @@ def npec_serve(batches=(1, 2, 4, 8), bits_list=(8, 16),
                            max_new_tokens=16, bits=bits)
         reqs = SyntheticRequests(cfg.vocab_size, max_prompt=32)
         for i in range(16):
-            engine.submit(reqs.request(i))
+            engine.submit(reqs.request(i), eos_id=reqs.eos_id(i))
         rep = engine.run().report()
         out.append(dict(
             kind="engine", arch="bert_base", slots=8, mmu_bits=bits,
+            cycle_model=rep["cycle_model"],
             requests=rep["requests"],
             generated_tokens=rep["generated_tokens"],
             p50_ms=rep["p50_ms"], p99_ms=rep["p99_ms"],
             first_token_p50_ms=rep["first_token_p50_ms"],
             tok_s=rep["tokens_per_sec"],
             decode_step_cycles=rep["decode_step_cycles"],
+            decode_step_cycles_dag=rep["decode_step_cycles_dag"],
             mmu_row_occupancy=rep["mmu_row_occupancy"],
             total_cycles=rep["total_cycles"],
             decode_steps=rep["decode_steps"],
             prefills=rep["prefills"]))
+    return out
+
+
+def npec_stream(seq=64, bits_list=(8, 16),
+                decode_batches=(1, 4, 8)) -> List[Dict]:
+    """Tile-streaming vs whole-op DAG scheduling (the tentpole delta):
+    `kind="prefill"` rows compile ONE layer (super-block for moe) of a
+    representative config per traceable family — bert (bert_base), dense
+    (glm4_9b), moe (granite) — at full config scale and report both
+    schedules' cycles plus the streaming model's NVU stall budget;
+    `kind="decode"` rows do the same for the batched bert decode stream
+    at B in {1, 4, 8}.  `streaming_saving_pct` is the latency the
+    tile-granular producer-consumer overlap recovers from the whole-op
+    schedule.  Persisted to results/npec_stream_cycles.json and
+    bit-exact-guarded by tests/test_npec_stream.py."""
+    from repro import npec
+    from repro.configs import get_config
+    from repro.core.overlay import NPEHardware
+
+    hw = NPEHardware(vrwidth=1024)
+    fams = [("bert", "bert_base"), ("dense", "glm4_9b"),
+            ("moe", "granite_moe_1b_a400m")]
+    out = []
+    for fam, arch in fams:
+        cfg = get_config(arch)
+        layers = cfg.moe.interleave if cfg.moe is not None else 1
+        for bits in bits_list:
+            compiled = npec.compile_model(cfg, seq, hw, bits=bits,
+                                          layers=layers,
+                                          include_embed=False)
+            dag = npec.greedy_schedule(compiled)
+            st = npec.stream_schedule(compiled)
+            out.append(dict(
+                kind="prefill", family=fam, arch=arch, seq=seq,
+                mmu_bits=bits, layers=layers,
+                dag_cycles=int(dag["total_cycles"]),
+                streaming_cycles=int(st["total_cycles"]),
+                streaming_saving_pct=round(
+                    100 * (dag["total_cycles"] - st["total_cycles"])
+                    / dag["total_cycles"], 2),
+                mmu_busy=int(st["mmu_busy"]),
+                stall_cycles=int(sum(st["stalls"].values()))))
+    sh = cy.BertShape(seq=seq)
+    for bits in bits_list:
+        for b in decode_batches:
+            r = cy.batched_decode_step_cycles(hw, sh, 128, b, bits)
+            out.append(dict(
+                kind="decode", family="bert", arch="bert_base",
+                batch=b, mmu_bits=bits, cache_len=128,
+                dag_cycles=int(r["dag_cycles"]),
+                streaming_cycles=int(r["streaming_cycles"]),
+                streaming_saving_pct=round(
+                    100 * (r["dag_cycles"] - r["streaming_cycles"])
+                    / r["dag_cycles"], 2),
+                tok_s=round(r["tok_s"], 1),
+                mmu_row_occupancy=round(r["mmu_efficiency"], 4)))
     return out
 
 
@@ -314,4 +379,5 @@ ALL = {
     "npec_decode": npec_decode,
     "npec_moe": npec_moe,
     "npec_serve": npec_serve,
+    "npec_stream": npec_stream,
 }

@@ -9,9 +9,11 @@ trajectory to track: npec-compiled vs hand-built BERT cycle counts per
 throughput from compiled KV-cache streams to
 results/npec_decode_cycles.json (guarded by tests/test_npec_decode.py),
 compiled MoE routing super-blocks to results/npec_moe_cycles.json
-(guarded by tests/test_npec_conformance.py), and batched-decode serving
+(guarded by tests/test_npec_conformance.py), batched-decode serving
 streams + engine runs to results/npec_serve_cycles.json (guarded by
-tests/test_npec_runtime.py).
+tests/test_npec_runtime.py), and the tile-streaming vs whole-op DAG
+schedule deltas to results/npec_stream_cycles.json (guarded by
+tests/test_npec_stream.py).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -82,6 +84,7 @@ def write_npec_record(path: Path, rows=None,
         rows = (paper_tables.npec_decode() if "decode" in schema
                 else paper_tables.npec_moe() if "moe" in schema
                 else paper_tables.npec_serve() if "serve" in schema
+                else paper_tables.npec_stream() if "stream" in schema
                 else paper_tables.npec_vs_hand())
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(
@@ -104,10 +107,13 @@ def main(argv=None):
     ap.add_argument("--json-out-serve",
                     default="results/npec_serve_cycles.json",
                     help="batched-serve cycle record ('' disables)")
+    ap.add_argument("--json-out-stream",
+                    default="results/npec_stream_cycles.json",
+                    help="dag-vs-streaming schedule record ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_tables
-    npec_rows = decode_rows = moe_rows = serve_rows = None
+    npec_rows = decode_rows = moe_rows = serve_rows = stream_rows = None
     for name, fn in paper_tables.ALL.items():
         t0 = time.perf_counter()
         rows = fn()
@@ -121,6 +127,8 @@ def main(argv=None):
             moe_rows = rows
         elif name == "npec_serve":
             serve_rows = rows
+        elif name == "npec_stream":
+            stream_rows = rows
 
     if args.json_out:
         write_npec_record(Path(args.json_out), npec_rows)
@@ -133,6 +141,9 @@ def main(argv=None):
     if args.json_out_serve:
         write_npec_record(Path(args.json_out_serve), serve_rows,
                           schema="npec_serve_cycles/v1")
+    if args.json_out_stream:
+        write_npec_record(Path(args.json_out_stream), stream_rows,
+                          schema="npec_stream_cycles/v1")
 
     if not args.skip_kernels:
         _print_table("kernel_microbench", bench_kernels(args.quick))

@@ -60,6 +60,12 @@ def main():
     print(f"hand-built cross-check: {hand['total_cycles']:.0f} cycles "
           f"({100 * dev:+.2f}% compiled vs hand)")
 
+    tile = npec.stream_schedule(compiled)
+    saving = 1 - tile["total_cycles"] / sched["total_cycles"]
+    print(f"tile-streaming schedule: {tile['total_cycles']:.0f} "
+          f"cycles/encoder ({100 * saving:.1f}% under whole-op); "
+          f"stalls {({k: round(v) for k, v in tile['stalls'].items()})}")
+
     stream = cy.inference_cycles(hw, shape, args.bits)
     ms = 1e3 * stream["total_cycles"] / hw.clock_hz
     print(f"tile-streaming model (paper-faithful): "

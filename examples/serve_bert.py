@@ -86,8 +86,8 @@ def main():
         target = "MEETS" if ms <= 15 else "misses"
         print(f"  B={b}: {ms:6.2f} ms/step ({b} tok/step) -> {target} the "
               f"10-15 ms target; PE-row occupancy "
-              f"{100 * r['mmu_efficiency']:.2f}%, sustained "
-              f"{r['sustained_tok_s']:.0f} tok/s")
+              f"{100 * r['mmu_efficiency']:.2f}%, "
+              f"{r['tok_s']:.0f} tok/s sustained")
     print("\nserve_bert OK")
 
 

@@ -62,6 +62,51 @@ if missing:
 print("docs/compiler.md MoE op names check OK")
 PY
 
+# tile-streaming schedule conformance: the compiled stream_schedule must
+# match the paper's analytic latency model (stall budgets included) and
+# hold the dag >= streaming >= mmu_busy invariants
+python -m pytest -q tests/test_npec_stream.py
+
+# docs drift gate: docs/compiler.md's "Tile-streaming schedule" worked
+# example must cite the cycle constants the scheduler actually computes
+# (npec/schedule.py + lower.py + overlay.py at BERT-base seq 128,
+# 16-bit, NVU-1024) — mirrors the isa.md constants gate
+python - <<'PY'
+from pathlib import Path
+from repro.core.overlay import NPEHardware, mmu_tiled_cycles, nvu_cycles
+from repro.npec.lower import nvu_consume, tile_matmul, tile_stream
+
+hw = NPEHardware(vrwidth=1024)
+S, H = 128, 768
+tiling = tile_matmul(hw, S, H, H, 16)
+stream = tile_stream(tiling)
+ln = nvu_cycles(hw, "layernorm", S * H, "paper")
+consume = nvu_consume(hw, ln, S * H)
+proj = mmu_tiled_cycles(hw, S, H, H, 16)
+stall = max(0, ln - proj)
+doc = Path("docs/compiler.md").read_text()
+if "Tile-streaming schedule" not in doc:
+    raise SystemExit(
+        "docs/compiler.md is missing the 'Tile-streaming schedule' section")
+section = doc[doc.index("Tile-streaming schedule"):]
+needed = {
+    "proj tiled cycles": f"{stream['slices']} x {stream['slice_cycles']} "
+                         f"= {proj}",
+    "first tile slice": f"{stream['slice_cycles']} cycles in",
+    "ln cycles": f"{ln} NVU cycles",
+    "ln chunks": f"{consume['chunks']}",
+    "ln tail": f"{consume['tail_cycles']}-cycle tail",
+    "streamed stall": f"{stall + stream['slice_cycles']}",
+    "analytic stall": f"{ln} - {proj}) = {stall}",
+}
+missing = [k for k, token in needed.items() if token not in section]
+if missing:
+    raise SystemExit(
+        "docs/compiler.md tile-streaming section out of sync with "
+        f"npec/schedule.py constants — missing {missing}")
+print("docs/compiler.md tile-streaming constants check OK")
+PY
+
 # serving smoke: the compiled-stream engine end to end (batched decode
 # stream + compiled prefill + cycle clock) on a tiny workload
 python -m repro.launch.serve --backend npec --smoke
@@ -82,11 +127,12 @@ needed = {
     "B=1 occupancy": f"{100 * step[(1, 16)]['mmu_row_occupancy']:.2f}%",
     "B=8 occupancy": f"{100 * step[(8, 16)]['mmu_row_occupancy']:.2f}%",
     "B=8 occupancy gain": f"{step[(8, 16)]['occupancy_gain']:.2f}",
-    "B=1 sustained tok/s (16-bit)": f"{step[(1, 16)]['sustained_tok_s']:.1f} tok/s",
-    "B=8 sustained tok/s (16-bit)": f"{step[(8, 16)]['sustained_tok_s']:.1f} tok/s",
+    "B=1 tok/s (16-bit)": f"{step[(1, 16)]['tok_s']:.1f} tok/s",
+    "B=8 tok/s (16-bit)": f"{step[(8, 16)]['tok_s']:.1f} tok/s",
     "engine p50 (8-bit)": f"{eng[8]['p50_ms']:.2f} ms",
     "engine p99 (8-bit)": f"{eng[8]['p99_ms']:.2f} ms",
     "engine tok/s (8-bit)": f"{eng[8]['tok_s']:.1f} tokens/sec",
+    "engine cycle model": eng[8]["cycle_model"],
 }
 missing = [k for k, token in needed.items() if token not in doc]
 if missing:

@@ -20,7 +20,8 @@ from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
 from repro.core.overlay import (Instr, NPEHardware, Program, mmu_cycles,
-                                nvu_cycles, paper_nvu_throughput)
+                                mmu_tiled_cycles, nvu_cycles,
+                                paper_nvu_throughput)
 
 
 # ---------------------------------------------------------------------------
@@ -53,7 +54,11 @@ def build_encoder_program(hw: NPEHardware, shape: BertShape, bits: int,
     backend="hand" is the original hand-built builder (kept as the golden
     cross-check); backend="npec" traces the same encoder through the NPE
     compiler (repro.npec) and returns its issue-ordered overlay program —
-    the path every other model family uses.
+    the path every other model family uses.  Both backends charge matmuls
+    at the padded tile rate (`mmu_tiled_cycles`) — what the 128-PE-row
+    geometry actually executes — so the cross-check compares like for
+    like; for MMU-aligned shapes (seq >= 128, BERT dims) this equals the
+    ideal MAC rate.
     """
     if backend == "npec":
         from repro import npec
@@ -68,7 +73,8 @@ def build_encoder_program(hw: NPEHardware, shape: BertShape, bits: int,
     last_barrier: Tuple[int, ...] = ()
 
     def mm(tag, n, k, m, deps):
-        return p.add(Instr("MMU", "matmul", mmu_cycles(hw, n, k, m, bits),
+        return p.add(Instr("MMU", "matmul",
+                           mmu_tiled_cycles(hw, n, k, m, bits),
                            tuple(deps), tag, (n, k, m)))
 
     def nvu(tag, routine, n_el, deps):
@@ -141,7 +147,8 @@ def schedule(p: Program) -> Dict[str, float]:
 
 
 def inference_cycles_streaming(hw: NPEHardware, shape: BertShape, bits: int,
-                               nvu_source: str = "paper") -> Dict[str, float]:
+                               nvu_source: str = "paper",
+                               charge: str = "ideal") -> Dict[str, float]:
     """Tile-streaming cycle model — the paper's own latency model.
 
     Each rate-matched nonlinearity (layernorm, GELU) streams tiles
@@ -151,21 +158,38 @@ def inference_cycles_streaming(hw: NPEHardware, shape: BertShape, bits: int,
     max(0, nvu - overlap_budget).  Validated against paper Fig 5 (<1% /
     ~10% / ~30% / 53% / 97% overhead points) and Table 7 (73.69 & 135.14
     inf/s at seq 64) — see tests/test_cycles.py.
+
+    `charge="ideal"` (default) budgets matmuls at the paper's ideal MAC
+    rate; `charge="padded"` budgets them at the padded tile rate
+    (`mmu_tiled_cycles`, per-head) — the mode that matches what compiled
+    streams charge, used by the `backend="npec"` cross-check
+    (tests/test_npec_stream.py).  The two agree except where BERT shapes
+    go ragged against the 128 PE rows (seq 64).
     """
     S, H, A, F = shape.seq, shape.hidden, shape.heads, shape.d_ff
     hd = shape.head_dim
     mults = hw.mmu_mults(bits)
-    mm_total = (3 * S * H * H + A * (S * hd * S) + A * (S * S * hd)
-                + S * H * H + S * H * F + S * F * H) / mults
+    if charge == "ideal":
+        def mm_c(n, k, m):
+            return n * k * m / mults
+    elif charge == "padded":
+        def mm_c(n, k, m):
+            return float(mmu_tiled_cycles(hw, n, k, m, bits))
+    else:
+        raise ValueError(f"unknown charge mode {charge!r}")
+    # per-head QKV/QK^T/AV so padded charging pads each head's tiles
+    # exactly as the compiled per-head instruction stream does
+    mm_total = (A * (3 * mm_c(S, H, hd) + mm_c(S, hd, S) + mm_c(S, S, hd))
+                + mm_c(S, H, H) + mm_c(S, H, F) + mm_c(S, F, H))
 
     def nvu_c(routine, n):
         return nvu_cycles(hw, routine, n, nvu_source)
 
     ln_cycles = nvu_c("layernorm", S * H)
-    stall_ln_a = max(0.0, ln_cycles - S * H * H / mults)
-    stall_ln_b = max(0.0, ln_cycles - S * F * H / mults)
-    stall_gelu = max(0.0, nvu_c("gelu", S * F) - S * H * F / mults)
-    softmax_budget = (3 * S * H * hd + S * hd * S) / mults
+    stall_ln_a = max(0.0, ln_cycles - mm_c(S, H, H))
+    stall_ln_b = max(0.0, ln_cycles - mm_c(S, F, H))
+    stall_gelu = max(0.0, nvu_c("gelu", S * F) - mm_c(S, H, F))
+    softmax_budget = 3 * mm_c(S, H, hd) + mm_c(S, hd, S)
     stall_softmax = A * max(0.0, nvu_c("softmax", S * S) - softmax_budget)
     enc = mm_total + stall_ln_a + stall_ln_b + stall_gelu + stall_softmax
     nvu_busy = ln_cycles * 2 + nvu_c("gelu", S * F) + A * nvu_c("softmax", S * S)
@@ -182,21 +206,44 @@ def inference_cycles_streaming(hw: NPEHardware, shape: BertShape, bits: int,
 def inference_cycles(hw: NPEHardware, shape: BertShape, bits: int,
                      nvu_source: str = "paper", overlap: bool = True,
                      model: str = "streaming",
-                     backend: str = "hand") -> Dict[str, float]:
+                     backend: str = "hand",
+                     charge: str = "ideal") -> Dict[str, float]:
     """Latency model; `model="streaming"` (paper-faithful) or `"dag"`
-    (whole-op list schedule, used for the no-overlap ablation).  The DAG
-    model accepts backend="npec" to source the program from the compiler
-    instead of the hand-built BERT graph — validated to agree within 1%
-    for overlap=True in tests/test_npec.py.  With overlap=False the
-    compiled ablation is strictly serial (sum of unit busy cycles), a
-    slightly tighter pessimistic bound than the hand builder's (~2.5%):
-    see npec.schedule._serialize_nvu."""
+    (whole-op list schedule, used for the no-overlap ablation).
+
+    Both models accept backend="npec" to source the numbers from the
+    compiler instead of the hand-built BERT graph.  For the DAG model the
+    compiled program agrees within 1% (tests/test_npec.py); for the
+    streaming model `repro.npec.stream_schedule` runs the compiled stream
+    at tile granularity and agrees with the analytic
+    `inference_cycles_streaming(charge="padded")` within 2% on total
+    cycles and per-stall budgets (tests/test_npec_stream.py) — compiled
+    streams always charge padded tile cycles, so `charge` selects the
+    analytic ("hand") budget mode only.
+
+    With overlap=False the compiled ablation is strictly serial (sum of
+    unit busy cycles), a slightly tighter pessimistic bound than the hand
+    builder's (~2.5%): see npec.schedule._serialize_nvu."""
     if model == "streaming" and overlap:
+        if backend == "npec":
+            from repro import npec
+            compiled = npec.compile_bert_shape(hw, shape, bits,
+                                               nvu_source=nvu_source,
+                                               layers=1)
+            st = npec.stream_schedule(compiled)
+            E = shape.encoders
+            return {
+                "total_cycles": st["total_cycles"] * E,
+                "mmu_busy": st["mmu_busy"] * E,
+                "nvu_busy": st["nvu_busy"] * E,
+                "mmu_util": st["mmu_util"],
+                # per-encoder, like the analytic model's stalls dict
+                "stalls": dict(st["stalls"]),
+            }
         if backend != "hand":
-            raise ValueError(
-                "backend applies to the DAG model only; the streaming model "
-                'is analytic — pass model="dag" to use backend="npec"')
-        return inference_cycles_streaming(hw, shape, bits, nvu_source)
+            raise ValueError(f"unknown backend {backend!r}")
+        return inference_cycles_streaming(hw, shape, bits, nvu_source,
+                                          charge=charge)
     enc = schedule(build_encoder_program(hw, shape, bits, nvu_source, overlap,
                                          backend=backend))
     return {k: (v * shape.encoders if isinstance(v, (int, float)) else v)
@@ -213,21 +260,33 @@ def inference_time_ms(hw: NPEHardware, shape: BertShape, bits: int,
 # Autoregressive serving (decode steps over a KV cache) — npec-compiled
 # ---------------------------------------------------------------------------
 
+def _npec_schedule(compiled, cycle_model: str) -> Dict[str, float]:
+    """Schedule a compiled stream under the requested cycle model:
+    `"streaming"` (tile-granular, the default the serving engine charges)
+    or `"dag"` (whole-op list schedule, the ablation)."""
+    from repro import npec
+    return npec.schedule_for(compiled, cycle_model)
+
+
 def decode_step_cycles(hw: NPEHardware, shape: BertShape, cache_len: int,
-                       bits: int, nvu_source: str = "paper") -> Dict[str, float]:
+                       bits: int, nvu_source: str = "paper",
+                       cycle_model: str = "streaming") -> Dict[str, float]:
     """Cycles for ONE decode step with `cache_len` tokens resident (the new
     token included): skinny (1, H) projections, a (1, t) QK^T over the
     cache, pos-masked 1xt softmax, and the V reduction, compiled through
     repro.npec (there is no hand-built decode program — the compiler IS the
     source).  One layer is compiled and scaled by `shape.encoders`
     (per-layer decode streams are identical; like the prefill tables, the
-    dims-only path has no embedding/logit head).  `mmu_efficiency` reports
-    what the 128-PE-row geometry actually sustains on 1-row matmuls."""
+    dims-only path has no embedding/logit head).  Matmuls charge padded
+    tile cycles — the 1-row projections pay the 128-PE-row geometry's
+    real cost (`mmu_efficiency` reports the occupancy) — and
+    `cycle_model` selects tile-streaming (default) or whole-op DAG
+    scheduling."""
     from repro import npec
     compiled = npec.compile_decode_bert_shape(hw, shape, cache_len, bits,
                                               nvu_source=nvu_source,
                                               layers=1)
-    stats = npec.greedy_schedule(compiled)
+    stats = _npec_schedule(compiled, cycle_model)
     tiling = compiled.mmu_tiling_summary()
     return {
         "total_cycles": stats["total_cycles"] * shape.encoders,
@@ -240,7 +299,9 @@ def decode_step_cycles(hw: NPEHardware, shape: BertShape, cache_len: int,
 
 def batched_decode_step_cycles(hw: NPEHardware, shape: BertShape,
                                cache_len: int, batch: int, bits: int,
-                               nvu_source: str = "paper") -> Dict[str, float]:
+                               nvu_source: str = "paper",
+                               cycle_model: str = "streaming"
+                               ) -> Dict[str, float]:
     """Cycles for ONE *batched* decode step: `batch` serving slots share a
     single compiled stream (repro.npec.trace, `trace_decode(batch=B)`), so
     every weight projection is a merged B-row MMU tile and the PE-row
@@ -248,36 +309,41 @@ def batched_decode_step_cycles(hw: NPEHardware, shape: BertShape,
     per-sequence stream sustains.  One layer is compiled and scaled by
     `shape.encoders`, like `decode_step_cycles`.
 
-    `total_cycles` charges the ideal MAC rate (the paper's own budget
-    model — B tokens per step, so cycles/token is total/B);
-    `sustained_cycles` additionally charges the skinny-tile padding the
-    128-PE-row geometry actually pays (`mmu_tiling_summary`), which is
-    where batching buys real throughput: `sustained_tok_s` grows ~linearly
-    in B while the ideal-rate `tok_s` stays flat."""
+    Matmuls charge padded tile cycles, so `total_cycles` IS the sustained
+    rate the geometry pays (the former ideal-rate/sustained split is
+    retired with ragged-tile charging) and batching's real win shows
+    directly: `cycles_per_token` falls toward the aligned rate as B-row
+    tiles fill PE rows, so `tok_s` grows ~linearly in B.  `dag_cycles`
+    and `streaming_cycles` report both cycle models; `total_cycles`
+    follows `cycle_model` (streaming by default — what the serving engine
+    charges).  `ideal_step_cycles` keeps the paper's MAC-rate floor for
+    reference (flat cycles/token in B)."""
     from repro import npec
     compiled = npec.compile_decode_bert_shape(hw, shape, cache_len, bits,
                                               nvu_source=nvu_source,
                                               layers=1, batch=batch)
-    stats = npec.greedy_schedule(compiled)
+    dag = npec.greedy_schedule(compiled)["total_cycles"] * shape.encoders
+    stream = npec.stream_schedule(compiled)["total_cycles"] * shape.encoders
+    stats = _npec_schedule(compiled, cycle_model)
     tiling = compiled.mmu_tiling_summary()
     total = stats["total_cycles"] * shape.encoders
     padding = (tiling["tiled_cycles"] - tiling["ideal_cycles"]) \
         * shape.encoders
-    sustained = total + padding
     return {
         "total_cycles": total,
-        "sustained_cycles": sustained,
+        "dag_cycles": dag,
+        "streaming_cycles": stream,
+        "ideal_step_cycles": total - padding,
         "cycles_per_token": total / batch,
         "tok_s": batch * hw.clock_hz / total if total else 0.0,
-        "sustained_tok_s": (batch * hw.clock_hz / sustained
-                            if sustained else 0.0),
         "mmu_util": stats["mmu_util"],
         "mmu_efficiency": tiling["efficiency"],
     }
 
 
 def autoregressive_cycles(hw: NPEHardware, shape: BertShape, new_tokens: int,
-                          bits: int, nvu_source: str = "paper") -> Dict[str, float]:
+                          bits: int, nvu_source: str = "paper",
+                          cycle_model: str = "streaming") -> Dict[str, float]:
     """Prefill (`shape.seq` tokens through the encoder program) + decode
     with ONE compiled stream at cache capacity shape.seq + new_tokens —
     the deterministic execution model the overlay actually runs
@@ -285,13 +351,17 @@ def autoregressive_cycles(hw: NPEHardware, shape: BertShape, new_tokens: int,
     so every step charges the full-capacity QK^T/softmax with `pos` only
     masking.  (A serving system that re-lowers length-specialized streams
     per bucket would land between this and `decode_step_cycles` at the
-    running length.)  Returns cycle totals and the tokens/sec numbers
-    serving tables quote: `decode_tok_s` (steady-state generation rate)
-    and `e2e_tok_s` (generated tokens over the full prefill+decode wall
-    clock)."""
-    prefill = inference_cycles(hw, shape, bits, nvu_source)["total_cycles"]
+    running length.)  Both phases run compiled streams under the same
+    `cycle_model` (tile-streaming by default) with padded tile charging,
+    so the e2e numbers are consistent end to end.  Returns cycle totals
+    and the tokens/sec numbers serving tables quote: `decode_tok_s`
+    (steady-state generation rate) and `e2e_tok_s` (generated tokens over
+    the full prefill+decode wall clock)."""
+    prefill = inference_cycles(hw, shape, bits, nvu_source,
+                               model=cycle_model,
+                               backend="npec")["total_cycles"]
     step = decode_step_cycles(hw, shape, shape.seq + new_tokens, bits,
-                              nvu_source)
+                              nvu_source, cycle_model=cycle_model)
     decode = step["total_cycles"] * new_tokens
     total = prefill + decode
     return {

@@ -47,9 +47,22 @@ class NPEHardware:
 
 def mmu_cycles(hw: NPEHardware, n: int, k: int, m: int, bits: int) -> int:
     """Cycles for an (n,k)@(k,m) matmul on the MMU at the ideal MAC rate
-    (the paper's own budget model; tile-padding overhead is exposed
-    separately by repro.npec.lower.tile_matmul)."""
+    (the paper's own budget model, which assumes MMU-aligned shapes)."""
     return math.ceil(n * k * m / hw.mmu_mults(bits))
+
+
+def mmu_tiled_cycles(hw: NPEHardware, n: int, k: int, m: int,
+                     bits: int) -> int:
+    """Cycles for an (n,k)@(k,m) matmul *as the MMU geometry actually
+    executes it*: ceil(n / 128) PE-row tiles x ceil(k / macs) MAC-depth
+    tiles, each streaming the m output columns at one column per cycle.
+    For MMU-aligned shapes this equals `mmu_cycles`; ragged shapes (a
+    decode step's 1-row projections, an MoE expert's C-row tiles, a
+    seq-64 prefill's 64-row blocks) pay the padding of the partially
+    filled tile.  This is what compiled streams charge; `mmu_cycles`
+    stays the ideal-rate floor (`repro.npec.lower.tile_matmul` reports
+    both and their ratio as `efficiency`)."""
+    return math.ceil(n / hw.mmu_pes) * math.ceil(k / hw.mmu_macs(bits)) * m
 
 
 # ---------------------------------------------------------------------------

@@ -58,12 +58,25 @@ class SyntheticLM:
 
 @dataclass
 class SyntheticRequests:
-    """Serving workload: batched requests with varying prompt lengths."""
+    """Serving workload: batched requests with varying prompt lengths.
+
+    `eos_id(i)` additionally samples a per-request EOS token from a small
+    stop alphabet (`eos_alphabet` ids), so EOS-aware serving engines see
+    ragged completions — some requests stop well before their token
+    budget — instead of every request running to budget.  The engine's
+    cost-only synthetic token stream draws from the same alphabet
+    (repro.npec.runtime.NPEEngine.SYNTH_ALPHABET), which is what makes
+    the sampled EOS actually fire."""
     vocab_size: int
     max_prompt: int
     seed: int = 0
+    eos_alphabet: int = 32
 
     def request(self, i: int) -> np.ndarray:
         rng = np.random.default_rng(self.seed * 7919 + i)
         n = int(rng.integers(4, self.max_prompt + 1))
         return rng.integers(0, self.vocab_size, (n,), np.int32)
+
+    def eos_id(self, i: int) -> int:
+        rng = np.random.default_rng(self.seed * 104729 + i + 1)
+        return int(rng.integers(0, min(self.eos_alphabet, self.vocab_size)))

@@ -14,9 +14,16 @@ Two backends:
     (`repro.npec.runtime.NPEEngine`) — ONE batched decode stream with B
     in-stream slots (B-row MMU projection tiles), compiled prefill per
     admitted request, and p50/p99 latency + tokens/sec derived from
-    `greedy_schedule` cycle counts at the overlay's 200 MHz — the numbers
+    compiled-stream cycle counts at the overlay's 200 MHz — the numbers
     the paper's §3.1 conversational-AI target (10-15 ms/inference) is
-    about.  See docs/serving.md; the benchmark table lives in
+    about.  ``--cycle-model`` picks what each step charges: ``streaming``
+    (default, `npec.stream_schedule` — tile-granular producer-consumer
+    overlap, the paper's own latency model) or ``dag``
+    (`npec.greedy_schedule`, whole-op); both are recorded in the report.
+    The synthetic workload is EOS-aware: each request samples an EOS
+    token id (`SyntheticRequests.eos_id`), so completions are ragged and
+    p99 reflects early-stopping requests, not just token budgets.  See
+    docs/serving.md; the benchmark table lives in
     results/npec_serve_cycles.json.
 
 For encoder-only BERT, "serving" is one encoder pass per request batch —
@@ -158,14 +165,18 @@ def run_npec(args) -> Dict[str, float]:
     engine = NPEEngine(cfg, NPEHardware(vrwidth=args.vrwidth),
                        slots=args.batch, capacity=args.capacity,
                        max_new_tokens=args.gen, bits=args.bits,
-                       npe=args.npe, params=params)
+                       npe=args.npe, params=params,
+                       cycle_model=args.cycle_model)
     reqs = SyntheticRequests(cfg.vocab_size, max_prompt=min(16, max_prompt))
     for i in range(args.requests):
-        engine.submit(reqs.request(i))
+        # EOS-aware workload: each request carries a sampled stop token,
+        # so eviction is ragged rather than budget-only
+        engine.submit(reqs.request(i), eos_id=reqs.eos_id(i))
     report = engine.run().report()
     print(f"npec engine ({args.arch}, B={args.batch} slots, "
           f"T={args.capacity}, {args.bits}-bit MMU @ "
-          f"{engine.hw.clock_hz / 1e6:.0f} MHz):")
+          f"{engine.hw.clock_hz / 1e6:.0f} MHz, "
+          f"{args.cycle_model} cycle model):")
     for k, v in report.items():
         print(f"  {k}: {v}")
     return report
@@ -180,6 +191,10 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--capacity", type=int, default=48,
                     help="npec: compiled KV-cache capacity per slot")
+    ap.add_argument("--cycle-model", choices=("dag", "streaming"),
+                    default="streaming",
+                    help="npec: cycles each serving step charges — "
+                         "tile-streaming (paper model) or whole-op DAG")
     ap.add_argument("--bits", type=int, default=16)
     ap.add_argument("--vrwidth", type=int, default=1024)
     ap.add_argument("--npe", action="store_true")

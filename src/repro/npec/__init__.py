@@ -40,7 +40,11 @@ Entry points:
     compile_decode_bert_shape(...)      dims-only decode step — the cost
                                         model behind autoregressive
                                         tokens/sec tables.
-    greedy_schedule / issue_order       schedule a CompiledProgram.
+    greedy_schedule / issue_order       schedule a CompiledProgram
+                                        (whole-op DAG model).
+    stream_schedule                     tile-granular streaming schedule
+                                        (the paper's own latency model,
+                                        with per-stall budgets).
     execute / DecodeSession             run it numerically (DecodeSession
                                         carries KV-cache state across
                                         steps; batched-slot streams get
@@ -66,7 +70,8 @@ from repro.core.overlay import NPEHardware
 from repro.npec.ir import Graph, GraphBuilder, Node
 from repro.npec.lower import (CompiledProgram, LoweredInstr, lower,
                               nvu_microprogram, tile_matmul)
-from repro.npec.schedule import greedy_schedule, issue_order
+from repro.npec.schedule import (greedy_schedule, issue_order, schedule_for,
+                                 stream_schedule)
 from repro.npec.trace import (CompileError, moe_capacity, trace_bert_shape,
                               trace_decode, trace_decode_bert_shape,
                               trace_model, trace_moe_block, trace_prefill)

@@ -5,10 +5,13 @@ Three jobs (paper §5, §6):
 1. **Matmul tiling** — every matmul is tiled to the MMU geometry (128 PEs
    x `mmu_macs(bits)` MACs, paper §5.4): output rows tile over PEs, the
    contraction tiles over MAC depth, and each (row, K) tile streams its
-   output columns one per cycle.  The *charged* instruction cost stays the
-   ideal MAC rate `overlay.mmu_cycles` (the paper's own budget model, and
-   what the hand-built program charges); the tiling metadata additionally
-   exposes the ragged-edge padding efficiency for future work.
+   output columns one per cycle.  The *charged* instruction cost is the
+   padded `overlay.mmu_tiled_cycles` — what the geometry actually executes,
+   ragged edges included (equal to the ideal MAC rate for aligned shapes;
+   the hand-built cross-check charges the same).  Each instruction carries
+   its explicit tile stream (`meta["stream"]`: per-tile cycle slices) so
+   the streaming scheduler can overlap consumers with partial producers,
+   and `meta["tiling"]` keeps the ideal-rate floor and padding efficiency.
 
 2. **NVU microprograms** — each nonlinearity expands into the shared pass
    structure `overlay.ROUTINE_PASSES`, bundled into VLIW issue slots
@@ -25,11 +28,11 @@ Three jobs (paper §5, §6):
    the producers' dependencies.
 
 Decode streams are dominated by *skinny* matmuls — (1, H) projections
-whose single output row lights up one of the 128 PE rows.  The charged
-cost stays the ideal MAC rate (consistent with the prefill model), and
-`CompiledProgram.mmu_tiling_summary()` reports the ragged 1-row occupancy
-so throughput tables can show what the MMU geometry actually sustains per
-decode step.
+whose single output row lights up one of the 128 PE rows.  Those tiles
+now charge what they actually cost (the padded tile rate), so per-step
+decode cycles ARE the sustained rate; `CompiledProgram.
+mmu_tiling_summary()` reports the ragged 1-row occupancy and asserts the
+per-tile charges add up to the scheduled instruction costs.
 
 MoE routing streams add three more op classes:
   * ``topk`` (values) -> an NVU instruction of k max-select passes, each
@@ -52,7 +55,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.overlay import (Instr, NPEHardware, Pass, Program,
                                 ROUTINE_PASSES, ROUTINE_STALL_FACTOR,
-                                mmu_cycles, nvu_cycles)
+                                mmu_cycles, mmu_tiled_cycles, nvu_cycles)
 from repro.npec.ir import Graph, Node
 
 # IR op -> NVU routine (cost class).  Elementwise PWL streams (activations,
@@ -75,14 +78,41 @@ def tile_matmul(hw: NPEHardware, n: int, k: int, m: int,
     """Tile an (n,k)@(k,m) matmul onto the MMU: `row_tiles` PE-row blocks x
     `k_tiles` MAC-depth blocks, each streaming `m` output columns at one
     column/cycle.  For MMU-aligned shapes tiled == ideal; ragged shapes pay
-    padding (reported as `efficiency`)."""
+    padding (reported as `efficiency`).  The instruction *charges*
+    `tiled_cycles` (what the geometry actually executes); `ideal_cycles`
+    is the paper's MAC-rate floor."""
     row_tiles = math.ceil(n / hw.mmu_pes)
     k_tiles = math.ceil(k / hw.mmu_macs(bits))
-    tiled = row_tiles * k_tiles * m
+    tiled = mmu_tiled_cycles(hw, n, k, m, bits)
     ideal = mmu_cycles(hw, n, k, m, bits)
+    assert tiled == row_tiles * k_tiles * m
     return dict(row_tiles=row_tiles, k_tiles=k_tiles, cols=m,
                 tiles=row_tiles * k_tiles, tiled_cycles=tiled,
                 ideal_cycles=ideal, efficiency=ideal / tiled)
+
+
+def tile_stream(tiling: Dict[str, Any]) -> Dict[str, int]:
+    """The per-tile cycle slices a lowered matmul streams through the MMU:
+    `slices` tiles of `slice_cycles` each (every tile streams the output
+    columns at one per cycle), delivering output progressively.  The
+    streaming scheduler (`repro.npec.schedule.stream_schedule`) treats the
+    first slice as the earliest point a rate-matched consumer can start —
+    the fluid tile-stream abstraction behind the paper's §7.2 budget
+    analysis.  Invariant: slices * slice_cycles == tiled_cycles (the
+    charged instruction cost; asserted by `mmu_tiling_summary`)."""
+    return dict(slices=tiling["tiles"], slice_cycles=tiling["cols"])
+
+
+def nvu_consume(hw: NPEHardware, cycles: int, n_elements: int,
+                elem_bits: int = 16) -> Dict[str, int]:
+    """Rate-matched consumption profile of an NVU instruction: the routine
+    sweeps `chunks` vector-register chunks over its input, so it can begin
+    once the producer's first tile lands and needs `tail_cycles` (one
+    chunk's worth of work) after the producer's *last* tile to drain —
+    the two constants `stream_schedule` uses to pipeline a nonlinearity
+    under its producing matmul."""
+    chunks = max(1, math.ceil(n_elements / hw.lanes(elem_bits)))
+    return dict(chunks=chunks, tail_cycles=math.ceil(cycles / chunks))
 
 
 # ---------------------------------------------------------------------------
@@ -259,9 +289,10 @@ class CompiledProgram:
     nvu_source: str
     instrs: List[LoweredInstr]
     node_to_instr: Dict[int, int]
-    # schedule memo (keyed by overlap flag) — issue_order() and callers
-    # asking for stats share one scheduling pass
-    sched_cache: Dict[bool, Dict] = field(default_factory=dict)
+    # schedule memo (keyed by overlap flag, or "stream" for the
+    # tile-streaming model) — issue_order() and callers asking for stats
+    # share one scheduling pass
+    sched_cache: Dict[Any, Dict] = field(default_factory=dict)
 
     def to_overlay(self) -> Program:
         """Project onto the core overlay ISA (program order = emission
@@ -285,16 +316,24 @@ class CompiledProgram:
         return out
 
     def mmu_tiling_summary(self) -> Dict[str, Any]:
-        """Aggregate MMU tiling efficiency: charged (ideal) vs tiled
-        cycles, plus how many matmuls are *skinny* (fewer output rows than
-        the 128 PE rows — every projection in a decode step) and the worst
-        single-matmul efficiency among them."""
+        """Aggregate MMU tiling efficiency: tiled (charged) vs ideal
+        (MAC-rate floor) cycles, plus how many matmuls are *skinny* (fewer
+        output rows than the 128 PE rows — every projection in a decode
+        step) and the worst single-matmul efficiency among them.
+
+        Invariant (ragged-tile charging): every MMU instruction charges
+        exactly the sum of its per-tile slices — slices x slice_cycles ==
+        tiled_cycles == the instruction's scheduled cost."""
         ideal = tiled = skinny = 0
         worst = 1.0
         for ins in self.instrs:
             if ins.unit != "MMU":
                 continue
             t = ins.meta["tiling"]
+            s = ins.meta["stream"]
+            assert (s["slices"] * s["slice_cycles"] == t["tiled_cycles"]
+                    == ins.cycles), (
+                ins.tag, "per-tile charges drifted from the charged cost")
             ideal += t["ideal_cycles"]
             tiled += t["tiled_cycles"]
             if ins.shape[0] < self.hw.mmu_pes:
@@ -337,10 +376,11 @@ def lower(graph: Graph, hw: NPEHardware, bits: int = 16,
             m = node.shape[-1]
             weight_resident = graph.node(node.inputs[1]).op == "param"
             idx = len(instrs)
+            tiling = tile_matmul(hw, n, k, m, bits)
             instrs.append(LoweredInstr(
-                "MMU", "matmul", mmu_cycles(hw, n, k, m, bits), deps,
+                "MMU", "matmul", tiling["tiled_cycles"], deps,
                 node.tag, (n, k, m), node.id,
-                meta=dict(tiling=tile_matmul(hw, n, k, m, bits),
+                meta=dict(tiling=tiling, stream=tile_stream(tiling),
                           weight_resident=weight_resident)))
             node_to_instr[node.id] = idx
             node_deps[node.id] = (idx,)
@@ -354,14 +394,16 @@ def lower(graph: Graph, hw: NPEHardware, bits: int = 16,
             assert model_cycles == nvu_cycles(hw, routine, n_el, "model"), (
                 routine, "VLIW bundling drifted from the overlay cost model")
             idx = len(instrs)
+            charged = nvu_cycles(hw, routine, n_el, nvu_source)
             instrs.append(LoweredInstr(
-                "NVU", routine, nvu_cycles(hw, routine, n_el, nvu_source),
+                "NVU", routine, charged,
                 deps, node.tag, (n_el,), node.id,
                 meta=dict(ir_op=node.op,
                           bundles_per_chunk=[len(p.bundles)
                                              for p in micro.passes],
                           vregs_used=micro.regs_used,
                           unroll=micro.unroll,
+                          consume=nvu_consume(hw, charged, n_el),
                           model_cycles=model_cycles)))
             node_to_instr[node.id] = idx
             node_deps[node.id] = (idx,)
@@ -380,6 +422,7 @@ def lower(graph: Graph, hw: NPEHardware, bits: int = 16,
             instrs.append(LoweredInstr(
                 "NVU", "topk", cycles, deps, node.tag, (n_el,), node.id,
                 meta=dict(ir_op="topk", k=k, routine="gelu",
+                          consume=nvu_consume(hw, cycles, n_el),
                           passes=k)))
             node_to_instr[node.id] = idx
             node_deps[node.id] = (idx,)

@@ -16,18 +16,30 @@ that serving loop in software, end-to-end on compiled programs:
   * **continuous batching** — FIFO queue + B-slot pool: admit into free
     slots, decode all occupied slots one token per step, evict on EOS or
     token budget (repro.npec.runtime.batch);
-  * **a cycle clock** — every step charges `greedy_schedule` cycles of
-    the *actual* compiled stream; p50/p99 latency and tokens/sec come
-    from that counter at the overlay's frequency, never from host
-    wall-clock (repro.npec.runtime.clock), so runs are bit-reproducible.
+  * **a cycle clock** — every step charges the scheduled cycles of the
+    *actual* compiled stream under the engine's `cycle_model`:
+    `"streaming"` (default, `stream_schedule` — tile-granular
+    producer-consumer overlap, the paper's own latency model) or `"dag"`
+    (`greedy_schedule`, the whole-op ablation).  Both step costs are
+    recorded (`decode_step_cycles_dag` / `decode_step_cycles_streaming`)
+    so serving tables can show the dag -> streaming latency delta;
+    p50/p99 latency and tokens/sec come from that counter at the
+    overlay's frequency, never from host wall-clock
+    (repro.npec.runtime.clock), so runs are bit-reproducible.  Matmul
+    instructions charge padded tile cycles (ragged-tile charging,
+    repro.npec.lower), so the clocked stream IS what the 128-PE-row
+    geometry sustains.
 
 `params=None` runs the engine *cost-only*: the admission/eviction and
-cycle accounting are identical but no numerics execute (generated tokens
-are pad zeros) — this is what `benchmarks/paper_tables.py::npec_serve`
-records, keeping results/npec_serve_cycles.json free of platform-BLAS
-noise.  With `params`, every step runs the functional executor, so the
-served tokens are the compiled streams' actual outputs (validated against
-per-sequence `DecodeSession` rollouts in tests/test_npec_runtime.py).
+cycle accounting are identical but no numerics execute — generated
+tokens come from a deterministic per-(request, step) synthetic stream
+over a small alphabet, so EOS-aware workloads still exercise ragged
+eviction, bit-reproducibly.  This is what
+`benchmarks/paper_tables.py::npec_serve` records, keeping
+results/npec_serve_cycles.json free of platform-BLAS noise.  With
+`params`, every step runs the functional executor, so the served tokens
+are the compiled streams' actual outputs (validated against per-sequence
+`DecodeSession` rollouts in tests/test_npec_runtime.py).
 
 Families without decode streams (moe: per-token capacity-1 dispatch is a
 ROADMAP open item) raise `CompileError` at construction — before any
@@ -43,7 +55,8 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.overlay import NPEHardware
 from repro.npec import (CompiledProgram, DecodeSession, compile_decode,
-                        compile_prefill, execute, greedy_schedule)
+                        compile_prefill, execute, greedy_schedule,
+                        schedule_for, stream_schedule)
 from repro.npec.runtime.batch import Request, RequestQueue, SlotPool
 from repro.npec.runtime.clock import CycleClock, LatencyTracker
 
@@ -51,14 +64,18 @@ from repro.npec.runtime.clock import CycleClock, LatencyTracker
 @dataclass
 class EngineStats:
     """Cycle-derived serving summary (all latencies at the overlay's
-    clock; `sustained_*` additionally charges the MMU tiling padding the
-    128-PE-row geometry actually pays — see `mmu_tiling_summary`)."""
+    clock).  Both cycle models' step costs are recorded —
+    `decode_step_cycles` is the one the clock charged (`cycle_model`),
+    with the dag/streaming pair alongside so the tile-streaming latency
+    delta is auditable in every serving record."""
     requests: List[Request] = field(default_factory=list)
     total_cycles: int = 0
     decode_steps: int = 0
     prefills: int = 0
+    cycle_model: str = "streaming"
     decode_step_cycles: int = 0
-    sustained_step_cycles: int = 0
+    decode_step_cycles_dag: int = 0
+    decode_step_cycles_streaming: int = 0
     mmu_row_occupancy: float = 0.0
     clock_hz: float = 200e6
     latency: Optional[LatencyTracker] = None
@@ -74,8 +91,11 @@ class EngineStats:
         out["tokens_per_sec"] = (
             round(gen * self.clock_hz / self.total_cycles, 1)
             if self.total_cycles else 0.0)
+        out["cycle_model"] = self.cycle_model
         out["decode_step_cycles"] = self.decode_step_cycles
-        out["sustained_step_cycles"] = self.sustained_step_cycles
+        out["decode_step_cycles_dag"] = self.decode_step_cycles_dag
+        out["decode_step_cycles_streaming"] = \
+            self.decode_step_cycles_streaming
         out["mmu_row_occupancy"] = round(self.mmu_row_occupancy, 4)
         out["total_cycles"] = self.total_cycles
         out["decode_steps"] = self.decode_steps
@@ -90,7 +110,10 @@ class NPEEngine:
                  *, slots: int = 4, capacity: int = 64,
                  max_new_tokens: int = 16, bits: int = 16,
                  npe: bool = False, params: Any = None,
-                 nvu_source: str = "paper", eos_id: Optional[int] = None):
+                 nvu_source: str = "paper", eos_id: Optional[int] = None,
+                 cycle_model: str = "streaming"):
+        if cycle_model not in ("dag", "streaming"):
+            raise ValueError(f"unknown cycle model {cycle_model!r}")
         self.cfg = cfg
         self.hw = hw if hw is not None else NPEHardware()
         self.slots = slots
@@ -99,17 +122,17 @@ class NPEEngine:
         self.bits = bits
         self.eos_id = eos_id
         self.nvu_source = nvu_source
+        self.cycle_model = cycle_model
         # compile the batched decode stream FIRST: unsupported families
         # (moe decode) raise CompileError here, before any scheduling
         self.decode_prog = compile_decode(cfg, capacity, self.hw, bits=bits,
                                           nvu_source=nvu_source, batch=slots)
-        sched = greedy_schedule(self.decode_prog)
         tiling = self.decode_prog.mmu_tiling_summary()
-        self.step_cycles = int(sched["total_cycles"])
-        # what the 128-PE-row geometry sustains: the charged (ideal-rate)
-        # schedule plus the skinny-tile padding cycles it hides
-        self.sustained_step_cycles = self.step_cycles + int(
-            tiling["tiled_cycles"] - tiling["ideal_cycles"])
+        self.step_cycles_dag = int(
+            greedy_schedule(self.decode_prog)["total_cycles"])
+        self.step_cycles_streaming = int(
+            stream_schedule(self.decode_prog)["total_cycles"])
+        self.step_cycles = int(self._schedule_cycles(self.decode_prog))
         self.mmu_row_occupancy = tiling["efficiency"]
 
         self.numeric = params is not None
@@ -125,8 +148,10 @@ class NPEEngine:
         self._next_tok = np.zeros(slots, np.int32)
         self._prefill_cache: Dict[int, CompiledProgram] = {}
         self.stats = EngineStats(
+            cycle_model=cycle_model,
             decode_step_cycles=self.step_cycles,
-            sustained_step_cycles=self.sustained_step_cycles,
+            decode_step_cycles_dag=self.step_cycles_dag,
+            decode_step_cycles_streaming=self.step_cycles_streaming,
             mmu_row_occupancy=self.mmu_row_occupancy,
             clock_hz=self.hw.clock_hz)
         self.stats.latency = LatencyTracker(self.clock)
@@ -134,8 +159,12 @@ class NPEEngine:
 
     # --- request intake ---------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: Optional[int] = None) -> Request:
-        """Queue a prompt; its cache slot must fit prompt + generation."""
+    def submit(self, prompt, max_new_tokens: Optional[int] = None,
+               eos_id: Optional[int] = None) -> Request:
+        """Queue a prompt; its cache slot must fit prompt + generation.
+        `eos_id` overrides the engine-wide EOS token for this request
+        (EOS-aware workloads sample one per request), so eviction can be
+        ragged instead of budget-only."""
         prompt = np.asarray(prompt, np.int32)
         new = max_new_tokens if max_new_tokens is not None \
             else self.max_new_tokens
@@ -150,7 +179,8 @@ class NPEEngine:
                 f"prompt ({prompt.size}) + max_new_tokens ({new}) exceeds "
                 f"the compiled cache capacity {self.capacity}")
         req = self.queue.submit(prompt, max_new_tokens=new,
-                                eos_id=self.eos_id,
+                                eos_id=(eos_id if eos_id is not None
+                                        else self.eos_id),
                                 submit_cycle=self.clock.cycles)
         self.stats.requests.append(req)
         return req
@@ -164,12 +194,26 @@ class NPEEngine:
                 nvu_source=self.nvu_source)
         return self._prefill_cache[seq]
 
+    def _schedule_cycles(self, prog: CompiledProgram) -> float:
+        return schedule_for(prog, self.cycle_model)["total_cycles"]
+
+    # Cost-only runs have no logits to argmax, but EOS-aware workloads
+    # still need *some* deterministic token stream to evict against —
+    # draw from a small alphabet (multiplicative-hash PRN per request and
+    # step) so sampled EOS ids actually fire and completions go ragged,
+    # bit-reproducibly (results/npec_serve_cycles.json is guarded).
+    SYNTH_ALPHABET = 32
+
+    def _synthetic_token(self, req: Request) -> int:
+        h = (req.rid * 2654435761 + len(req.generated) * 40503) & 0xffffffff
+        return int((h >> 16) % self.SYNTH_ALPHABET)
+
     def _admit(self, slot: int, req: Request) -> None:
         """Compiled prefill: charge the scheduled stream, seed the slot's
         cache banks, emit the first generated token."""
         prog = self._prefill_program(len(req.prompt))
         req.admit_cycle = self.clock.cycles
-        self.clock.advance(greedy_schedule(prog)["total_cycles"])
+        self.clock.advance(self._schedule_cycles(prog))
         self.stats.prefills += 1
         if self.numeric:
             res = execute(prog, self.params, {"tokens": req.prompt},
@@ -177,7 +221,7 @@ class NPEEngine:
             self.session.load_slot(slot, res.kv_exports, len(req.prompt))
             tok = int(np.argmax(np.asarray(res[0])[..., -1, :]))
         else:
-            tok = 0                 # cost-only: pad token, no numerics
+            tok = self._synthetic_token(req)
         self.pool.bind(slot, req)
         req.generated.append(tok)
         req.first_token_cycle = self.clock.cycles
@@ -216,6 +260,8 @@ class NPEEngine:
             next_tok = np.argmax(out[..., :], axis=-1).astype(np.int32)
         else:
             next_tok = np.zeros(self.slots, np.int32)
+            for slot, req in self.pool.active():
+                next_tok[slot] = self._synthetic_token(req)
         for slot, req in self.pool.active():
             tok = int(next_tok[slot])
             req.generated.append(tok)

@@ -20,10 +20,44 @@ program order IS the issue order, so the existing in-order earliest-start
 scheduler in `repro.core.cycles.schedule` reproduces the same timeline —
 that cross-check runs in tests/test_npec.py.
 
+`stream_schedule` refines the same greedy loop to TILE granularity — the
+paper's own latency model (§7.2.1, Table 4).  Every lowered matmul
+carries its per-tile cycle slices (`meta["stream"]`, from
+`lower.tile_matmul`) and every NVU instruction a rate-matched consumption
+profile (`meta["consume"]`), so a nonlinearity may *start* once its
+producer's first tile lands and must *finish* no earlier than one
+consumer chunk after the producer's last tile:
+
+    start >= producer_start + first_tile_slice     (chunked earliest start)
+    end    = max(start + own_cycles, producer_end + tail_chunk)
+
+This is the fluid tile-stream abstraction behind the paper's budget
+analysis: a layernorm streams concurrently with the matmul feeding it and
+stalls the machine only by max(0, nvu_cycles - producer_cycles) — the
+per-stall budgets `stream_schedule` reports (`stalls`: ln_a, ln_b, gelu,
+softmax, ...) in the same shape as
+`core.cycles.inference_cycles_streaming`, which it must match within 2%
+(tests/test_npec_stream.py sweeps NVU widths x seq {64,128,256} x MMU
+precisions).  Matmuls still wait for their producers to complete (the B
+operand must be fully resident before the contraction can stream), so
+`greedy_schedule` remains the whole-op DAG ablation:
+dag >= streaming >= mmu_busy.
+
+One known, deliberate divergence: in NVU-saturated configs at seq 512
+the compiled schedule comes in up to ~3% UNDER the analytic model,
+because the paper charges every head's softmax stall against a budget of
+only the next head's projections + QK^T, while the real pipeline also
+back-fills ready AV matmuls under pending softmaxes — the scheduler
+finds overlap the paper's conservative budget ignores.  The conformance
+sweep therefore gates seq <= 256 (where the two models agree within
+~1.3%) and gates seq 512 with the dag >= streaming >= mmu_busy
+invariants instead.
+
 Decode streams (repro.npec.trace.trace_decode) schedule through the same
 machinery: the pos-masked softmaxes overlap the next kv group's skinny
 projections exactly as prefill softmax overlaps the next head's — the
-per-step cost behind core.cycles.autoregressive_cycles.
+per-step cost behind core.cycles.autoregressive_cycles and the serving
+engine (repro.npec.runtime, `cycle_model="streaming"`).
 """
 from __future__ import annotations
 
@@ -154,6 +188,161 @@ def _inorder_schedule(compiled: CompiledProgram,
         "start": start,
         "end": end,
     }
+
+
+def _first_out(ins: LoweredInstr) -> float:
+    """Cycles from an instruction's start until its FIRST output slice is
+    available to a rate-matched consumer: one tile (MMU), one chunk (NVU),
+    one row (MRU/MWU traffic streams a row per cycle)."""
+    if ins.unit == "MMU":
+        return float(ins.meta["stream"]["slice_cycles"])
+    if ins.unit == "NVU":
+        consume = ins.meta.get("consume")
+        return float(consume["tail_cycles"]) if consume else float(ins.cycles)
+    return 1.0
+
+
+def _tail(ins: LoweredInstr) -> float:
+    """Drain cycles a rate-matched consumer needs after its producer's
+    last tile: one chunk of its own processing."""
+    consume = ins.meta.get("consume")
+    return float(consume["tail_cycles"]) if consume else float(ins.cycles)
+
+
+def _stall_key(ins: LoweredInstr) -> str:
+    """Bucket an NVU instruction into the stall keys the analytic
+    streaming model reports: the final tag component (`enc0.ln_a` ->
+    `ln_a`, `enc0.h3.softmax` -> `softmax`), with the activation tag
+    normalized to its routine (`act` -> `gelu`)."""
+    tail = ins.tag.rsplit(".", 1)[-1] if ins.tag else ins.op
+    if tail == "act":
+        return "gelu"
+    return tail or ins.op
+
+
+def stream_schedule(compiled: CompiledProgram) -> Dict:
+    """Tile-granular streaming schedule (the paper's own latency model).
+
+    Same greedy earliest-start loop and tie-breaks as `greedy_schedule`,
+    but NVU instructions pipeline under their producers: an NVU consumer
+    may start once the latest-ending dependency has streamed its first
+    tile slice (all *other* dependencies — residual inputs, parameters —
+    must be fully complete), and it finishes at
+    max(start + own_cycles, producer_end + one consumer chunk).  Matmuls
+    keep whole-op dependencies (their weight/B operand must be resident).
+
+    Returns the `greedy_schedule` summary keys plus `stalls`: per-key NVU
+    stall budgets — MMU idle gaps attributed to the blocking nonlinearity
+    plus the trailing NVU excess past the last matmul — in the same shape
+    as `core.cycles.inference_cycles_streaming` (which the totals must
+    match within 2% for BERT prefill, tests/test_npec_stream.py).
+    Memoized on the program under the key ``"stream"``."""
+    cached = compiled.sched_cache.get("stream")
+    if cached is not None:
+        return cached
+    instrs = compiled.instrs
+    n = len(instrs)
+    remaining = [len(ins.deps) for ins in instrs]
+    consumers: List[List[int]] = [[] for _ in range(n)]
+    for i, ins in enumerate(instrs):
+        for d in ins.deps:
+            consumers[d].append(i)
+    cross = [any(instrs[c].unit != instrs[i].unit for c in consumers[i])
+             for i in range(n)]
+    ready = [i for i in range(n) if remaining[i] == 0]
+    free: Dict[str, float] = {}
+    start = [0.0] * n
+    end = [0.0] * n
+    order: List[int] = []
+
+    def _times(i: int) -> tuple:
+        ins = instrs[i]
+        unit_free = free.get(ins.unit, 0.0)
+        if ins.unit == "NVU" and ins.deps:
+            p = max(ins.deps, key=lambda d: end[d])
+            others = max((end[d] for d in ins.deps if d != p), default=0.0)
+            first = min(start[p] + _first_out(instrs[p]), end[p])
+            s = max(unit_free, others, first)
+            e = max(s + ins.cycles, end[p] + _tail(ins))
+        else:
+            s = max(unit_free, max((end[d] for d in ins.deps), default=0.0))
+            e = s + ins.cycles
+        return s, e
+
+    # Tie-breaks: cross-unit feeders first (as greedy_schedule), then
+    # EMISSION order — not critical path.  The ICU consumes the stream in
+    # near-emission order (q,k,v,qk,softmax per head), which is exactly
+    # the software pipeline the paper's §7.2.1 softmax budget assumes
+    # (next head's QKV + QK^T under the pending softmax); critical-path
+    # deferral of the V projections would back-fill softmax stalls beyond
+    # that budget and drift from the analytic model it must match.
+    while ready:
+        best, best_key, best_t = None, None, None
+        for i in ready:
+            s, e = _times(i)
+            key = (s, not cross[i], i)
+            if best_key is None or key < best_key:
+                best, best_key, best_t = i, key, (s, e)
+        ready.remove(best)
+        start[best], end[best] = best_t
+        free[instrs[best].unit] = end[best]
+        order.append(best)
+        for c in consumers[best]:
+            remaining[c] -= 1
+            if remaining[c] == 0:
+                ready.append(c)
+    assert len(order) == n, "dependency cycle in compiled program"
+    total = max(end) if end else 0.0
+    busy = compiled.busy_by_unit()
+
+    # --- per-stall budgets: MMU idle gaps + trailing NVU excess ---------
+    stalls: Dict[str, float] = {}
+    mmu = sorted((i for i in range(n) if instrs[i].unit == "MMU"),
+                 key=lambda i: start[i])
+    prev_end = 0.0
+    for i in mmu:
+        gap = start[i] - prev_end
+        if gap > 1e-9:
+            blockers = [d for d in instrs[i].deps
+                        if instrs[d].unit == "NVU" and end[d] > prev_end]
+            if blockers:
+                b = max(blockers, key=lambda d: end[d])
+                key = _stall_key(instrs[b])
+                stalls[key] = stalls.get(key, 0.0) + gap
+        prev_end = max(prev_end, end[i])
+    last_mmu = max((end[i] for i in mmu), default=0.0)
+    t = last_mmu
+    for i in sorted(range(n), key=lambda i: end[i]):
+        if instrs[i].unit != "NVU" or end[i] <= t:
+            continue
+        key = _stall_key(instrs[i])
+        stalls[key] = stalls.get(key, 0.0) + end[i] - max(t, start[i])
+        t = end[i]
+
+    sched = {
+        "total_cycles": total,
+        "mmu_busy": float(busy.get("MMU", 0)),
+        "nvu_busy": float(busy.get("NVU", 0)),
+        "mmu_util": busy.get("MMU", 0) / total if total else 0.0,
+        "stalls": stalls,
+        "order": order,
+        "start": start,
+        "end": end,
+    }
+    compiled.sched_cache["stream"] = sched
+    return sched
+
+
+def schedule_for(compiled: CompiledProgram, cycle_model: str) -> Dict:
+    """Dispatch a cycle-model name to its scheduler — the ONE mapping the
+    cost wrappers (core.cycles) and the serving engine (npec.runtime)
+    share: ``"streaming"`` -> `stream_schedule` (tile-granular, the
+    serving default), ``"dag"`` -> `greedy_schedule` (whole-op)."""
+    if cycle_model == "streaming":
+        return stream_schedule(compiled)
+    if cycle_model == "dag":
+        return greedy_schedule(compiled)
+    raise ValueError(f"unknown cycle model {cycle_model!r}")
 
 
 def issue_order(compiled: CompiledProgram, *, overlap: bool = True) -> Program:

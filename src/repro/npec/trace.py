@@ -929,7 +929,8 @@ def main(argv=None) -> None:
 
     from repro.configs import get_config
     from repro.core.overlay import NPEHardware
-    from repro.npec import compile_decode, compile_model, greedy_schedule
+    from repro.npec import (compile_decode, compile_model, greedy_schedule,
+                            stream_schedule)
 
     cfg = get_config(args.model)
     hw = NPEHardware(vrwidth=args.vrwidth)
@@ -940,11 +941,13 @@ def main(argv=None) -> None:
         compiled = compile_model(cfg, args.seq, hw, bits=args.bits,
                                  include_embed=False)
     stats = greedy_schedule(compiled)
+    tile = stream_schedule(compiled)
     print(f"{args.model}: {compiled.graph!r}")
     print(f"lowered to {len(compiled.instrs)} instrs "
           f"{compiled.counts_by_unit()}; scheduled "
-          f"{stats['total_cycles']:.0f} cycles "
-          f"(MMU util {100 * stats['mmu_util']:.1f}%)")
+          f"{stats['total_cycles']:.0f} cycles whole-op / "
+          f"{tile['total_cycles']:.0f} tile-streaming "
+          f"(MMU util {100 * tile['mmu_util']:.1f}%)")
     if args.decode:
         t = compiled.mmu_tiling_summary()
         print(f"skinny matmuls: {t['skinny_matmuls']} "

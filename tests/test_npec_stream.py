@@ -1,0 +1,175 @@
+"""Tile-streaming schedule conformance (repro.npec.stream_schedule).
+
+Three gates:
+  * analytic agreement — the compiled tile-granular schedule reproduces
+    the paper's own latency model (`core.cycles.inference_cycles_streaming`,
+    padded charge mode) within 2% on total cycles AND per-stall budgets,
+    swept over NVU widths x seq {64, 128, 256} x MMU precisions.  seq 512
+    is gated by the schedule-ordering invariants instead: in NVU-saturated
+    configs the compiled schedule legitimately beats the analytic model by
+    up to ~3% because it back-fills ready AV matmuls under pending
+    softmaxes, overlap the paper's per-head budget ignores (see
+    repro/npec/schedule.py).
+  * schedule invariants — dag >= streaming >= mmu_busy everywhere, and
+    streaming ragged-tile charging is self-consistent (per-tile slices sum
+    to the charged instruction cost, `mmu_tiling_summary`).
+  * cycle regression — recomputing the dag-vs-streaming table reproduces
+    results/npec_stream_cycles.json exactly (regenerate via
+    `python -m benchmarks.run` if the compiler changed).
+"""
+import pytest
+
+from repro.core import cycles as cy
+from repro.core.overlay import NPEHardware, mmu_tiled_cycles
+from repro import npec
+
+HW = NPEHardware(vrwidth=1024)
+STALL_KEYS = {"ln_a", "ln_b", "gelu", "softmax"}
+
+
+# ---------------------------------------------------------------------------
+# Compiled streaming schedule vs the analytic paper model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vr", [256, 512, 1024, 2048])
+@pytest.mark.parametrize("seq", [64, 128, 256])
+@pytest.mark.parametrize("bits", [8, 16])
+def test_stream_schedule_matches_analytic_model(vr, seq, bits):
+    """ISSUE gate: `inference_cycles(model="streaming", backend="npec")`
+    agrees with the analytic model (matching padded charge mode) within
+    2% on total cycles, reports exactly the analytic stall keys, and
+    every per-stall budget agrees within 2% of the per-encoder total."""
+    hw = NPEHardware(vrwidth=vr)
+    sh = cy.BertShape(seq=seq)
+    ana = cy.inference_cycles_streaming(hw, sh, bits, charge="padded")
+    comp = cy.inference_cycles(hw, sh, bits, backend="npec")
+    dev = abs(comp["total_cycles"] - ana["total_cycles"])
+    assert dev / ana["total_cycles"] < 0.02, (
+        comp["total_cycles"], ana["total_cycles"])
+    assert set(comp["stalls"]) <= STALL_KEYS
+    enc = ana["total_cycles"] / sh.encoders
+    for key, want in ana["stalls"].items():
+        got = comp["stalls"].get(key, 0.0)
+        assert abs(got - want) < 0.02 * enc, (key, got, want)
+
+
+@pytest.mark.parametrize("vr", [256, 1024, 2048])
+@pytest.mark.parametrize("seq", [64, 128, 256, 512])
+@pytest.mark.parametrize("bits", [8, 16])
+def test_schedule_ordering_invariants(vr, seq, bits):
+    """dag >= streaming >= mmu_busy: tile streaming can only relax the
+    whole-op schedule, and the MMU serial chain lower-bounds both."""
+    hw = NPEHardware(vrwidth=vr)
+    compiled = npec.compile_bert_shape(hw, cy.BertShape(seq=seq), bits)
+    dag = npec.greedy_schedule(compiled)
+    st = npec.stream_schedule(compiled)
+    assert dag["total_cycles"] >= st["total_cycles"] >= st["mmu_busy"]
+    assert st["total_cycles"] >= st["nvu_busy"]
+
+
+def test_streaming_beats_dag_where_nvu_stalls():
+    """The point of the refactor: where the whole-op model serializes
+    layernorm/GELU against the matmuls, tile streaming hides them —
+    strictly lower latency at every NVU width at seq 256."""
+    for vr in (256, 512, 1024, 2048):
+        hw = NPEHardware(vrwidth=vr)
+        compiled = npec.compile_bert_shape(hw, cy.BertShape(seq=256), 16)
+        dag = npec.greedy_schedule(compiled)
+        st = npec.stream_schedule(compiled)
+        assert st["total_cycles"] < dag["total_cycles"]
+
+
+def test_inference_cycles_streaming_backend_npec_api():
+    """Acceptance: the streaming model accepts backend="npec" (no
+    ValueError) and returns the analytic model's result shape."""
+    got = cy.inference_cycles(HW, cy.BertShape(seq=128), 16,
+                              model="streaming", backend="npec")
+    for key in ("total_cycles", "mmu_busy", "nvu_busy", "mmu_util",
+                "stalls"):
+        assert key in got
+    with pytest.raises(ValueError, match="unknown backend"):
+        cy.inference_cycles(HW, cy.BertShape(seq=128), 16,
+                            backend="nonsense")
+
+
+# ---------------------------------------------------------------------------
+# Ragged-tile (padded) charging
+# ---------------------------------------------------------------------------
+
+def test_ragged_tiles_charge_padded_cycles():
+    """ISSUE satellite: MMU instructions charge the padded tile cycles —
+    per-tile slices sum to the charged cost everywhere `tile_matmul`
+    metadata exists (asserted inside `mmu_tiling_summary`), and ragged
+    shapes charge strictly more than the ideal MAC rate."""
+    # decode streams are maximally ragged: every projection is 1-row
+    compiled = npec.compile_decode_bert_shape(HW, cy.BertShape(seq=64),
+                                              128, 16, layers=1)
+    t = compiled.mmu_tiling_summary()      # also asserts per-tile sums
+    assert t["tiled_cycles"] > t["ideal_cycles"]
+    for ins in compiled.instrs:
+        if ins.unit != "MMU":
+            continue
+        n, k, m = ins.shape
+        assert ins.cycles == mmu_tiled_cycles(HW, n, k, m, 16)
+        assert ins.cycles == ins.meta["tiling"]["tiled_cycles"]
+        s = ins.meta["stream"]
+        assert s["slices"] * s["slice_cycles"] == ins.cycles
+
+
+def test_hand_builder_charges_padded_like_the_compiler():
+    """The hand-built cross-check charges the same padded tile rate, so
+    npec-vs-hand comparisons stay like for like at ragged seq 64."""
+    sh = cy.BertShape(seq=64)
+    hand = cy.schedule(cy.build_encoder_program(HW, sh, 16))
+    compiled = npec.compile_bert_shape(HW, sh, 16)
+    assert compiled.busy_by_unit()["MMU"] == hand["mmu_busy"]
+    # seq 64 rows fill half of the 128 PE rows: busy = 2x the ideal floor
+    t = compiled.mmu_tiling_summary()
+    assert t["tiled_cycles"] == 2 * t["ideal_cycles"]
+
+
+def test_analytic_padded_charge_mode():
+    """charge="padded" equals the compiled MMU busy total exactly, and
+    charge="ideal" stays the paper-faithful default (they agree wherever
+    BERT shapes are MMU-aligned)."""
+    for seq, bits in ((64, 16), (128, 8), (256, 16)):
+        sh = cy.BertShape(seq=seq)
+        pad = cy.inference_cycles_streaming(HW, sh, bits, charge="padded")
+        compiled = npec.compile_bert_shape(HW, sh, bits)
+        assert pad["mmu_busy"] == compiled.busy_by_unit()["MMU"] \
+            * sh.encoders
+    ideal = cy.inference_cycles_streaming(HW, cy.BertShape(seq=128), 16)
+    pad = cy.inference_cycles_streaming(HW, cy.BertShape(seq=128), 16,
+                                        charge="padded")
+    assert ideal["total_cycles"] == pad["total_cycles"]
+    with pytest.raises(ValueError, match="charge"):
+        cy.inference_cycles_streaming(HW, cy.BertShape(seq=128), 16,
+                                      charge="nonsense")
+
+
+# ---------------------------------------------------------------------------
+# Streaming metadata on lowered instructions
+# ---------------------------------------------------------------------------
+
+def test_lowered_streams_carry_tile_and_consume_profiles():
+    compiled = npec.compile_bert_shape(HW, cy.BertShape(seq=128), 16)
+    for ins in compiled.instrs:
+        if ins.unit == "MMU":
+            s = ins.meta["stream"]
+            assert s["slices"] >= 1 and s["slice_cycles"] >= 1
+        elif ins.unit == "NVU":
+            c = ins.meta["consume"]
+            assert c["chunks"] >= 1
+            assert 1 <= c["tail_cycles"] <= ins.cycles
+
+
+# ---------------------------------------------------------------------------
+# Cycle-count regression guard vs results/npec_stream_cycles.json
+# ---------------------------------------------------------------------------
+
+def test_stream_cycle_record_regression():
+    """The committed dag-vs-streaming record must be reproducible
+    bit-for-bit from the current compiler."""
+    from conftest import assert_cycle_record
+    assert_cycle_record("npec_stream_cycles.json", "npec_stream_cycles/v1",
+                        "npec_stream")
