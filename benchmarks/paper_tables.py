@@ -311,6 +311,90 @@ def npec_serve(batches=(1, 2, 4, 8), bits_list=(8, 16),
     return out
 
 
+def npec_fleet(bits=16) -> List[Dict]:
+    """Multi-overlay fleet serving (repro.npec.fleet, docs/fleet.md):
+    family x shard strategy x overlay count x request rate, all
+    cost-only and cycle-derived (bit-exact record guard in
+    tests/test_npec_fleet.py).
+
+    bert_base rows run the full continuous-batching engines behind the
+    fleet (replicate N in {1,2,4}; pipeline layer groups N in {2,4})
+    over the EOS-aware ragged-prompt workload, at rate=None (everything
+    queued at t=0 — the saturation measurement) and an 8 req/s seeded
+    Poisson arrival process (queue-wait under load).  granite rows shard
+    the compiled MoE inference stream expert-parallel (N in {1,2,4}) at
+    seq 64 — MoE decode streams are a ROADMAP open item, so the moe
+    family serves single-pass inferences.  `transfer_cycles` itemizes
+    the inter-overlay MRU/MWU crossings (never folded into compute);
+    `tok_s` counts generated tokens for the engine-backed shards and
+    processed prompt tokens for expert-parallel inference.  The N=1
+    replicate row is the lone-engine baseline the N>=2 gains are read
+    against; fleet-of-1 itself is bit-equal to `NPEEngine.run()`
+    (tests/test_npec_fleet.py)."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.overlay import NPEHardware
+    from repro.data.pipeline import SyntheticRequests
+    from repro.npec.fleet import NPEFleet
+
+    hw = NPEHardware(vrwidth=1024)
+    out = []
+
+    def fleet_row(rep: Dict, family: str, rate) -> Dict:
+        return dict(
+            family=family, shard=rep["shard"], overlays=rep["overlays"],
+            rate_rps=rate, mmu_bits=bits,
+            requests=rep["requests"], tokens=rep["tokens"],
+            p50_ms=rep["p50_ms"], p99_ms=rep["p99_ms"],
+            queue_wait_p50_ms=rep["queue_wait_p50_ms"],
+            queue_wait_p99_ms=rep["queue_wait_p99_ms"],
+            service_p50_ms=rep["service_p50_ms"],
+            tok_s=rep["tokens_per_sec"],
+            makespan_cycles=rep["makespan_cycles"],
+            transfer_cycles=rep["transfer_cycles"],
+            overlay_util=rep["overlay_util"])
+
+    # --- bert_base: replicate + pipeline engine fleets -----------------
+    cfg = get_config("bert_base")
+    reqs = SyntheticRequests(cfg.vocab_size, max_prompt=24, rate_rps=8.0,
+                             clock_hz=hw.clock_hz)
+    n_requests = 24
+    arrive = reqs.arrival_cycles(n_requests)
+    decode_prog = None
+    prefill_cache: Dict[int, object] = {}
+    for shard, n in (("replicate", 1), ("replicate", 2), ("replicate", 4),
+                     ("pipeline", 2), ("pipeline", 4)):
+        for rate in (None, 8.0):
+            fleet = NPEFleet(cfg, hw, overlays=n, shard=shard, slots=4,
+                             capacity=48, max_new_tokens=12, bits=bits,
+                             decode_prog=decode_prog,
+                             prefill_cache=prefill_cache)
+            if decode_prog is None:
+                decode_prog = (fleet.engines[0].decode_prog
+                               if fleet.engines else None)
+            for i in range(n_requests):
+                fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i),
+                             arrival_cycle=(int(arrive[i]) if rate
+                                            else 0))
+            out.append(fleet_row(fleet.run().report(), "bert", rate))
+
+    # --- granite: expert-parallel MoE inference ------------------------
+    gcfg = get_config("granite_moe_1b_a400m")
+    seq = 64
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, gcfg.vocab_size, (seq,), np.int32)
+               for _ in range(8)]
+    inference_prog = None
+    for n in (1, 2, 4):
+        fleet = NPEFleet(gcfg, hw, overlays=n, shard="expert", bits=bits,
+                         seq=seq, inference_prog=inference_prog)
+        inference_prog = fleet.inference_prog
+        for p in prompts:
+            fleet.submit(p)
+        out.append(fleet_row(fleet.run().report(), "moe", None))
+    return out
+
+
 def npec_stream(seq=64, bits_list=(8, 16),
                 decode_batches=(1, 4, 8)) -> List[Dict]:
     """Tile-streaming vs whole-op DAG scheduling (the tentpole delta):
@@ -380,4 +464,5 @@ ALL = {
     "npec_moe": npec_moe,
     "npec_serve": npec_serve,
     "npec_stream": npec_stream,
+    "npec_fleet": npec_fleet,
 }

@@ -11,9 +11,11 @@ results/npec_decode_cycles.json (guarded by tests/test_npec_decode.py),
 compiled MoE routing super-blocks to results/npec_moe_cycles.json
 (guarded by tests/test_npec_conformance.py), batched-decode serving
 streams + engine runs to results/npec_serve_cycles.json (guarded by
-tests/test_npec_runtime.py), and the tile-streaming vs whole-op DAG
+tests/test_npec_runtime.py), the tile-streaming vs whole-op DAG
 schedule deltas to results/npec_stream_cycles.json (guarded by
-tests/test_npec_stream.py).
+tests/test_npec_stream.py), and the multi-overlay fleet serving sweep
+(replicate/expert/pipeline sharding) to results/npec_fleet_cycles.json
+(guarded by tests/test_npec_fleet.py).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -85,6 +87,7 @@ def write_npec_record(path: Path, rows=None,
                 else paper_tables.npec_moe() if "moe" in schema
                 else paper_tables.npec_serve() if "serve" in schema
                 else paper_tables.npec_stream() if "stream" in schema
+                else paper_tables.npec_fleet() if "fleet" in schema
                 else paper_tables.npec_vs_hand())
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(
@@ -110,10 +113,14 @@ def main(argv=None):
     ap.add_argument("--json-out-stream",
                     default="results/npec_stream_cycles.json",
                     help="dag-vs-streaming schedule record ('' disables)")
+    ap.add_argument("--json-out-fleet",
+                    default="results/npec_fleet_cycles.json",
+                    help="multi-overlay fleet cycle record ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_tables
     npec_rows = decode_rows = moe_rows = serve_rows = stream_rows = None
+    fleet_rows = None
     for name, fn in paper_tables.ALL.items():
         t0 = time.perf_counter()
         rows = fn()
@@ -129,6 +136,8 @@ def main(argv=None):
             serve_rows = rows
         elif name == "npec_stream":
             stream_rows = rows
+        elif name == "npec_fleet":
+            fleet_rows = rows
 
     if args.json_out:
         write_npec_record(Path(args.json_out), npec_rows)
@@ -144,6 +153,9 @@ def main(argv=None):
     if args.json_out_stream:
         write_npec_record(Path(args.json_out_stream), stream_rows,
                           schema="npec_stream_cycles/v1")
+    if args.json_out_fleet:
+        write_npec_record(Path(args.json_out_fleet), fleet_rows,
+                          schema="npec_fleet_cycles/v1")
 
     if not args.skip_kernels:
         _print_table("kernel_microbench", bench_kernels(args.quick))

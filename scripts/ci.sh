@@ -141,3 +141,64 @@ if missing:
         f"— missing {missing}")
 print("docs/serving.md serving constants check OK")
 PY
+
+# fleet smoke: two replicated overlays over the shared admission queue,
+# and one Poisson-rate run (repro.npec.fleet end to end)
+python -m repro.launch.serve --backend npec --smoke --overlays 2
+python -m repro.launch.serve --backend npec --smoke --overlays 2 --rate 2000
+
+# docs drift gate: docs/fleet.md's worked expert-parallel dispatch
+# crossing must cite the constants the partitioner actually computes
+# (moe_capacity + partition_expert at granite seq 64, N=2) and the
+# committed fleet record's throughput/transfer numbers — mirrors the
+# serving.md record gate
+python - <<'PY'
+import json
+from pathlib import Path
+
+from repro import npec
+from repro.configs import get_config
+from repro.core.overlay import NPEHardware
+from repro.npec.fleet import partition_expert
+
+cfg = get_config("granite_moe_1b_a400m")
+hw = NPEHardware(vrwidth=1024)
+cap = npec.moe_capacity(cfg, 64)
+e_r = sum(1 for e in range(cfg.moe.num_experts) if e % 2 == 1)
+rows = cap * e_r
+plan = partition_expert(npec.compile_model(cfg, 64, hw, bits=16), 2)
+per_req = plan.transfer_rows
+
+rec = json.loads(Path("results/npec_fleet_cycles.json").read_text())
+assert rec["schema"] == "npec_fleet_cycles/v1"
+by = {(r["family"], r["shard"], r["overlays"], r["rate_rps"]): r
+      for r in rec["rows"]}
+moe1 = by[("moe", "expert", 1, None)]
+moe2 = by[("moe", "expert", 2, None)]
+if moe2["transfer_cycles"] != per_req * moe2["requests"]:
+    raise SystemExit(
+        "fleet record transfer cycles drifted from partition_expert: "
+        f"{moe2['transfer_cycles']} != {per_req} x {moe2['requests']}")
+
+doc = Path("docs/fleet.md").read_text()
+needed = {
+    "expert capacity": f"= {cap}` rows",
+    "dispatch crossing rows": f"{cap} x {e_r} = {rows}`",
+    "per-layer crossing": f"4 x {rows} = {4 * rows} transfer cycles",
+    "per-request transfers": f"{per_req} cycles per request",
+    "record transfer cycles": f"{moe2['transfer_cycles']} transfer",
+    "expert tok/s gain": f"{moe1['tok_s']} → {moe2['tok_s']} tok/s",
+    "bert baseline tok/s": f"{by[('bert','replicate',1,None)]['tok_s']} "
+                           "tok/s",
+    "replicate tok/s at N=2": f"{by[('bert','replicate',2,None)]['tok_s']}"
+                              " tok/s at N=2",
+    "pipeline tok/s at N=2":
+        f"pipeline sharding {by[('bert','pipeline',2,None)]['tok_s']}",
+}
+missing = [k for k, token in needed.items() if token not in doc]
+if missing:
+    raise SystemExit(
+        f"docs/fleet.md out of sync with the fleet partitioner / "
+        f"results/npec_fleet_cycles.json — missing {missing}")
+print("docs/fleet.md fleet constants check OK")
+PY

@@ -424,6 +424,78 @@ def moe_layer_cycles(hw: NPEHardware, cfg, seq: int, bits: int,
 
 
 # ---------------------------------------------------------------------------
+# Fleet sharding — npec-compiled streams split across overlays
+# (repro.npec.fleet, docs/fleet.md)
+# ---------------------------------------------------------------------------
+
+def pipeline_stage_cycles(hw: NPEHardware, shape: BertShape,
+                          cache_len: int, batch: int, bits: int,
+                          stages: int, nvu_source: str = "paper",
+                          cycle_model: str = "streaming"
+                          ) -> Dict[str, float]:
+    """Fleet cost wrapper: split the batched decode stream of a
+    `shape.encoders`-layer stack into `stages` contiguous pipeline layer
+    groups (repro.npec.fleet.partition_pipeline) and report each stage's
+    scheduled cycles.  Stage boundaries charge `batch` activation rows of
+    MRU/MWU transfer (itemized in `transfer_cycles`, never folded into
+    compute).  `steady_tok_s` is the saturated-pipeline rate — one
+    B-token step per bottleneck-stage interval — vs the monolithic
+    stream's `mono_tok_s`; the fleet simulator measures the bubbles this
+    bound ignores."""
+    from repro import npec
+    compiled = npec.compile_decode_bert_shape(hw, shape, cache_len, bits,
+                                              nvu_source=nvu_source,
+                                              layers=shape.encoders,
+                                              batch=batch)
+    from repro.npec.fleet import partition_pipeline
+    mono = npec.schedule_for(compiled, cycle_model)["total_cycles"]
+    plan = partition_pipeline(compiled, stages, rows=batch)
+    costs = [npec.schedule_for(p, cycle_model)["total_cycles"]
+             for p in plan.stages]
+    xfer = sum(npec.transfer_cycles(p) for p in plan.stages)
+    bottleneck = max(costs)
+    return {
+        "stage_cycles": [int(round(c)) for c in costs],
+        "sum_stage_cycles": int(round(sum(costs))),
+        "mono_cycles": int(round(mono)),
+        "bottleneck_cycles": int(round(bottleneck)),
+        "transfer_cycles": int(xfer),
+        "steady_tok_s": batch * hw.clock_hz / bottleneck,
+        "mono_tok_s": batch * hw.clock_hz / mono,
+    }
+
+
+def expert_shard_cycles(hw: NPEHardware, cfg, seq: int, bits: int,
+                        overlays: int, nvu_source: str = "paper",
+                        cycle_model: str = "streaming"
+                        ) -> Dict[str, float]:
+    """Fleet cost wrapper: shard one compiled MoE inference stream's
+    per-expert runs across `overlays`
+    (repro.npec.fleet.partition_expert) and report the phase-barriered
+    request latency — every phase costs the max over its concurrent
+    per-overlay tasks — vs the monolithic stream, with the
+    dispatch/combine crossing cycles itemized."""
+    from repro import npec
+    from repro.npec.fleet import partition_expert
+    compiled = npec.compile_model(cfg, seq, hw, bits=bits,
+                                  nvu_source=nvu_source)
+    mono = npec.schedule_for(compiled, cycle_model)["total_cycles"]
+    plan = partition_expert(compiled, overlays)
+    phase_cycles = [
+        max(npec.schedule_for(t.prog, cycle_model)["total_cycles"]
+            for t in ph.tasks) for ph in plan.phases]
+    request = sum(phase_cycles)
+    return {
+        "phases": len(plan.phases),
+        "capacity": plan.capacity,
+        "request_cycles": int(round(request)),
+        "mono_cycles": int(round(mono)),
+        "transfer_cycles": int(plan.transfer_rows),
+        "speedup": mono / request if request else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Analytic tables (2 and 4)
 # ---------------------------------------------------------------------------
 

@@ -71,6 +71,11 @@ class SyntheticRequests:
     max_prompt: int
     seed: int = 0
     eos_alphabet: int = 32
+    # Poisson arrival process (fleet load sweeps, docs/fleet.md): mean
+    # request rate in requests/sec at the overlay clock.  None keeps the
+    # legacy everything-arrives-at-cycle-0 workload.
+    rate_rps: Optional[float] = None
+    clock_hz: float = 200e6
 
     def request(self, i: int) -> np.ndarray:
         rng = np.random.default_rng(self.seed * 7919 + i)
@@ -80,3 +85,15 @@ class SyntheticRequests:
     def eos_id(self, i: int) -> int:
         rng = np.random.default_rng(self.seed * 104729 + i + 1)
         return int(rng.integers(0, min(self.eos_alphabet, self.vocab_size)))
+
+    def arrival_cycles(self, n: int) -> np.ndarray:
+        """Per-request arrival cycles for the first `n` requests: a
+        seeded Poisson process (cumulative exponential inter-arrival
+        gaps at `rate_rps`, converted to cycles at `clock_hz`), so
+        utilization/latency sweeps are bit-reproducible.  All zeros when
+        `rate_rps` is None — every request queued at t=0."""
+        if self.rate_rps is None:
+            return np.zeros(n, np.int64)
+        rng = np.random.default_rng(self.seed * 52361 + 7)
+        gaps = rng.exponential(self.clock_hz / self.rate_rps, n)
+        return np.cumsum(gaps).astype(np.int64)

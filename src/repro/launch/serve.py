@@ -26,6 +26,14 @@ Two backends:
     docs/serving.md; the benchmark table lives in
     results/npec_serve_cycles.json.
 
+``--overlays N`` (with ``--shard {replicate,expert,pipeline}`` and an
+optional Poisson ``--rate``) lifts the npec backend to the multi-overlay
+fleet simulator (`repro.npec.fleet.NPEFleet`, docs/fleet.md): N overlays
+pull from a shared admission queue on a common fleet clock, with
+expert-/pipeline-parallel sharding charging inter-overlay transfers as
+MRU/MWU traffic.  N=1 replicate with no rate keeps the lone-engine path
+bit-identical.
+
 For encoder-only BERT, "serving" is one encoder pass per request batch —
 see examples/serve_bert.py, which reproduces the paper's latency table
 with the NPE cycle model alongside wall-clock CPU numbers.
@@ -145,6 +153,53 @@ class Server:
         return stats
 
 
+def run_npec_fleet(args) -> Dict[str, float]:
+    """Multi-overlay serving (repro.npec.fleet, docs/fleet.md): N
+    overlays pull from a shared admission queue — plain replicas, or one
+    model sharded expert-/pipeline-parallel with inter-overlay transfers
+    itemized.  Cost-only (the fleet clock is the deliverable); arrivals
+    come from the seeded Poisson process when --rate is set."""
+    import numpy as np
+    from repro.core.overlay import NPEHardware
+    from repro.npec.fleet import NPEFleet
+
+    cfg = get_config(args.arch, smoke=True)
+    hw = NPEHardware(vrwidth=args.vrwidth)
+    if args.shard == "expert":
+        seq = min(16, args.capacity)
+        fleet = NPEFleet(cfg, hw, overlays=args.overlays, shard="expert",
+                         bits=args.bits, cycle_model=args.cycle_model,
+                         seq=seq)
+        reqs = SyntheticRequests(cfg.vocab_size, max_prompt=seq,
+                                 rate_rps=args.rate, clock_hz=hw.clock_hz)
+        arrivals = reqs.arrival_cycles(args.requests)
+        rng = np.random.default_rng(11)
+        for i in range(args.requests):
+            fleet.submit(rng.integers(0, cfg.vocab_size, (seq,), np.int32),
+                         arrival_cycle=int(arrivals[i]))
+    else:
+        max_prompt = args.capacity - args.gen
+        fleet = NPEFleet(cfg, hw, overlays=args.overlays, shard=args.shard,
+                         slots=args.batch, capacity=args.capacity,
+                         max_new_tokens=args.gen, bits=args.bits,
+                         cycle_model=args.cycle_model)
+        reqs = SyntheticRequests(cfg.vocab_size,
+                                 max_prompt=min(16, max_prompt),
+                                 rate_rps=args.rate, clock_hz=hw.clock_hz)
+        arrivals = reqs.arrival_cycles(args.requests)
+        for i in range(args.requests):
+            fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i),
+                         arrival_cycle=int(arrivals[i]))
+    report = fleet.run().report()
+    print(f"npec fleet ({args.arch}, {args.overlays} overlays, "
+          f"shard={args.shard}, {args.bits}-bit MMU, "
+          f"rate={args.rate or 'all-at-t0'}, "
+          f"{args.cycle_model} cycle model):")
+    for k, v in report.items():
+        print(f"  {k}: {v}")
+    return report
+
+
 def run_npec(args) -> Dict[str, float]:
     """Compiled-stream serving: NPEEngine over the synthetic workload;
     latency/throughput from compiled-stream cycle counts."""
@@ -197,6 +252,17 @@ def main(argv=None):
                          "tile-streaming (paper model) or whole-op DAG")
     ap.add_argument("--bits", type=int, default=16)
     ap.add_argument("--vrwidth", type=int, default=1024)
+    ap.add_argument("--overlays", type=int, default=1,
+                    help="npec: overlays in the fleet (1 = the single-"
+                         "engine path, bit-identical to before)")
+    ap.add_argument("--shard", choices=("replicate", "expert", "pipeline"),
+                    default="replicate",
+                    help="npec fleet: replicate engines, expert-parallel "
+                         "MoE, or pipeline-parallel layer groups "
+                         "(docs/fleet.md)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="npec fleet: Poisson request rate (requests/sec "
+                         "at the overlay clock); default all-at-t0")
     ap.add_argument("--npe", action="store_true")
     ap.add_argument("--dtype-float32", action="store_true",
                     help="npec: force float32 params (test parity)")
@@ -207,7 +273,10 @@ def main(argv=None):
         args.batch, args.requests, args.gen = 2, 4, 4
         args.capacity = min(args.capacity, 24)
     if args.backend == "npec":
-        run_npec(args)
+        if (args.overlays, args.shard, args.rate) == (1, "replicate", None):
+            run_npec(args)      # lone-engine path, bit-identical
+        else:
+            run_npec_fleet(args)
         print("serve OK")
         return
     srv = Server(args.arch, smoke=True, batch=args.batch, npe=args.npe)

@@ -51,7 +51,11 @@ Entry points:
                                         per-slot pos/reset/load_slot).
 
 The serving layer over all of this lives in repro.npec.runtime
-(`NPEEngine`: continuous batching + cycle-clocked latency; docs/serving.md).
+(`NPEEngine`: continuous batching + cycle-clocked latency; docs/serving.md),
+and the multi-overlay fleet simulator in repro.npec.fleet (`NPEFleet`:
+shared admission queue + replicate/expert/pipeline sharding with
+inter-overlay transfers charged as MRU/MWU `make_transfer` instructions;
+docs/fleet.md).
 
 Cross-checks: the compiled BERT-base stream matches the hand-built program
 in `core.cycles.build_encoder_program` on per-unit instruction counts and
@@ -69,9 +73,9 @@ from repro.config import ModelConfig
 from repro.core.overlay import NPEHardware
 from repro.npec.ir import Graph, GraphBuilder, Node
 from repro.npec.lower import (CompiledProgram, LoweredInstr, lower,
-                              nvu_microprogram, tile_matmul)
+                              make_transfer, nvu_microprogram, tile_matmul)
 from repro.npec.schedule import (greedy_schedule, issue_order, schedule_for,
-                                 stream_schedule)
+                                 stream_schedule, transfer_cycles)
 from repro.npec.trace import (CompileError, moe_capacity, trace_bert_shape,
                               trace_decode, trace_decode_bert_shape,
                               trace_model, trace_moe_block, trace_prefill)

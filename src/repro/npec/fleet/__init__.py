@@ -1,0 +1,23 @@
+"""repro.npec.fleet — cycle-accurate multi-overlay fleet simulator.
+
+N NPE overlays serve one admission queue on a common fleet clock, either
+as plain replicas (one `NPEEngine` per overlay) or with one model's
+compiled streams *sharded* across them — expert-parallel MoE and
+pipeline-parallel layer groups — with inter-overlay transfers charged as
+MRU/MWU traffic instructions (`repro.npec.lower.make_transfer`).  See
+docs/fleet.md for the queue/clock/sharding semantics and
+results/npec_fleet_cycles.json for the guarded benchmark record.
+"""
+from repro.npec.fleet.partition import (ExpertPlan, Phase, PipelinePlan,
+                                        ShardTask, instr_layer,
+                                        partition_expert,
+                                        partition_pipeline)
+from repro.npec.fleet.sim import (FleetStats, NPEFleet, OverlayTimeline,
+                                  SHARD_STRATEGIES, SharedAdmissionQueue)
+
+__all__ = [
+    "ExpertPlan", "FleetStats", "NPEFleet", "OverlayTimeline", "Phase",
+    "PipelinePlan", "SHARD_STRATEGIES", "ShardTask",
+    "SharedAdmissionQueue", "instr_layer", "partition_expert",
+    "partition_pipeline",
+]

@@ -1,0 +1,255 @@
+"""Stream partitioning: split ONE compiled program across N overlays.
+
+Both strategies carve a monolithic `CompiledProgram` into per-overlay
+sub-programs whose instructions are the *original* lowered instructions
+(same ragged-tile MMU charges, same NVU microprogram costs) plus explicit
+inter-overlay transfer instructions (`repro.npec.lower.make_transfer`):
+activation rows leaving an overlay are an MWU "send", rows landing on one
+an MRU "recv", charged at the traffic units' 1-row-per-cycle convention.
+Because the transfers are ordinary instructions *inside* the carved
+streams, the streaming scheduler overlaps them with compute exactly as it
+overlaps MoE dispatch/combine on a single overlay — and fleet reports can
+still itemize them via `repro.npec.schedule.transfer_cycles`.
+
+Layer identity comes from the tracer's tag convention (repro.npec.trace):
+`enc{l}.*` (bert) / `blk{l}.*` (dense, moe) prefix every in-layer
+instruction, `embed.*` precedes the first layer, and the untagged tail
+(`ln_f`, `logits`) follows the last.  Per-expert MoE instructions add an
+`.x{e}.` component (`blk3.x17.ffg`).
+
+  * `partition_pipeline(compiled, n_stages, rows)` — contiguous layer
+    groups (pipeline parallelism): stage s>0 opens with an MRU recv of
+    the `rows` boundary activations, stage s<K-1 closes with an MWU send;
+    cross-stage data dependencies re-point at the recv.
+  * `partition_expert(compiled, n)` — expert parallelism for MoE streams:
+    the per-expert matmul runs are independent by construction (PR 3), so
+    expert e lands on *relative* overlay e % n (relative to the request's
+    home overlay — the fleet rotates homes per request).  The stream
+    becomes alternating phases: home phases (attention, router, dispatch,
+    combine, shared expert) and expert phases of up to n concurrent
+    per-overlay tasks.  Dispatch crossings charge C x E_r rows out of the
+    home overlay and into each remote r (C = capacity rows per expert,
+    E_r = experts assigned to r); combine charges the same rows back.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.npec.lower import CompiledProgram, LoweredInstr, make_transfer
+
+_LAYER_RE = re.compile(r"^(?:enc|blk)(\d+)\.")
+_EXPERT_RE = re.compile(r"^(?:enc|blk)(\d+)\.x(\d+)\.")
+
+
+def instr_layer(tag: str) -> Optional[int]:
+    """Layer index a tagged instruction belongs to: `enc{l}.*`/`blk{l}.*`
+    -> l, the pre-layer head (`embed.*`) -> -1, and None for the
+    post-layer tail (`ln_f`, `logits`)."""
+    m = _LAYER_RE.match(tag)
+    if m:
+        return int(m.group(1))
+    if tag.startswith("embed"):
+        return -1
+    return None
+
+
+def _carve(compiled: CompiledProgram, ids: List[int], *,
+           recv_rows: int = 0, send_rows: int = 0,
+           tag: str = "xfer") -> CompiledProgram:
+    """Extract `ids` (emission order) into a standalone sub-program.
+
+    Dependencies on instructions outside the carve are satisfied by the
+    shard's MRU recv when one exists (`recv_rows > 0`) — the rows those
+    producers computed arrive over the interconnect — and dropped
+    otherwise (the fleet simulator then sequences the shards with an
+    explicit barrier, e.g. expert phases).  `send_rows > 0` appends an
+    MWU send depending on every sink, so the boundary activations cannot
+    leave before the shard's compute retires them."""
+    instrs: List[LoweredInstr] = []
+    new_index: Dict[int, int] = {}
+    if recv_rows:
+        instrs.append(make_transfer("MRU", recv_rows, (), f"{tag}.recv"))
+    for oi in ids:
+        ins = compiled.instrs[oi]
+        deps = []
+        for d in ins.deps:
+            nd = new_index.get(d, 0 if recv_rows else None)
+            if nd is not None and nd not in deps:
+                deps.append(nd)
+        new_index[oi] = len(instrs)
+        instrs.append(LoweredInstr(ins.unit, ins.op, ins.cycles,
+                                   tuple(deps), ins.tag, ins.shape,
+                                   ins.node, ins.meta))
+    if send_rows:
+        consumed = {d for ins in instrs for d in ins.deps}
+        sinks = tuple(i for i in range(len(instrs)) if i not in consumed)
+        instrs.append(make_transfer("MWU", send_rows, sinks, f"{tag}.send"))
+    return CompiledProgram(compiled.graph, compiled.hw, compiled.bits,
+                           compiled.nvu_source, instrs, {})
+
+
+# --- pipeline parallelism (bert / dense) -------------------------------
+
+
+@dataclass
+class PipelinePlan:
+    """Contiguous layer groups of one compiled stream, one per stage."""
+    stages: List[CompiledProgram]
+    rows: int                       # boundary activation rows per crossing
+    layer_groups: List[List[int]]   # model layers per stage
+
+
+def partition_pipeline(compiled: CompiledProgram, n_stages: int, *,
+                       rows: int) -> PipelinePlan:
+    """Split a bert/dense stream into `n_stages` contiguous layer groups.
+    `rows` is the activation rows crossing each stage boundary (the
+    hidden-state rows in flight: S for a prefill stream, B slots for a
+    batched decode stream)."""
+    layers = sorted({l for ins in compiled.instrs
+                     for l in [instr_layer(ins.tag)]
+                     if l is not None and l >= 0})
+    if not layers:
+        raise ValueError("stream has no layer-tagged instructions")
+    if not 1 <= n_stages <= len(layers):
+        raise ValueError(
+            f"cannot split {len(layers)} layers into {n_stages} stages")
+    # contiguous split, earlier stages take the remainder
+    per, extra = divmod(len(layers), n_stages)
+    groups: List[List[int]] = []
+    at = 0
+    for s in range(n_stages):
+        take = per + (1 if s < extra else 0)
+        groups.append(layers[at:at + take])
+        at += take
+    stage_of = {l: s for s, grp in enumerate(groups) for l in grp}
+    ids: List[List[int]] = [[] for _ in range(n_stages)]
+    for i, ins in enumerate(compiled.instrs):
+        l = instr_layer(ins.tag)
+        if l is None:                       # ln_f / logits tail
+            ids[n_stages - 1].append(i)
+        elif l < 0:                         # embed head
+            ids[0].append(i)
+        else:
+            ids[stage_of[l]].append(i)
+    stages = [
+        _carve(compiled, ids[s],
+               recv_rows=rows if s > 0 else 0,
+               send_rows=rows if s < n_stages - 1 else 0,
+               tag=f"xfer.s{s}")
+        for s in range(n_stages)
+    ]
+    return PipelinePlan(stages=stages, rows=int(rows), layer_groups=groups)
+
+
+# --- expert parallelism (moe) ------------------------------------------
+
+
+@dataclass
+class ShardTask:
+    """One overlay's work inside a phase.  `rel` is the overlay index
+    RELATIVE to the request's home (0 = home); `xfer_rows` the transfer
+    rows charged inside this task's stream (itemizable)."""
+    rel: int
+    prog: CompiledProgram
+    xfer_rows: int = 0
+
+
+@dataclass
+class Phase:
+    """Concurrent tasks separated from the next phase by a barrier (the
+    home stream cannot combine until every remote expert returns)."""
+    tasks: List[ShardTask] = field(default_factory=list)
+
+
+@dataclass
+class ExpertPlan:
+    phases: List[Phase]
+    overlays: int
+    capacity: int                  # C rows per expert slot (dispatch meta)
+
+    @property
+    def transfer_rows(self) -> int:
+        return sum(t.xfer_rows for ph in self.phases for t in ph.tasks)
+
+
+def _expert_runs(compiled: CompiledProgram
+                 ) -> List[Tuple[str, List[int]]]:
+    """Split emission order into alternating ("home", ids) and
+    ("expert", ids) runs — per-expert instructions are emitted
+    contiguously per layer (trace._moe_ffn)."""
+    runs: List[Tuple[str, List[int]]] = []
+    for i, ins in enumerate(compiled.instrs):
+        kind = "expert" if _EXPERT_RE.match(ins.tag) else "home"
+        if runs and runs[-1][0] == kind:
+            runs[-1][1].append(i)
+        else:
+            runs.append((kind, [i]))
+    return runs
+
+
+def partition_expert(compiled: CompiledProgram, n: int) -> ExpertPlan:
+    """Shard a MoE stream's per-expert runs across `n` overlays.
+
+    Walks the emission order into home/expert runs.  Each expert run
+    becomes one phase of up to `n` concurrent tasks (expert e -> relative
+    overlay e % n; relative overlay 0 is the home, which keeps its share
+    of experts with no crossing).  The *preceding* home run closes with
+    the dispatch send (C x E_r rows to every remote r), the *following*
+    home run opens with the combine recv of the same rows — matching the
+    MWU scatter / MRU gather the monolithic stream already charges for
+    the on-overlay dispatch buffer."""
+    if n < 1:
+        raise ValueError(f"need at least one overlay, got {n}")
+    runs = _expert_runs(compiled)
+    if not any(kind == "expert" for kind, _ in runs):
+        raise ValueError("stream has no per-expert runs to shard "
+                         "(expert parallelism needs a moe-family stream)")
+    capacity = 0
+    # per-run remote crossing rows: C x E_r summed over remotes r > 0
+    crossings: List[int] = []
+    per_run_tasks: List[Optional[List[Tuple[int, List[int], int]]]] = []
+    for kind, ids in runs:
+        if kind == "home":
+            crossings.append(0)
+            per_run_tasks.append(None)
+            continue
+        by_rel: Dict[int, List[int]] = {}
+        experts: Dict[int, int] = {}
+        cap = 0
+        for i in ids:
+            m = _EXPERT_RE.match(compiled.instrs[i].tag)
+            e = int(m.group(2))
+            rel = e % n
+            by_rel.setdefault(rel, []).append(i)
+            experts[e] = rel
+            ins = compiled.instrs[i]
+            if ins.op == "gather":              # expert slot read: C rows
+                cap = max(cap, int(ins.meta["rows"]))
+        capacity = max(capacity, cap)
+        tasks = []
+        remote_rows = 0
+        for rel in sorted(by_rel):
+            e_r = sum(1 for r in experts.values() if r == rel)
+            rows = cap * e_r if rel > 0 else 0
+            remote_rows += rows
+            tasks.append((rel, by_rel[rel], rows))
+        crossings.append(remote_rows)
+        per_run_tasks.append(tasks)
+    phases: List[Phase] = []
+    for ri, (kind, ids) in enumerate(runs):
+        if kind == "home":
+            recv = crossings[ri - 1] if ri > 0 else 0
+            send = crossings[ri + 1] if ri + 1 < len(runs) else 0
+            prog = _carve(compiled, ids, recv_rows=recv, send_rows=send,
+                          tag=f"xfer.h{ri}")
+            phases.append(Phase([ShardTask(0, prog, recv + send)]))
+        else:
+            tasks = []
+            for rel, rel_ids, rows in per_run_tasks[ri]:
+                prog = _carve(compiled, rel_ids, recv_rows=rows,
+                              send_rows=rows, tag=f"xfer.e{ri}.r{rel}")
+                tasks.append(ShardTask(rel, prog, 2 * rows))
+            phases.append(Phase(tasks))
+    return ExpertPlan(phases=phases, overlays=n, capacity=capacity)

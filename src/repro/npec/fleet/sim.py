@@ -1,0 +1,424 @@
+"""NPEFleet: cycle-accurate multi-overlay serving simulator.
+
+N overlays share one admission queue on a common fleet clock.  Because
+every charge is a deterministic compiled-stream schedule total
+(repro.npec.schedule), fleet latency under load is exactly computable —
+no sampling noise, bit-reproducible records — the same property Groq's
+deterministic multi-chip BERT streaming exploits (PAPERS.md, "Answer
+Fast").
+
+Three sharding strategies:
+
+  * ``replicate`` — N independent `NPEEngine`s (each its own continuous
+    batching, PR 4) pull from the shared queue.  The fleet event loop
+    always steps the engine whose clock is earliest among those that can
+    make progress (occupied slots, or an arrived request); when all are
+    idle it jumps the earliest engine to the next arrival.  A fleet of 1
+    is bit-equal to a lone engine (tests/test_npec_fleet.py).
+  * ``pipeline`` — the model's layers are split into N contiguous stage
+    groups (repro.npec.fleet.partition), one overlay per stage, and the
+    fleet runs N engine *groups* so every stage has work: each engine's
+    stream charge is decomposed into its per-stage schedule totals and
+    chained across the shared stage timelines (`start = max(group ready,
+    stage free)`).  Stage boundaries charge `rows` activation transfers
+    (MWU send / MRU recv inside the stage streams), and because each
+    stage advances on the common fleet clock, pipeline bubbles are
+    *measured* as timeline gaps, not modeled.
+  * ``expert`` — MoE expert parallelism over single-pass inference
+    requests (MoE decode streams are a ROADMAP open item, so the moe
+    family serves compiled full-stream inferences): each request's
+    stream becomes alternating home/expert phases; expert e runs on
+    overlay (home + e % N) % N with dispatch/combine crossings charged
+    as MRU/MWU traffic.  Homes rotate per request (rid % N) so
+    concurrent requests overlap phases across the fleet.
+
+Reports fleet-level p50/p99 end-to-end latency, queue-wait and service
+percentiles, per-overlay utilization, aggregate tokens/sec, and the
+itemized inter-overlay transfer cycles.  See docs/fleet.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.overlay import NPEHardware
+from repro.npec import (CompiledProgram, compile_decode, compile_model,
+                        schedule_for, transfer_cycles)
+from repro.npec.fleet.partition import (ExpertPlan, PipelinePlan,
+                                        partition_expert,
+                                        partition_pipeline)
+from repro.npec.runtime.batch import Request
+from repro.npec.runtime.clock import CycleClock, LatencyTracker
+from repro.npec.runtime.engine import NPEEngine
+
+SHARD_STRATEGIES = ("replicate", "expert", "pipeline")
+
+
+@dataclass
+class OverlayTimeline:
+    """One overlay's occupancy on the fleet clock: `free` is when its
+    ICU can accept the next stream, `busy` the charged stream cycles,
+    `xfer` the itemized inter-overlay transfer cycles within them."""
+    idx: int
+    free: int = 0
+    busy: int = 0
+    xfer: int = 0
+
+    def place(self, earliest: int, cycles: int, xfer: int = 0
+              ) -> Tuple[int, int]:
+        start = max(int(earliest), self.free)
+        end = start + int(round(cycles))
+        self.free = end
+        self.busy += end - start
+        self.xfer += int(xfer)
+        return start, end
+
+
+class SharedAdmissionQueue:
+    """Fleet-wide FIFO with per-request arrival cycles.  Engines see it
+    through `_EngineQueueView`, which gates availability on the engine's
+    own clock — a request that has not arrived yet is invisible."""
+
+    def __init__(self):
+        self._q: List[Request] = []
+        self._next_rid = 0
+        self._popped = 0
+
+    def submit(self, prompt, *, max_new_tokens: int,
+               eos_id: Optional[int] = None,
+               arrival_cycle: int = 0) -> Request:
+        req = Request(self._next_rid, np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_id,
+                      submit_cycle=int(arrival_cycle))
+        self._next_rid += 1
+        self._q.append(req)
+        return req
+
+    def finalize(self) -> None:
+        """Order by (arrival, rid) before serving begins."""
+        self._q[self._popped:] = sorted(
+            self._q[self._popped:], key=lambda r: (r.submit_cycle, r.rid))
+
+    def ready(self, now: int) -> bool:
+        return (self._popped < len(self._q)
+                and self._q[self._popped].submit_cycle <= now)
+
+    def next_arrival(self) -> Optional[int]:
+        if self._popped < len(self._q):
+            return self._q[self._popped].submit_cycle
+        return None
+
+    def pop(self) -> Request:
+        req = self._q[self._popped]
+        self._popped += 1
+        return req
+
+    def __len__(self) -> int:
+        return len(self._q) - self._popped
+
+
+class _EngineQueueView:
+    """What one engine sees of the shared queue: FIFO head if (and only
+    if) it has arrived by this engine's clock."""
+
+    def __init__(self, shared: SharedAdmissionQueue):
+        self.shared = shared
+        self.engine: Optional[NPEEngine] = None     # bound post-init
+
+    def __bool__(self) -> bool:
+        return self.shared.ready(self.engine.clock.cycles)
+
+    def __len__(self) -> int:
+        return len(self.shared) if bool(self) else 0
+
+    def pop(self) -> Request:
+        return self.shared.pop()
+
+
+@dataclass
+class FleetStats:
+    """Cycle-derived fleet summary.  `tokens` counts generated tokens for
+    engine-backed shards (replicate/pipeline) and processed prompt tokens
+    for expert-parallel single-pass inference."""
+    overlays: int
+    shard: str
+    clock_hz: float
+    requests: List[Request] = field(default_factory=list)
+    tokens: int = 0
+    makespan_cycles: int = 0
+    transfer_cycles: int = 0
+    busy_cycles: List[int] = field(default_factory=list)
+    decode_steps: int = 0
+    prefills: int = 0
+
+    def report(self) -> Dict[str, Any]:
+        clock = CycleClock(self.clock_hz)
+        e2e = LatencyTracker(clock)
+        queue_wait = LatencyTracker(clock)
+        service = LatencyTracker(clock)
+        for r in self.requests:
+            e2e.record(r.submit_cycle, r.finish_cycle)
+            queue_wait.record(r.submit_cycle, r.admit_cycle)
+            service.record(r.admit_cycle, r.finish_cycle)
+        out: Dict[str, Any] = {
+            "overlays": self.overlays,
+            "shard": self.shard,
+            "requests": len(self.requests),
+            "tokens": self.tokens,
+        }
+        out.update(e2e.percentiles())
+        qw = queue_wait.percentiles()
+        out["queue_wait_p50_ms"] = qw["p50_ms"]
+        out["queue_wait_p99_ms"] = qw["p99_ms"]
+        sv = service.percentiles()
+        out["service_p50_ms"] = sv["p50_ms"]
+        out["service_p99_ms"] = sv["p99_ms"]
+        out["tokens_per_sec"] = (
+            round(self.tokens * self.clock_hz / self.makespan_cycles, 1)
+            if self.makespan_cycles else 0.0)
+        out["makespan_cycles"] = self.makespan_cycles
+        out["transfer_cycles"] = self.transfer_cycles
+        out["overlay_util"] = [
+            round(b / self.makespan_cycles, 4) if self.makespan_cycles
+            else 0.0 for b in self.busy_cycles]
+        out["decode_steps"] = self.decode_steps
+        out["prefills"] = self.prefills
+        return out
+
+
+class NPEFleet:
+    """N overlays + one shared admission queue on a common fleet clock."""
+
+    def __init__(self, cfg: ModelConfig, hw: Optional[NPEHardware] = None,
+                 *, overlays: int = 1, shard: str = "replicate",
+                 slots: int = 4, capacity: int = 64,
+                 max_new_tokens: int = 16, bits: int = 16,
+                 nvu_source: str = "paper", eos_id: Optional[int] = None,
+                 cycle_model: str = "streaming", seq: int = 64,
+                 decode_prog: Optional[CompiledProgram] = None,
+                 prefill_cache: Optional[Dict[int, CompiledProgram]] = None,
+                 inference_prog: Optional[CompiledProgram] = None):
+        if shard not in SHARD_STRATEGIES:
+            raise ValueError(f"unknown shard strategy {shard!r} "
+                             f"(choose from {SHARD_STRATEGIES})")
+        if overlays < 1:
+            raise ValueError(f"need at least one overlay, got {overlays}")
+        family = getattr(cfg, "family", None)
+        if shard == "expert" and family != "moe":
+            raise ValueError(
+                f"expert parallelism shards per-expert runs; family "
+                f"{family!r} has none (use replicate or pipeline)")
+        if shard != "expert" and family == "moe":
+            raise ValueError(
+                "moe families serve single-pass inference via "
+                "shard='expert' (MoE decode streams are a ROADMAP item)")
+        self.cfg = cfg
+        self.hw = hw if hw is not None else NPEHardware()
+        self.overlays = overlays
+        self.shard = shard
+        self.cycle_model = cycle_model
+        self.max_new_tokens = max_new_tokens
+        self.seq = seq
+        self.timelines = [OverlayTimeline(i) for i in range(overlays)]
+        self.queue = SharedAdmissionQueue()
+        self.stats = FleetStats(overlays=overlays, shard=shard,
+                                clock_hz=self.hw.clock_hz)
+        self.engines: List[NPEEngine] = []
+        self._pipeline_plans: Dict[int, Tuple[CompiledProgram,
+                                              PipelinePlan]] = {}
+        self.expert_plan: Optional[ExpertPlan] = None
+
+        if shard == "expert":
+            self.inference_prog = (
+                inference_prog if inference_prog is not None else
+                compile_model(cfg, seq, self.hw, bits=bits,
+                              nvu_source=nvu_source))
+            self.expert_plan = partition_expert(self.inference_prog,
+                                                overlays)
+            return
+
+        # replicate: one engine per overlay; pipeline: one overlay per
+        # STAGE, plus N engine groups so every stage has work in flight.
+        hook = (self._replicate_hook if shard == "replicate"
+                else self._pipeline_hook)
+        shared_prefills: Dict[int, CompiledProgram] = (
+            prefill_cache if prefill_cache is not None else {})
+        for g in range(overlays):
+            view = _EngineQueueView(self.queue)
+            eng = NPEEngine(cfg, self.hw, slots=slots, capacity=capacity,
+                            max_new_tokens=max_new_tokens, bits=bits,
+                            nvu_source=nvu_source, eos_id=eos_id,
+                            cycle_model=cycle_model,
+                            decode_prog=decode_prog,
+                            prefill_cache=shared_prefills,
+                            charge_hook=hook, queue=view, engine_id=g)
+            view.engine = eng
+            if decode_prog is None:
+                decode_prog = eng.decode_prog     # share across the fleet
+            self.engines.append(eng)
+
+    # --- request intake ------------------------------------------------
+
+    def submit(self, prompt, *, arrival_cycle: int = 0,
+               max_new_tokens: Optional[int] = None,
+               eos_id: Optional[int] = None) -> Request:
+        """Queue a prompt on the fleet at `arrival_cycle` (from a seeded
+        Poisson process via `SyntheticRequests.arrival_cycles`, or 0 for
+        the everything-at-t0 workload)."""
+        prompt = np.asarray(prompt, np.int32)
+        if self.shard == "expert":
+            if prompt.size != self.seq:
+                raise ValueError(
+                    f"expert-parallel inference streams are compiled at "
+                    f"seq={self.seq}; got a {prompt.size}-token prompt")
+            return self.queue.submit(
+                prompt, max_new_tokens=0, eos_id=eos_id,
+                arrival_cycle=arrival_cycle)
+        eng = self.engines[0]
+        new = (max_new_tokens if max_new_tokens is not None
+               else self.max_new_tokens)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if prompt.size + new > eng.capacity:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({new}) exceeds "
+                f"the compiled cache capacity {eng.capacity}")
+        return self.queue.submit(
+            prompt, max_new_tokens=new,
+            eos_id=(eos_id if eos_id is not None else eng.eos_id),
+            arrival_cycle=arrival_cycle)
+
+    # --- charge hooks (engine-backed shards) ---------------------------
+
+    def _replicate_hook(self, engine: NPEEngine, kind: str,
+                        prog: CompiledProgram, cycles: float) -> None:
+        """Plain replication: the engine owns its overlay outright, so
+        the charge is exactly `clock.advance` (bit-equal to a lone
+        engine) mirrored onto the overlay's timeline."""
+        tl = self.timelines[engine.engine_id]
+        start = engine.clock.cycles
+        end = engine.clock.advance(cycles)
+        tl.free = end
+        tl.busy += end - start
+
+    def _stage_costs(self, prog: CompiledProgram
+                     ) -> List[Tuple[float, int]]:
+        """Per-stage (scheduled cycles, transfer cycles) for a stream,
+        partitioned once per compiled program."""
+        key = id(prog)
+        if key not in self._pipeline_plans:
+            # boundary rows in flight = token rows in the stream: B slots
+            # for a batched decode step, S prompt tokens for a prefill
+            rows = self._stream_rows(prog)
+            plan = partition_pipeline(prog, self.overlays, rows=rows)
+            self._pipeline_plans[key] = (prog, plan)
+        _, plan = self._pipeline_plans[key]
+        return [(schedule_for(p, self.cycle_model)["total_cycles"],
+                 transfer_cycles(p)) for p in plan.stages]
+
+    def _stream_rows(self, prog: CompiledProgram) -> int:
+        """Activation rows crossing a stage boundary: the output rows of
+        the stream's first matmul (B for batched decode, S for prefill)."""
+        for ins in prog.instrs:
+            if ins.unit == "MMU":
+                return int(ins.shape[0])
+        return 1
+
+    def _pipeline_hook(self, engine: NPEEngine, kind: str,
+                       prog: CompiledProgram, cycles: float) -> None:
+        """Chain the stream's stage charges across the shared stage
+        overlays; the engine's clock lands on the final stage's
+        completion, so its continuous batching sees end-to-end stream
+        latency while the fleet keeps all stages concurrently busy."""
+        t = engine.clock.cycles
+        for s, (c, x) in enumerate(self._stage_costs(prog)):
+            _, t = self.timelines[s].place(t, c, x)
+        engine.clock.advance_to(t)
+
+    # --- serving loop --------------------------------------------------
+
+    def _run_engines(self) -> FleetStats:
+        self.queue.finalize()
+        engines = self.engines
+        # Event loop on the fleet clock: an engine with occupied slots
+        # can act at its own clock; an idle engine can act at the head
+        # request's arrival (it was free the whole wait, so its clock
+        # jumps forward — never back).  Always step whichever engine can
+        # act EARLIEST (ties to the lower overlay id), which is what
+        # makes a fleet of 1 bit-equal to a lone engine and keeps idle
+        # overlays from starving behind a busy one's advanced clock.
+        while True:
+            head = self.queue.next_arrival()
+            best = None
+            for e in engines:
+                if len(e.pool):
+                    t = e.clock.cycles
+                elif head is not None:
+                    t = max(e.clock.cycles, head)
+                else:
+                    continue
+                if best is None or (t, e.engine_id) < best[:2]:
+                    best = (t, e.engine_id, e)
+            if best is None:
+                break
+            t, _, e = best
+            if e.clock.cycles < t:
+                e.clock.advance_to(t)
+            stepped = e.step()
+            assert stepped, "a ready engine must make progress"
+        for e in engines:
+            e.stats.total_cycles = e.clock.cycles
+        reqs = sorted((r for e in engines for r in e.stats.requests),
+                      key=lambda r: r.rid)
+        self.stats.requests = reqs
+        self.stats.tokens = sum(len(r.generated) for r in reqs)
+        self.stats.decode_steps = sum(e.stats.decode_steps
+                                      for e in engines)
+        self.stats.prefills = sum(e.stats.prefills for e in engines)
+        self.stats.makespan_cycles = max(
+            [tl.free for tl in self.timelines]
+            + [e.clock.cycles for e in engines] + [0])
+        self.stats.busy_cycles = [tl.busy for tl in self.timelines]
+        self.stats.transfer_cycles = sum(tl.xfer for tl in self.timelines)
+        return self.stats
+
+    def _run_expert(self) -> FleetStats:
+        self.queue.finalize()
+        plan = self.expert_plan
+        n = self.overlays
+        costs = [[(schedule_for(t.prog, self.cycle_model)["total_cycles"],
+                   t.xfer_rows, t.rel) for t in ph.tasks]
+                 for ph in plan.phases]
+        while len(self.queue):
+            req = self.queue.pop()
+            home = req.rid % n
+            t = req.submit_cycle
+            first = True
+            for phase in costs:
+                ends = []
+                for cyc, xfer, rel in phase:
+                    tl = self.timelines[(home + rel) % n]
+                    s, e = tl.place(t, cyc, xfer)
+                    if first:
+                        req.admit_cycle = s
+                        first = False
+                    ends.append(e)
+                t = max(ends)
+            req.finish_cycle = t
+            self.stats.requests.append(req)
+        self.stats.tokens = sum(len(r.prompt) for r in self.stats.requests)
+        self.stats.makespan_cycles = max(
+            [tl.free for tl in self.timelines] + [0])
+        self.stats.busy_cycles = [tl.busy for tl in self.timelines]
+        self.stats.transfer_cycles = sum(tl.xfer for tl in self.timelines)
+        return self.stats
+
+    def run(self) -> FleetStats:
+        """Serve every submitted request to completion; returns the
+        fleet-level cycle-derived stats."""
+        if self.shard == "expert":
+            return self._run_expert()
+        return self._run_engines()

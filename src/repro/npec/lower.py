@@ -344,6 +344,24 @@ class CompiledProgram:
                     skinny_matmuls=skinny, worst_skinny_efficiency=worst)
 
 
+def make_transfer(unit: str, rows: int, deps: Tuple[int, ...],
+                  tag: str) -> LoweredInstr:
+    """Inter-overlay transfer instruction for sharded streams
+    (repro.npec.fleet): activation rows leaving an overlay are an MWU
+    "send", rows landing on one an MRU "recv", both charged at the
+    traffic units' 1-row-per-cycle convention — the same rate MoE
+    dispatch/combine already charge on a single overlay.  The instruction
+    carries ``meta["xfer"] = True`` so fleet reports can itemize transfer
+    cycles instead of folding them into compute
+    (repro.npec.schedule.transfer_cycles)."""
+    if unit not in ("MRU", "MWU"):
+        raise ValueError(f"transfers ride the traffic units, got {unit!r}")
+    rows = int(rows)
+    op = "recv" if unit == "MRU" else "send"
+    return LoweredInstr(unit, op, rows, tuple(deps), tag, (rows,),
+                        node=-1, meta=dict(rows=rows, xfer=True))
+
+
 def _prod(shape: Tuple[int, ...]) -> int:
     n = 1
     for s in shape:

@@ -31,6 +31,16 @@ class CycleClock:
         self.cycles += int(round(cycles))
         return self.cycles
 
+    def advance_to(self, cycle: int) -> int:
+        """Jump forward to an absolute timestamp (fleet clock alignment:
+        an idle overlay waiting on the shared admission queue skips ahead
+        to the next arrival).  Monotonic — rewinding is an error."""
+        if cycle < self.cycles:
+            raise ValueError(
+                f"cannot rewind the clock from {self.cycles} to {cycle}")
+        self.cycles = int(cycle)
+        return self.cycles
+
     def ms(self, cycles: float = None) -> float:
         """Milliseconds for `cycles` (default: the current timestamp)."""
         c = self.cycles if cycles is None else cycles

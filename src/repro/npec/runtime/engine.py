@@ -80,6 +80,11 @@ class EngineStats:
     clock_hz: float = 200e6
     latency: Optional[LatencyTracker] = None
     first_token: Optional[LatencyTracker] = None
+    # end-to-end latency split at the admission boundary: queue-wait
+    # (submit -> slot granted) vs service (slot granted -> finish) — the
+    # split that makes fleet p99 under load attributable (docs/fleet.md)
+    queue_wait: Optional[LatencyTracker] = None
+    service: Optional[LatencyTracker] = None
 
     def report(self) -> Dict[str, float]:
         gen = sum(len(r.generated) for r in self.requests)
@@ -88,6 +93,14 @@ class EngineStats:
         if self.first_token:
             ft = self.first_token.percentiles(ps=(50,))
             out["first_token_p50_ms"] = ft["p50_ms"]
+        if self.queue_wait:
+            qw = self.queue_wait.percentiles()
+            out["queue_wait_p50_ms"] = qw["p50_ms"]
+            out["queue_wait_p99_ms"] = qw["p99_ms"]
+        if self.service:
+            sv = self.service.percentiles()
+            out["service_p50_ms"] = sv["p50_ms"]
+            out["service_p99_ms"] = sv["p99_ms"]
         out["tokens_per_sec"] = (
             round(gen * self.clock_hz / self.total_cycles, 1)
             if self.total_cycles else 0.0)
@@ -111,7 +124,29 @@ class NPEEngine:
                  max_new_tokens: int = 16, bits: int = 16,
                  npe: bool = False, params: Any = None,
                  nvu_source: str = "paper", eos_id: Optional[int] = None,
-                 cycle_model: str = "streaming"):
+                 cycle_model: str = "streaming",
+                 decode_prog: Optional[CompiledProgram] = None,
+                 prefill_cache: Optional[Dict[int, CompiledProgram]] = None,
+                 charge_hook=None, queue=None, engine_id: int = 0):
+        """Fleet extension points (repro.npec.fleet) — all default to the
+        lone-engine behavior, which stays byte-identical:
+
+          * `decode_prog` / `prefill_cache`: share compiled streams (and
+            their memoized schedules) across a fleet's engines instead of
+            recompiling per overlay;
+          * `charge_hook(engine, kind, prog, cycles)`: replaces
+            `clock.advance` for every stream charge (`kind` is "prefill"
+            or "decode") — the fleet uses it to place the charge on
+            shared overlay timelines and advance this engine's clock to
+            the placed completion cycle;
+          * `queue`: an external admission queue (anything with
+            `__bool__` and `pop()`) — the fleet's shared queue gates
+            `__bool__` on this engine's clock vs request arrival cycles.
+            Requests admitted from an external queue are appended to
+            `stats.requests` at admission (they were never `submit`ted
+            here);
+          * `engine_id`: this engine's overlay index (deterministic fleet
+            tie-breaking)."""
         if cycle_model not in ("dag", "streaming"):
             raise ValueError(f"unknown cycle model {cycle_model!r}")
         self.cfg = cfg
@@ -123,10 +158,14 @@ class NPEEngine:
         self.eos_id = eos_id
         self.nvu_source = nvu_source
         self.cycle_model = cycle_model
+        self.engine_id = engine_id
+        self.charge_hook = charge_hook
         # compile the batched decode stream FIRST: unsupported families
         # (moe decode) raise CompileError here, before any scheduling
-        self.decode_prog = compile_decode(cfg, capacity, self.hw, bits=bits,
-                                          nvu_source=nvu_source, batch=slots)
+        self.decode_prog = (decode_prog if decode_prog is not None else
+                            compile_decode(cfg, capacity, self.hw, bits=bits,
+                                           nvu_source=nvu_source,
+                                           batch=slots))
         tiling = self.decode_prog.mmu_tiling_summary()
         self.step_cycles_dag = int(
             greedy_schedule(self.decode_prog)["total_cycles"])
@@ -143,10 +182,12 @@ class NPEEngine:
                         if self.numeric else None)
 
         self.clock = CycleClock(self.hw.clock_hz)
-        self.queue = RequestQueue()
+        self._external_queue = queue is not None
+        self.queue = queue if queue is not None else RequestQueue()
         self.pool = SlotPool(slots)
         self._next_tok = np.zeros(slots, np.int32)
-        self._prefill_cache: Dict[int, CompiledProgram] = {}
+        self._prefill_cache: Dict[int, CompiledProgram] = (
+            prefill_cache if prefill_cache is not None else {})
         self.stats = EngineStats(
             cycle_model=cycle_model,
             decode_step_cycles=self.step_cycles,
@@ -156,6 +197,8 @@ class NPEEngine:
             clock_hz=self.hw.clock_hz)
         self.stats.latency = LatencyTracker(self.clock)
         self.stats.first_token = LatencyTracker(self.clock)
+        self.stats.queue_wait = LatencyTracker(self.clock)
+        self.stats.service = LatencyTracker(self.clock)
 
     # --- request intake ---------------------------------------------------
 
@@ -197,6 +240,16 @@ class NPEEngine:
     def _schedule_cycles(self, prog: CompiledProgram) -> float:
         return schedule_for(prog, self.cycle_model)["total_cycles"]
 
+    def _charge(self, kind: str, prog: CompiledProgram,
+                cycles: float) -> None:
+        """Charge a compiled stream to the clock — or hand the charge to
+        the fleet's hook, which places it on shared overlay timelines and
+        advances this engine's clock to the placed completion cycle."""
+        if self.charge_hook is not None:
+            self.charge_hook(self, kind, prog, cycles)
+        else:
+            self.clock.advance(cycles)
+
     # Cost-only runs have no logits to argmax, but EOS-aware workloads
     # still need *some* deterministic token stream to evict against —
     # draw from a small alphabet (multiplicative-hash PRN per request and
@@ -212,8 +265,11 @@ class NPEEngine:
         """Compiled prefill: charge the scheduled stream, seed the slot's
         cache banks, emit the first generated token."""
         prog = self._prefill_program(len(req.prompt))
+        if self._external_queue:
+            self.stats.requests.append(req)
         req.admit_cycle = self.clock.cycles
-        self.clock.advance(self._schedule_cycles(prog))
+        self.stats.queue_wait.record(req.submit_cycle, req.admit_cycle)
+        self._charge("prefill", prog, self._schedule_cycles(prog))
         self.stats.prefills += 1
         if self.numeric:
             res = execute(prog, self.params, {"tokens": req.prompt},
@@ -234,6 +290,7 @@ class NPEEngine:
         req = self.pool.release(slot)
         req.finish_cycle = self.clock.cycles
         self.stats.latency.record(req.submit_cycle, req.finish_cycle)
+        self.stats.service.record(req.admit_cycle, req.finish_cycle)
         if self.numeric:
             self.session.reset_slot(slot)
         self._next_tok[slot] = 0
@@ -252,7 +309,7 @@ class NPEEngine:
         active = self.pool.active_mask()
         if not active.any():
             return admitted > 0
-        self.clock.advance(self.step_cycles)
+        self._charge("decode", self.decode_prog, self.step_cycles)
         self.stats.decode_steps += 1
         if self.numeric:
             out = np.asarray(self.session.step(self._next_tok,

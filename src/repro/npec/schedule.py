@@ -333,6 +333,15 @@ def stream_schedule(compiled: CompiledProgram) -> Dict:
     return sched
 
 
+def transfer_cycles(compiled: CompiledProgram) -> int:
+    """Inter-overlay transfer traffic charged inside a sharded stream:
+    the summed cycles of its `make_transfer` MRU/MWU instructions
+    (repro.npec.lower, ``meta["xfer"]``).  Zero for any monolithic
+    compiled program — fleet reports subtract nothing, they itemize."""
+    return int(sum(ins.cycles for ins in compiled.instrs
+                   if ins.meta.get("xfer")))
+
+
 def schedule_for(compiled: CompiledProgram, cycle_model: str) -> Dict:
     """Dispatch a cycle-model name to its scheduler — the ONE mapping the
     cost wrappers (core.cycles) and the serving engine (npec.runtime)
