@@ -361,7 +361,7 @@ def npec_fleet(bits=16) -> List[Dict]:
     n_requests = 24
     arrive = reqs.arrival_cycles(n_requests)
     decode_prog = None
-    prefill_cache: Dict[int, object] = {}
+    prefill_cache: Dict[tuple, object] = {}    # keyed (seq, chunk)
     for shard, n in (("replicate", 1), ("replicate", 2), ("replicate", 4),
                      ("pipeline", 2), ("pipeline", 4)):
         for rate in (None, 8.0):
@@ -392,6 +392,82 @@ def npec_fleet(bits=16) -> List[Dict]:
         for p in prompts:
             fleet.submit(p)
         out.append(fleet_row(fleet.run().report(), "moe", None))
+    return out
+
+
+def npec_disagg(bits=16) -> List[Dict]:
+    """Chunked prefill + prefill/decode disaggregation (docs/serving.md,
+    docs/fleet.md): decode inter-token latency under Poisson load, with
+    and without each mitigation, at FULL bert_base scale (cost-only,
+    bit-exact record guard in tests/test_npec_serving_props.py).
+
+    All four rows serve the SAME 24-request EOS-aware ragged-prompt
+    workload (8 req/s seeded arrivals) on 2 overlays:
+
+      * replicate, chunk=0      — the baseline: an unchunked admit
+        inserts the whole prompt's prefill stream between two decode
+        steps, so `decode_gap_max_ms` is the p99 cliff;
+      * replicate, chunk=8      — chunked interleave: at most one
+        8-row cache slice stalls a decode step;
+      * prefill_decode rows     — 1 prefill + 1 decode overlay: decode
+        steps are never stalled by prefill at all; admission charges the
+        KV-ship (`kv_rows_per_token` rows/token, itemized in
+        `transfer_cycles`).
+
+    Token streams are identical across all rows (synthetic tokens depend
+    only on (rid, step) — the disagg-vs-replicate identity gate)."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.overlay import NPEHardware
+    from repro.data.pipeline import SyntheticRequests
+    from repro.npec.fleet import NPEFleet
+    from repro.npec.runtime import inter_token_gaps
+
+    hw = NPEHardware(vrwidth=1024)
+    cfg = get_config("bert_base")
+    reqs = SyntheticRequests(cfg.vocab_size, max_prompt=32, rate_rps=8.0,
+                             clock_hz=hw.clock_hz)
+    n_requests = 24
+    arrive = reqs.arrival_cycles(n_requests)
+    decode_prog = None
+    prefill_cache: Dict[tuple, object] = {}
+    ms = lambda c: round(1e3 * float(c) / hw.clock_hz, 4)
+    out = []
+    for shard, chunk in (("replicate", None), ("replicate", 8),
+                         ("prefill_decode", None), ("prefill_decode", 8)):
+        fleet = NPEFleet(cfg, hw, overlays=2, shard=shard, slots=4,
+                         capacity=48, max_new_tokens=12, bits=bits,
+                         decode_prog=decode_prog,
+                         prefill_cache=prefill_cache,
+                         prefill_chunk=chunk, prefill_overlays=1)
+        if decode_prog is None:
+            decode_prog = fleet.engines[0].decode_prog
+        for i in range(n_requests):
+            fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i),
+                         arrival_cycle=int(arrive[i]))
+        stats = fleet.run()
+        rep = stats.report()
+        gaps = np.asarray(inter_token_gaps(stats.requests))
+        first = [r.first_token_cycle - r.submit_cycle
+                 for r in stats.requests]
+        out.append(dict(
+            shard=shard, overlays=2,
+            prefill_overlays=(1 if shard == "prefill_decode" else 0),
+            prefill_chunk=(chunk if chunk is not None else 0),
+            rate_rps=8.0, mmu_bits=bits,
+            requests=rep["requests"], tokens=rep["tokens"],
+            p99_ms=rep["p99_ms"],
+            first_token_p50_ms=ms(np.percentile(first, 50)),
+            decode_gap_p99_ms=(ms(np.percentile(gaps, 99))
+                               if gaps.size else 0.0),
+            decode_gap_max_ms=(ms(gaps.max()) if gaps.size else 0.0),
+            tok_s=rep["tokens_per_sec"],
+            makespan_cycles=rep["makespan_cycles"],
+            transfer_cycles=rep["transfer_cycles"],
+            kv_rows_per_token=(fleet.disagg_plan.kv_rows_per_token
+                               if fleet.disagg_plan else 0),
+            decode_steps=rep["decode_steps"],
+            prefills=rep["prefills"]))
     return out
 
 
@@ -465,4 +541,5 @@ ALL = {
     "npec_serve": npec_serve,
     "npec_stream": npec_stream,
     "npec_fleet": npec_fleet,
+    "npec_disagg": npec_disagg,
 }

@@ -182,6 +182,7 @@ if moe2["transfer_cycles"] != per_req * moe2["requests"]:
 
 doc = Path("docs/fleet.md").read_text()
 needed = {
+    "shard choices": "{replicate,expert,pipeline,prefill_decode}",
     "expert capacity": f"= {cap}` rows",
     "dispatch crossing rows": f"{cap} x {e_r} = {rows}`",
     "per-layer crossing": f"4 x {rows} = {4 * rows} transfer cycles",
@@ -201,4 +202,88 @@ if missing:
         f"docs/fleet.md out of sync with the fleet partitioner / "
         f"results/npec_fleet_cycles.json — missing {missing}")
 print("docs/fleet.md fleet constants check OK")
+PY
+
+# serving-stack property suite: chunked-prefill equivalence + engine
+# conservation invariants (derandomized hypothesis profile when
+# hypothesis is installed; deterministic sweeps either way) + the
+# bit-exact guard on the chunked/disaggregated record
+python -m pytest -q tests/test_npec_serving_props.py
+
+# disaggregated + chunked serving smoke (fleet prefill_decode shard and
+# the single-engine chunked-prefill path, end to end on the CLI)
+python -m repro.launch.serve --backend npec --smoke --overlays 2 \
+    --shard prefill_decode
+python -m repro.launch.serve --backend npec --smoke --prefill-chunk 4
+
+# docs drift gate: docs/serving.md's chunked-prefill worked example must
+# cite the cycle constants core.cycles.chunked_prefill_cycles actually
+# computes (full bert_base, 16-bit, S=512 chunk=64 + the S=256 padding
+# caveat), and docs/fleet.md's KV-ship example must match the compiled
+# stream's Graph.kv_exports and the committed disagg record
+python - <<'PY'
+import json
+from pathlib import Path
+
+from repro import npec
+from repro.configs import get_config
+from repro.core import cycles as cy
+from repro.core.overlay import NPEHardware
+from repro.npec.fleet import partition_prefill_decode
+
+hw = NPEHardware(vrwidth=1024)
+r512 = cy.chunked_prefill_cycles(hw, cy.BertShape(), 512, 64, 16,
+                                 capacity=532)
+r256 = cy.chunked_prefill_cycles(hw, cy.BertShape(), 256, 64, 16)
+doc = Path("docs/serving.md").read_text()
+needed = {
+    "whole-prompt cycles": f"{int(r512['whole_cycles'])}** cycles",
+    "worst slice cycles": f"{int(r512['max_slice_cycles'])}** (",
+    "stall reduction": f"**{r512['stall_reduction']:.2f}**× stall",
+    "aggregate overhead": f"~**{r512['overhead']:.2f}**×",
+    "S=256 padding cap": f"S=256 is only {r256['stall_reduction']:.2f}×",
+}
+missing = [k for k, token in needed.items() if token not in doc]
+if missing:
+    raise SystemExit(
+        "docs/serving.md chunked-prefill constants out of sync with "
+        f"core/cycles.py — missing {missing}")
+print("docs/serving.md chunked-prefill constants check OK")
+
+cfg = get_config("bert_base")
+prefill = npec.compile_prefill(cfg, 8, hw, bits=16)
+plan = partition_prefill_decode(prefill, prefill_overlays=1,
+                                decode_overlays=1)
+rec = json.loads(Path("results/npec_disagg_cycles.json").read_text())
+assert rec["schema"] == "npec_disagg_cycles/v1"
+rows = {(r["shard"], r["prefill_chunk"]): r for r in rec["rows"]}
+for r in rec["rows"]:
+    if r["shard"] == "prefill_decode":
+        if r["kv_rows_per_token"] != plan.kv_rows_per_token:
+            raise SystemExit(
+                "disagg record kv_rows_per_token drifted from "
+                f"Graph.kv_exports: {r['kv_rows_per_token']} != "
+                f"{plan.kv_rows_per_token}")
+fdoc = Path("docs/fleet.md").read_text()
+needed = {
+    "kv rows per token": f"2 = {plan.kv_rows_per_token}` rows",
+    "record transfer cycles":
+        f"**{rows[('prefill_decode', 8)]['transfer_cycles']}** transfer",
+    "replicate gap p99":
+        f"**{rows[('replicate', 0)]['decode_gap_p99_ms']:.2f} ms**",
+    "chunked gap p99":
+        f"**{rows[('replicate', 8)]['decode_gap_p99_ms']:.2f} ms**",
+    "disagg+chunk gap p99":
+        f"**{rows[('prefill_decode', 8)]['decode_gap_p99_ms']:.2f} ms**",
+    "disagg-only gap p99":
+        f"({rows[('prefill_decode', 0)]['decode_gap_p99_ms']:.2f} ms)",
+    "disagg first-token p50":
+        f"{rows[('prefill_decode', 0)]['first_token_p50_ms']:.2f} ms p50",
+}
+missing = [k for k, token in needed.items() if token not in fdoc]
+if missing:
+    raise SystemExit(
+        "docs/fleet.md disaggregation constants out of sync with "
+        f"results/npec_disagg_cycles.json — missing {missing}")
+print("docs/fleet.md disaggregation constants check OK")
 PY

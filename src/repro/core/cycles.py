@@ -16,8 +16,9 @@ Outputs reproduce:
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.overlay import (Instr, NPEHardware, Program, mmu_cycles,
                                 mmu_tiled_cycles, nvu_cycles,
@@ -338,6 +339,55 @@ def batched_decode_step_cycles(hw: NPEHardware, shape: BertShape,
         "tok_s": batch * hw.clock_hz / total if total else 0.0,
         "mmu_util": stats["mmu_util"],
         "mmu_efficiency": tiling["efficiency"],
+    }
+
+
+def chunked_prefill_cycles(hw: NPEHardware, shape: BertShape, seq: int,
+                           chunk: int, bits: int,
+                           nvu_source: str = "paper",
+                           cycle_model: str = "streaming",
+                           capacity: Optional[int] = None
+                           ) -> Dict[str, float]:
+    """Cycles for a `seq`-token prefill streamed as ceil(seq/chunk) causal
+    cache slices over a `capacity`-row bank (default: seq rounded up to
+    the chunk grid) — the per-chunk stall bound behind the serving
+    engine's `prefill_chunk` mode (docs/serving.md).  One layer is
+    compiled per distinct slice width and scaled by `shape.encoders`,
+    like `decode_step_cycles`.  `max_slice_cycles` is the largest single
+    slice's scheduled cycles: the most a chunked admit can ever stall a
+    decode step, vs `whole_cycles` (the monolithic prefill stream's
+    total) for an unchunked admit."""
+    from repro import npec
+    if chunk < 1:
+        raise ValueError(f"prefill chunk must be >= 1, got {chunk}")
+    cap = capacity if capacity is not None else -(-seq // chunk) * chunk
+    if cap < seq:
+        raise ValueError(f"capacity {cap} cannot hold a {seq}-token prompt")
+    slice_cycles = []
+    per_rows: Dict[int, float] = {}
+    for b in range(0, seq, chunk):
+        rows = min(chunk, seq - b)
+        if rows not in per_rows:
+            compiled = npec.compile_prefill_slice_shape(
+                hw, shape, cap, rows, bits, nvu_source=nvu_source,
+                layers=1)
+            per_rows[rows] = _npec_schedule(compiled, cycle_model)[
+                "total_cycles"] * shape.encoders
+        slice_cycles.append(per_rows[rows])
+    whole = npec.compile_bert_shape(hw, dataclasses.replace(shape, seq=seq),
+                                    bits, nvu_source=nvu_source, layers=1)
+    whole_cycles = _npec_schedule(whole, cycle_model)["total_cycles"] \
+        * shape.encoders
+    total = sum(slice_cycles)
+    return {
+        "total_cycles": total,
+        "whole_cycles": whole_cycles,
+        "max_slice_cycles": max(slice_cycles),
+        "slices": len(slice_cycles),
+        "overhead": total / whole_cycles if whole_cycles else 0.0,
+        "stall_reduction": (whole_cycles / max(slice_cycles)
+                            if slice_cycles and max(slice_cycles)
+                            else 0.0),
     }
 
 

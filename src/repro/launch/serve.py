@@ -26,13 +26,18 @@ Two backends:
     docs/serving.md; the benchmark table lives in
     results/npec_serve_cycles.json.
 
-``--overlays N`` (with ``--shard {replicate,expert,pipeline}`` and an
-optional Poisson ``--rate``) lifts the npec backend to the multi-overlay
-fleet simulator (`repro.npec.fleet.NPEFleet`, docs/fleet.md): N overlays
-pull from a shared admission queue on a common fleet clock, with
-expert-/pipeline-parallel sharding charging inter-overlay transfers as
-MRU/MWU traffic.  N=1 replicate with no rate keeps the lone-engine path
-bit-identical.
+``--overlays N`` (with ``--shard {replicate,expert,pipeline,
+prefill_decode}`` and an optional Poisson ``--rate``) lifts the npec
+backend to the multi-overlay fleet simulator (`repro.npec.fleet.
+NPEFleet`, docs/fleet.md): N overlays pull from a shared admission queue
+on a common fleet clock, with expert-/pipeline-parallel sharding and
+prefill/decode disaggregation charging inter-overlay transfers as
+MRU/MWU traffic.  ``--prefill-chunk C`` streams every admitted prompt as
+ceil(S/C) causal cache slices (engine and fleet alike — the chunked
+single-engine path bounds the decode stall an unchunked admit causes);
+``--prefill-overlays P`` sizes the prefill side of a disaggregated
+fleet.  N=1 replicate with no rate and no chunking keeps the lone-engine
+path bit-identical.
 
 For encoder-only BERT, "serving" is one encoder pass per request batch —
 see examples/serve_bert.py, which reproduces the paper's latency table
@@ -182,7 +187,9 @@ def run_npec_fleet(args) -> Dict[str, float]:
         fleet = NPEFleet(cfg, hw, overlays=args.overlays, shard=args.shard,
                          slots=args.batch, capacity=args.capacity,
                          max_new_tokens=args.gen, bits=args.bits,
-                         cycle_model=args.cycle_model)
+                         cycle_model=args.cycle_model,
+                         prefill_chunk=args.prefill_chunk,
+                         prefill_overlays=args.prefill_overlays)
         reqs = SyntheticRequests(cfg.vocab_size,
                                  max_prompt=min(16, max_prompt),
                                  rate_rps=args.rate, clock_hz=hw.clock_hz)
@@ -221,7 +228,8 @@ def run_npec(args) -> Dict[str, float]:
                        slots=args.batch, capacity=args.capacity,
                        max_new_tokens=args.gen, bits=args.bits,
                        npe=args.npe, params=params,
-                       cycle_model=args.cycle_model)
+                       cycle_model=args.cycle_model,
+                       prefill_chunk=args.prefill_chunk)
     reqs = SyntheticRequests(cfg.vocab_size, max_prompt=min(16, max_prompt))
     for i in range(args.requests):
         # EOS-aware workload: each request carries a sampled stop token,
@@ -255,14 +263,25 @@ def main(argv=None):
     ap.add_argument("--overlays", type=int, default=1,
                     help="npec: overlays in the fleet (1 = the single-"
                          "engine path, bit-identical to before)")
-    ap.add_argument("--shard", choices=("replicate", "expert", "pipeline"),
+    ap.add_argument("--shard", choices=("replicate", "expert", "pipeline",
+                                        "prefill_decode"),
                     default="replicate",
                     help="npec fleet: replicate engines, expert-parallel "
-                         "MoE, or pipeline-parallel layer groups "
-                         "(docs/fleet.md)")
+                         "MoE, pipeline-parallel layer groups, or "
+                         "prefill/decode disaggregation with KV caches "
+                         "shipped between overlays (docs/fleet.md)")
     ap.add_argument("--rate", type=float, default=None,
                     help="npec fleet: Poisson request rate (requests/sec "
                          "at the overlay clock); default all-at-t0")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="npec: stream each prompt as ceil(S/C) causal "
+                         "cache slices instead of one whole-prompt "
+                         "prefill, bounding the decode stall per step "
+                         "(docs/serving.md)")
+    ap.add_argument("--prefill-overlays", type=int, default=1,
+                    help="npec fleet: dedicated prefill overlays in "
+                         "--shard prefill_decode (the remaining overlays "
+                         "decode)")
     ap.add_argument("--npe", action="store_true")
     ap.add_argument("--dtype-float32", action="store_true",
                     help="npec: force float32 params (test parity)")
@@ -274,7 +293,7 @@ def main(argv=None):
         args.capacity = min(args.capacity, 24)
     if args.backend == "npec":
         if (args.overlays, args.shard, args.rate) == (1, "replicate", None):
-            run_npec(args)      # lone-engine path, bit-identical
+            run_npec(args)      # lone-engine path (honors --prefill-chunk)
         else:
             run_npec_fleet(args)
         print("serve OK")

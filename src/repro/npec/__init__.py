@@ -78,7 +78,8 @@ from repro.npec.schedule import (greedy_schedule, issue_order, schedule_for,
                                  stream_schedule, transfer_cycles)
 from repro.npec.trace import (CompileError, moe_capacity, trace_bert_shape,
                               trace_decode, trace_decode_bert_shape,
-                              trace_model, trace_moe_block, trace_prefill)
+                              trace_model, trace_moe_block, trace_prefill,
+                              trace_prefill_slice_shape)
 from repro.npec.exec import DecodeSession, ExecResult, execute
 
 
@@ -120,14 +121,33 @@ def compile_decode(cfg: ModelConfig, cache_len: int,
 def compile_prefill(cfg: ModelConfig, seq: int,
                     hw: Optional[NPEHardware] = None, *, bits: int = 16,
                     nvu_source: str = "paper", layers: Optional[int] = None,
-                    include_embed: bool = True) -> CompiledProgram:
+                    include_embed: bool = True,
+                    cache_len: Optional[int] = None) -> CompiledProgram:
     """Trace + lower the *serving prefill* stream for a `seq`-token
     prompt: causal, ends at the logits head, and exports each kv head's
     (S, head_dim) k/v rows (`Graph.kv_exports`) so `DecodeSession.
-    load_slot` can seed a decode slot from one executed pass."""
+    load_slot` can seed a decode slot from one executed pass.
+
+    cache_len=T compiles one *chunked-prefill slice* instead: `seq` prompt
+    rows appended into (T, head_dim) cache banks with a row-masked causal
+    softmax over the updated cache; `NPEEngine(prefill_chunk=...)` runs
+    ceil(S/chunk) of these, carrying cache_updates between them."""
     hw = hw if hw is not None else NPEHardware()
     return lower(trace_prefill(cfg, seq, layers=layers,
-                               include_embed=include_embed),
+                               include_embed=include_embed,
+                               cache_len=cache_len),
+                 hw, bits=bits, nvu_source=nvu_source)
+
+
+def compile_prefill_slice_shape(hw: NPEHardware, shape, cache_len: int,
+                                rows: int, bits: int, *,
+                                nvu_source: str = "paper",
+                                layers: int = 1) -> CompiledProgram:
+    """Compile a dims-only chunked-prefill slice for a `core.cycles`
+    BertShape — the cost model behind the per-chunk stall bound
+    (`core.cycles.chunked_prefill_cycles`)."""
+    return lower(trace_prefill_slice_shape(shape, cache_len, rows,
+                                           layers=layers),
                  hw, bits=bits, nvu_source=nvu_source)
 
 

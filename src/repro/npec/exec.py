@@ -115,7 +115,13 @@ def _matmul(node: Node, a, b, bias, *, weight_resident: bool,
 
 def _softmax(node: Node, x, *, pos=None, use_pwl: bool, segments: int):
     where = None
-    if node.attrs.get("cache_masked"):
+    if node.attrs.get("row_masked"):
+        # chunked-prefill slice: pos is the (C,) absolute-position vector;
+        # row r attends to cache slots <= pos[r] (the causal slice mask)
+        sk = x.shape[-1]
+        where = jnp.broadcast_to(jnp.arange(sk) <= pos[..., :, None],
+                                 x.shape)
+    elif node.attrs.get("cache_masked"):
         sk = x.shape[-1]
         where = jnp.broadcast_to(jnp.arange(sk) <= pos, x.shape)
     elif node.attrs.get("causal"):
@@ -378,9 +384,23 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
                 # projection, written at this slot's own position
                 new = new[..., slot:slot + 1, :]
                 posv = posv[..., slot]
-            cap = node.shape[-2]
-            hit = (jnp.arange(cap, dtype=jnp.int32) == posv)[:, None]
-            put(node.id, jnp.where(hit, new, c))
+            if node.attrs.get("rows"):
+                # chunked-prefill burst: write all C rows of `new` at their
+                # absolute positions posv[r].  The one-hot einsum copies
+                # each row exactly (1.0 * x plus zeros), so a chunked bank
+                # is bitwise-equal to the monolithic prefill's rows.
+                cap = node.shape[-2]
+                idx = posv.astype(jnp.int32)
+                onehot = (jnp.arange(cap, dtype=jnp.int32)[:, None]
+                          == idx[None, :])
+                write = jnp.einsum("cr,...rd->...cd",
+                                   onehot.astype(new.dtype), new)
+                keep = ~onehot.any(axis=1)
+                put(node.id, jnp.where(keep[:, None], c, write))
+            else:
+                cap = node.shape[-2]
+                hit = (jnp.arange(cap, dtype=jnp.int32) == posv)[:, None]
+                put(node.id, jnp.where(hit, new, c))
         elif op == "slot_select":
             x = get(node.inputs[0])
             i = node.attrs["index"]

@@ -21,6 +21,12 @@ instruction, `embed.*` precedes the first layer, and the untagged tail
     groups (pipeline parallelism): stage s>0 opens with an MRU recv of
     the `rows` boundary activations, stage s<K-1 closes with an MWU send;
     cross-stage data dependencies re-point at the recv.
+  * `partition_prefill_decode(prefill_prog, ...)` — prefill/decode
+    disaggregation: dedicated prefill overlays run (chunked) prefill and
+    ship each finished request's KV cache to a decode overlay as one MWU
+    send / MRU recv pair sized from `Graph.kv_exports` — S tokens cross
+    as `len(kv_exports) x S` rows (every kv head's k and v row per
+    position, the exact rows `DecodeSession.load_slot` seeds).
   * `partition_expert(compiled, n)` — expert parallelism for MoE streams:
     the per-expert matmul runs are independent by construction (PR 3), so
     expert e lands on *relative* overlay e % n (relative to the request's
@@ -141,6 +147,69 @@ def partition_pipeline(compiled: CompiledProgram, n_stages: int, *,
         for s in range(n_stages)
     ]
     return PipelinePlan(stages=stages, rows=int(rows), layer_groups=groups)
+
+
+# --- prefill/decode disaggregation -------------------------------------
+
+
+@dataclass
+class PrefillDecodePlan:
+    """KV-shipping plan for a disaggregated fleet: `kv_rows_per_token`
+    rows cross per prompt token (one (head_dim,) row per kv export — the
+    k and v bank rows of every kv head, `Graph.kv_exports`), so a
+    finished S-token prefill ships `kv_rows_per_token * S` rows out of
+    its prefill overlay (MWU send) and into its decode overlay (MRU
+    recv), both at the traffic units' 1-row-per-cycle convention."""
+    kv_rows_per_token: int
+    prefill_overlays: int
+    decode_overlays: int
+    _src: CompiledProgram = field(repr=False)
+    _send: Dict[int, CompiledProgram] = field(default_factory=dict,
+                                              repr=False)
+    _recv: Dict[int, CompiledProgram] = field(default_factory=dict,
+                                              repr=False)
+
+    def kv_rows(self, seq: int) -> int:
+        return self.kv_rows_per_token * int(seq)
+
+    def send_prog(self, seq: int) -> CompiledProgram:
+        """MWU stream shipping an S-token KV cache off a prefill overlay."""
+        if seq not in self._send:
+            self._send[seq] = _carve(self._src, [],
+                                     send_rows=self.kv_rows(seq),
+                                     tag=f"kv.s{seq}")
+        return self._send[seq]
+
+    def recv_prog(self, seq: int) -> CompiledProgram:
+        """MRU stream landing an S-token KV cache on a decode overlay."""
+        if seq not in self._recv:
+            self._recv[seq] = _carve(self._src, [],
+                                     recv_rows=self.kv_rows(seq),
+                                     tag=f"kv.s{seq}")
+        return self._recv[seq]
+
+
+def partition_prefill_decode(prefill_prog: CompiledProgram, *,
+                             prefill_overlays: int,
+                             decode_overlays: int) -> PrefillDecodePlan:
+    """Build the KV-shipping plan for a disaggregated fleet from a
+    compiled serving-prefill stream (`compile_prefill` — its
+    `Graph.kv_exports` names every cache-bank row family a decode slot
+    needs).  The prefill overlays run the (chunked) prefill streams
+    themselves; this plan only sizes the inter-overlay handoff."""
+    if prefill_overlays < 1 or decode_overlays < 1:
+        raise ValueError(
+            f"need at least one overlay on each side, got "
+            f"{prefill_overlays} prefill + {decode_overlays} decode")
+    kv = prefill_prog.graph.kv_exports
+    if not kv:
+        raise ValueError(
+            "prefill stream has no kv exports to ship; compile it with "
+            "compile_prefill (trace_prefill), not compile_model")
+    return PrefillDecodePlan(kv_rows_per_token=len(kv),
+                             prefill_overlays=prefill_overlays,
+                             decode_overlays=decode_overlays,
+                             _src=prefill_prog)
 
 
 # --- expert parallelism (moe) ------------------------------------------

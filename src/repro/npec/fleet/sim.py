@@ -24,6 +24,16 @@ Three sharding strategies:
     (MWU send / MRU recv inside the stage streams), and because each
     stage advances on the common fleet clock, pipeline bubbles are
     *measured* as timeline gaps, not modeled.
+  * ``prefill_decode`` — prefill/decode disaggregation: the first
+    `prefill_overlays` overlays run (chunked) prefill streams only, FIFO
+    over the admission queue, and ship each finished request's KV cache
+    to the decode side as MWU send / MRU recv rows sized from
+    `Graph.kv_exports` (repro.npec.fleet.partition,
+    `partition_prefill_decode`); the remaining overlays run continuous
+    batching exactly as ``replicate`` engines, except admission charges
+    the KV recv transfer instead of a prefill — so decode steps are
+    NEVER stalled by a prompt's prefill, the p99 inter-token cliff the
+    chunked single-engine mode only bounds.
   * ``expert`` — MoE expert parallelism over single-pass inference
     requests (MoE decode streams are a ROADMAP open item, so the moe
     family serves compiled full-stream inferences): each request's
@@ -46,15 +56,18 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.overlay import NPEHardware
 from repro.npec import (CompiledProgram, compile_decode, compile_model,
-                        schedule_for, transfer_cycles)
+                        compile_prefill, schedule_for, transfer_cycles)
 from repro.npec.fleet.partition import (ExpertPlan, PipelinePlan,
+                                        PrefillDecodePlan,
                                         partition_expert,
-                                        partition_pipeline)
+                                        partition_pipeline,
+                                        partition_prefill_decode)
 from repro.npec.runtime.batch import Request
 from repro.npec.runtime.clock import CycleClock, LatencyTracker
-from repro.npec.runtime.engine import NPEEngine
+from repro.npec.runtime.engine import (NPEEngine, chunk_spans,
+                                       synthetic_token)
 
-SHARD_STRATEGIES = ("replicate", "expert", "pipeline")
+SHARD_STRATEGIES = ("replicate", "expert", "pipeline", "prefill_decode")
 
 
 @dataclass
@@ -138,6 +151,40 @@ class _EngineQueueView:
         return self.shared.pop()
 
 
+class _ReadyQueue:
+    """The decode side's admission queue in a disaggregated fleet:
+    duck-types `SharedAdmissionQueue` (ready/next_arrival/pop/__len__),
+    but a request becomes visible at its KV-ship completion cycle — when
+    its cache rows have left the prefill overlay — not at submission."""
+
+    def __init__(self):
+        self._items: List[Tuple[int, int, Request]] = []
+        self._popped = 0
+
+    def push(self, ready_cycle: int, req: Request) -> None:
+        self._items.append((int(ready_cycle), req.rid, req))
+
+    def finalize(self) -> None:
+        self._items.sort(key=lambda it: it[:2])
+
+    def ready(self, now: int) -> bool:
+        return (self._popped < len(self._items)
+                and self._items[self._popped][0] <= now)
+
+    def next_arrival(self) -> Optional[int]:
+        if self._popped < len(self._items):
+            return self._items[self._popped][0]
+        return None
+
+    def pop(self) -> Request:
+        item = self._items[self._popped]
+        self._popped += 1
+        return item[2]
+
+    def __len__(self) -> int:
+        return len(self._items) - self._popped
+
+
 @dataclass
 class FleetStats:
     """Cycle-derived fleet summary.  `tokens` counts generated tokens for
@@ -199,8 +246,11 @@ class NPEFleet:
                  nvu_source: str = "paper", eos_id: Optional[int] = None,
                  cycle_model: str = "streaming", seq: int = 64,
                  decode_prog: Optional[CompiledProgram] = None,
-                 prefill_cache: Optional[Dict[int, CompiledProgram]] = None,
-                 inference_prog: Optional[CompiledProgram] = None):
+                 prefill_cache: Optional[Dict[tuple,
+                                              CompiledProgram]] = None,
+                 inference_prog: Optional[CompiledProgram] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_overlays: int = 1):
         if shard not in SHARD_STRATEGIES:
             raise ValueError(f"unknown shard strategy {shard!r} "
                              f"(choose from {SHARD_STRATEGIES})")
@@ -215,6 +265,18 @@ class NPEFleet:
             raise ValueError(
                 "moe families serve single-pass inference via "
                 "shard='expert' (MoE decode streams are a ROADMAP item)")
+        if shard == "expert" and prefill_chunk is not None:
+            raise ValueError("expert-parallel inference has no prefill "
+                             "phase to chunk")
+        if shard == "prefill_decode":
+            if overlays < 2:
+                raise ValueError(
+                    "prefill/decode disaggregation needs at least 2 "
+                    f"overlays (got {overlays})")
+            if not 1 <= prefill_overlays < overlays:
+                raise ValueError(
+                    f"prefill_overlays must leave at least one decode "
+                    f"overlay: 1 <= {prefill_overlays} < {overlays}")
         self.cfg = cfg
         self.hw = hw if hw is not None else NPEHardware()
         self.overlays = overlays
@@ -230,6 +292,10 @@ class NPEFleet:
         self._pipeline_plans: Dict[int, Tuple[CompiledProgram,
                                               PipelinePlan]] = {}
         self.expert_plan: Optional[ExpertPlan] = None
+        self.disagg_plan: Optional[PrefillDecodePlan] = None
+        self.prefill_chunk = prefill_chunk
+        self.prefill_overlays = (prefill_overlays
+                                 if shard == "prefill_decode" else 0)
 
         if shard == "expert":
             self.inference_prog = (
@@ -240,12 +306,46 @@ class NPEFleet:
                                                 overlays)
             return
 
+        self._bits = bits
+        self._nvu_source = nvu_source
+        self._capacity = capacity
+        # keyed (seq, chunk) like NPEEngine._prefill_program, so one dict
+        # can back a whole fleet (and the disagg prefill phase) safely
+        self._prefill_progs: Dict[tuple, CompiledProgram] = (
+            prefill_cache if prefill_cache is not None else {})
+
+        if shard == "prefill_decode":
+            # the KV-shipping plan needs a stream with kv_exports; a
+            # seq=1 serving prefill is the cheapest probe (memoized under
+            # the same (seq, chunk) key a length-1 whole-prompt admit
+            # would use — it IS that stream)
+            self.disagg_plan = partition_prefill_decode(
+                self._prefill_prog(1, chunk=None),
+                prefill_overlays=prefill_overlays,
+                decode_overlays=overlays - prefill_overlays)
+            self._ready = _ReadyQueue()
+            for g in range(overlays - prefill_overlays):
+                view = _EngineQueueView(self._ready)
+                eng = NPEEngine(cfg, self.hw, slots=slots,
+                                capacity=capacity,
+                                max_new_tokens=max_new_tokens, bits=bits,
+                                nvu_source=nvu_source, eos_id=eos_id,
+                                cycle_model=cycle_model,
+                                decode_prog=decode_prog,
+                                prefill_cache=self._prefill_progs,
+                                charge_hook=self._disagg_hook,
+                                queue=view, engine_id=g,
+                                kv_recv=self.disagg_plan.recv_prog)
+                view.engine = eng
+                if decode_prog is None:
+                    decode_prog = eng.decode_prog
+                self.engines.append(eng)
+            return
+
         # replicate: one engine per overlay; pipeline: one overlay per
         # STAGE, plus N engine groups so every stage has work in flight.
         hook = (self._replicate_hook if shard == "replicate"
                 else self._pipeline_hook)
-        shared_prefills: Dict[int, CompiledProgram] = (
-            prefill_cache if prefill_cache is not None else {})
         for g in range(overlays):
             view = _EngineQueueView(self.queue)
             eng = NPEEngine(cfg, self.hw, slots=slots, capacity=capacity,
@@ -253,8 +353,9 @@ class NPEFleet:
                             nvu_source=nvu_source, eos_id=eos_id,
                             cycle_model=cycle_model,
                             decode_prog=decode_prog,
-                            prefill_cache=shared_prefills,
-                            charge_hook=hook, queue=view, engine_id=g)
+                            prefill_cache=self._prefill_progs,
+                            charge_hook=hook, queue=view, engine_id=g,
+                            prefill_chunk=prefill_chunk)
             view.engine = eng
             if decode_prog is None:
                 decode_prog = eng.decode_prog     # share across the fleet
@@ -304,6 +405,32 @@ class NPEFleet:
         tl.free = end
         tl.busy += end - start
 
+    def _disagg_hook(self, engine: NPEEngine, kind: str,
+                     prog: CompiledProgram, cycles: float) -> None:
+        """Decode-side charge in a disaggregated fleet: decode engine g
+        owns overlay `prefill_overlays + g` outright (replicate
+        semantics), and its `kv_recv` admission charges are itemized as
+        transfer cycles on that overlay's timeline."""
+        tl = self.timelines[self.prefill_overlays + engine.engine_id]
+        start = engine.clock.cycles
+        end = engine.clock.advance(cycles)
+        tl.free = end
+        tl.busy += end - start
+        if kind == "kv_recv":
+            tl.xfer += transfer_cycles(prog)
+
+    def _prefill_prog(self, rows: int,
+                      chunk: Optional[int]) -> CompiledProgram:
+        """Compiled (chunked) prefill stream for `rows` prompt tokens,
+        memoized under the engine cache's (seq, chunk) convention."""
+        key = (rows, chunk)
+        if key not in self._prefill_progs:
+            self._prefill_progs[key] = compile_prefill(
+                self.cfg, rows, self.hw, bits=self._bits,
+                nvu_source=self._nvu_source,
+                cache_len=(self._capacity if chunk is not None else None))
+        return self._prefill_progs[key]
+
     def _stage_costs(self, prog: CompiledProgram
                      ) -> List[Tuple[float, int]]:
         """Per-stage (scheduled cycles, transfer cycles) for a stream,
@@ -340,18 +467,19 @@ class NPEFleet:
 
     # --- serving loop --------------------------------------------------
 
-    def _run_engines(self) -> FleetStats:
-        self.queue.finalize()
+    def _event_loop(self, queue) -> None:
+        """Event loop on the fleet clock: an engine with occupied slots
+        can act at its own clock; an idle engine can act at the head
+        request's arrival (it was free the whole wait, so its clock
+        jumps forward — never back).  Always step whichever engine can
+        act EARLIEST (ties to the lower overlay id), which is what
+        makes a fleet of 1 bit-equal to a lone engine and keeps idle
+        overlays from starving behind a busy one's advanced clock.
+        `queue` is the SharedAdmissionQueue (replicate/pipeline) or the
+        decode side's _ReadyQueue (prefill_decode)."""
         engines = self.engines
-        # Event loop on the fleet clock: an engine with occupied slots
-        # can act at its own clock; an idle engine can act at the head
-        # request's arrival (it was free the whole wait, so its clock
-        # jumps forward — never back).  Always step whichever engine can
-        # act EARLIEST (ties to the lower overlay id), which is what
-        # makes a fleet of 1 bit-equal to a lone engine and keeps idle
-        # overlays from starving behind a busy one's advanced clock.
         while True:
-            head = self.queue.next_arrival()
+            head = queue.next_arrival()
             best = None
             for e in engines:
                 if len(e.pool):
@@ -371,6 +499,11 @@ class NPEFleet:
             assert stepped, "a ready engine must make progress"
         for e in engines:
             e.stats.total_cycles = e.clock.cycles
+
+    def _run_engines(self) -> FleetStats:
+        self.queue.finalize()
+        self._event_loop(self.queue)
+        engines = self.engines
         reqs = sorted((r for e in engines for r in e.stats.requests),
                       key=lambda r: r.rid)
         self.stats.requests = reqs
@@ -416,9 +549,63 @@ class NPEFleet:
         self.stats.transfer_cycles = sum(tl.xfer for tl in self.timelines)
         return self.stats
 
+    def _run_prefill_decode(self) -> FleetStats:
+        """Disaggregated serve: phase 1 places every request's prefill
+        slices FIFO on the prefill overlays (earliest-free timeline at
+        the request's arrival, all slices contiguous — a dedicated
+        prefill overlay has no decode to interleave with) and closes
+        each with the MWU KV-ship; phase 2 runs the decode engines'
+        continuous batching over the ready queue.  Phase 1 never depends
+        on decode-side state, so placing it fully first is exact, not an
+        approximation."""
+        self.queue.finalize()
+        plan = self.disagg_plan
+        done: List[Request] = []
+        while len(self.queue):
+            req = self.queue.pop()
+            done.append(req)
+            tl = min(self.timelines[:self.prefill_overlays],
+                     key=lambda l: (max(l.free, req.submit_cycle), l.idx))
+            t = req.submit_cycle
+            first = True
+            for _, rows in chunk_spans(len(req.prompt),
+                                       self.prefill_chunk):
+                prog = self._prefill_prog(rows, self.prefill_chunk)
+                c = schedule_for(prog, self.cycle_model)["total_cycles"]
+                s, t = tl.place(t, c)
+                if first:
+                    req.admit_cycle = s
+                    first = False
+            send = plan.send_prog(len(req.prompt))
+            xfer = transfer_cycles(send)          # 1 row/cycle MWU ship
+            _, t = tl.place(t, xfer, xfer)
+            self.stats.prefills += 1
+            tok = synthetic_token(req)            # cost-only first token
+            req.generated.append(tok)
+            req.first_token_cycle = t
+            req.token_cycles.append(t)
+            if req.wants_more():
+                self._ready.push(t, req)
+            else:
+                req.finish_cycle = t
+        self._ready.finalize()
+        self._event_loop(self._ready)
+        self.stats.requests = sorted(done, key=lambda r: r.rid)
+        self.stats.tokens = sum(len(r.generated) for r in done)
+        self.stats.decode_steps = sum(e.stats.decode_steps
+                                      for e in self.engines)
+        self.stats.makespan_cycles = max(
+            [tl.free for tl in self.timelines]
+            + [e.clock.cycles for e in self.engines] + [0])
+        self.stats.busy_cycles = [tl.busy for tl in self.timelines]
+        self.stats.transfer_cycles = sum(tl.xfer for tl in self.timelines)
+        return self.stats
+
     def run(self) -> FleetStats:
         """Serve every submitted request to completion; returns the
         fleet-level cycle-derived stats."""
         if self.shard == "expert":
             return self._run_expert()
+        if self.shard == "prefill_decode":
+            return self._run_prefill_decode()
         return self._run_engines()

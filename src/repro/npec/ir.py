@@ -51,6 +51,14 @@ int32 `pos` node — and masks key slots > pos (attr cache_masked); ``rope``
 takes an optional second input rotating every row at position `pos` instead
 of its static row index.
 
+Chunked-prefill slices (`trace_prefill(cache_len=T)`) reuse the same two
+hooks with a *vector* position: the slice's (C,) int32 `pos_ids` input
+holds each row's absolute prompt position, so ``softmax`` masks row r to
+key slots <= pos_ids[r] (attr row_masked — the causal-slice mask over the
+cache), ``rope`` rotates row r at pos_ids[r] (the existing batched-decode
+vector path), and ``cache_append`` writes all C rows at their positions
+in one MWU burst (attr rows=C).
+
 Batched decode streams (B serving slots sharing ONE stream — the runtime
 engine's step, see repro.npec.runtime) add two wrinkles:
   * the `pos` input is a (B,) int32 *vector* (one cache length per slot);
@@ -216,11 +224,19 @@ class GraphBuilder:
                           quantize=quantize)
 
     def softmax(self, x, *, causal=False, valid_upto=None, tag=""):
-        """valid_upto: optional scalar int32 node id (`pos`) — key slots
-        with index > pos are masked out (decode over a partial cache)."""
+        """valid_upto: optional int32 node id (`pos`) — key slots with
+        index > pos are masked out (decode over a partial cache).  A
+        scalar pos masks every query row the same way (attr cache_masked,
+        the one-new-token decode mask); a (C,) vector masks row r to
+        slots <= pos[r] (attr row_masked, the chunked-prefill causal
+        slice over the cache)."""
         if valid_upto is None:
             return self.g.add("softmax", (x,), self.g.node(x).shape,
                               tag=tag, causal=causal)
+        if self.g.node(valid_upto).shape:
+            return self.g.add("softmax", (x, valid_upto),
+                              self.g.node(x).shape, tag=tag, causal=causal,
+                              row_masked=True)
         return self.g.add("softmax", (x, valid_upto), self.g.node(x).shape,
                           tag=tag, causal=causal, cache_masked=True)
 
@@ -249,12 +265,18 @@ class GraphBuilder:
     def cache_append(self, cache, new, pos, *, slot=None, tag=""):
         """slot=s (batched decode streams): `new` is the merged (B, hd)
         projection and `pos` the (B,) per-slot position vector — row s is
-        written into this cache bank at pos[s]."""
+        written into this cache bank at pos[s].  Without a slot, a `new`
+        operand of C > 1 rows (chunked-prefill slices) writes every row r
+        at pos[r] in one burst (attr rows=C); the single-row decode write
+        is unchanged."""
         cn = self.g.node(cache)
         name = cn.attrs["name"]
+        ns = self.g.node(new).shape
+        rows = (ns[-2] if slot is None and len(ns) >= 2 and ns[-2] > 1
+                else None)
         nid = self.g.add("cache_append", (cache, new, pos), cn.shape,
                          cn.dtype, tag=tag or f"{name}.append", name=name,
-                         slot=slot)
+                         slot=slot, rows=rows)
         self.g.cache_updates[name] = nid
         return nid
 

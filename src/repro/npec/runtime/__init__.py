@@ -19,8 +19,11 @@ Wired into `launch/serve.py --backend npec`, benchmarked by
 results/npec_serve_cycles.json), documented in docs/serving.md.
 """
 from repro.npec.runtime.batch import Request, RequestQueue, SlotPool
-from repro.npec.runtime.clock import CycleClock, LatencyTracker
-from repro.npec.runtime.engine import EngineStats, NPEEngine
+from repro.npec.runtime.clock import (CycleClock, LatencyTracker,
+                                      inter_token_gaps)
+from repro.npec.runtime.engine import (EngineStats, NPEEngine, chunk_spans,
+                                       synthetic_token)
 
 __all__ = ["CycleClock", "EngineStats", "LatencyTracker", "NPEEngine",
-           "Request", "RequestQueue", "SlotPool"]
+           "Request", "RequestQueue", "SlotPool", "chunk_spans",
+           "inter_token_gaps", "synthetic_token"]

@@ -30,6 +30,10 @@ class Request:
     first_token_cycle: int = -1        # prefill done, first token out
     finish_cycle: int = -1
     generated: List[int] = field(default_factory=list)
+    # clock timestamp of every emitted token (first token included) — the
+    # per-token trace behind inter-token gap percentiles, i.e. the p99
+    # cliff the chunked-prefill interleave bounds (clock.inter_token_gaps)
+    token_cycles: List[int] = field(default_factory=list)
 
     @property
     def done(self) -> bool:

@@ -47,6 +47,21 @@ class CycleClock:
         return 1e3 * c / self.clock_hz
 
 
+def inter_token_gaps(requests) -> List[int]:
+    """Consecutive-token decode gaps, in cycles, across every request's
+    `token_cycles` trace (first-token gaps excluded — a request's first
+    gap is token 1 -> token 2).  This is the series whose tail a
+    mid-decode prefill stall inflates: an unchunked admit inserts the
+    whole prompt's stream between two decode steps, a chunked admit at
+    most one slice's (the p99-cliff gate in tests/test_npec_runtime.py
+    and the npec_disagg record both read it)."""
+    gaps: List[int] = []
+    for r in requests:
+        ts = r.token_cycles
+        gaps.extend(b - a for a, b in zip(ts, ts[1:]))
+    return gaps
+
+
 @dataclass
 class LatencyTracker:
     """Per-request latency aggregation over clock timestamps (cycles)."""

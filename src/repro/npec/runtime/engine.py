@@ -56,9 +56,46 @@ from repro.config import ModelConfig
 from repro.core.overlay import NPEHardware
 from repro.npec import (CompiledProgram, DecodeSession, compile_decode,
                         compile_prefill, execute, greedy_schedule,
-                        schedule_for, stream_schedule)
+                        schedule_for, stream_schedule, transfer_cycles)
 from repro.npec.runtime.batch import Request, RequestQueue, SlotPool
 from repro.npec.runtime.clock import CycleClock, LatencyTracker
+
+# Cost-only runs have no logits to argmax, but EOS-aware workloads still
+# need *some* deterministic token stream to evict against — draw from a
+# small alphabet (multiplicative-hash PRN per request and step) so sampled
+# EOS ids actually fire and completions go ragged, bit-reproducibly
+# (results/npec_serve_cycles.json is guarded).  Module-level so the fleet's
+# disaggregated prefill phase (repro.npec.fleet.sim) emits the SAME first
+# token a replicate engine would — token streams depend only on
+# (rid, len(generated)), which is what makes disagg-vs-replicate token
+# identity a testable invariant.
+SYNTH_ALPHABET = 32
+
+
+def synthetic_token(req: Request) -> int:
+    h = (req.rid * 2654435761 + len(req.generated) * 40503) & 0xffffffff
+    return int((h >> 16) % SYNTH_ALPHABET)
+
+
+def chunk_spans(seq: int, chunk: Optional[int]) -> List[tuple]:
+    """(base, rows) slices of a `seq`-token prompt at `chunk` granularity
+    (chunk=None: one whole-prompt span)."""
+    if chunk is None:
+        return [(0, seq)]
+    if chunk < 1:
+        raise ValueError(f"prefill chunk must be >= 1, got {chunk}")
+    return [(b, min(chunk, seq - b)) for b in range(0, seq, chunk)]
+
+
+@dataclass
+class _PrefillState:
+    """An admitted request mid-chunked-prefill: which slice runs next and
+    the cache banks carried between slices (numeric mode)."""
+    req: Request
+    spans: List[tuple]                       # (base, rows) per slice
+    next_i: int = 0
+    caches: Optional[Dict[str, np.ndarray]] = None
+    logits_tail: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -126,8 +163,9 @@ class NPEEngine:
                  nvu_source: str = "paper", eos_id: Optional[int] = None,
                  cycle_model: str = "streaming",
                  decode_prog: Optional[CompiledProgram] = None,
-                 prefill_cache: Optional[Dict[int, CompiledProgram]] = None,
-                 charge_hook=None, queue=None, engine_id: int = 0):
+                 prefill_cache: Optional[Dict] = None,
+                 charge_hook=None, queue=None, engine_id: int = 0,
+                 prefill_chunk: Optional[int] = None, kv_recv=None):
         """Fleet extension points (repro.npec.fleet) — all default to the
         lone-engine behavior, which stays byte-identical:
 
@@ -146,9 +184,36 @@ class NPEEngine:
             `stats.requests` at admission (they were never `submit`ted
             here);
           * `engine_id`: this engine's overlay index (deterministic fleet
-            tie-breaking)."""
+            tie-breaking).
+
+        Serving-shape extension points:
+
+          * `prefill_chunk=C`: chunked prefill — an admit binds its slot
+            immediately but streams the prompt as ceil(S/C) causal cache
+            slices (`compile_prefill(cache_len=capacity)`), at most ONE
+            slice interleaved per engine step, so a decode step is never
+            stalled by more than one slice's scheduled cycles (the p99
+            cliff an unchunked admit causes);
+          * `kv_recv(seq) -> CompiledProgram`: disaggregated *decode*
+            overlay — admission charges the returned MRU recv stream (the
+            KV rows shipped from a prefill overlay) instead of running a
+            prefill; requests arrive with their first token already
+            generated.  Cost-only (`params` must be None) and mutually
+            exclusive with `prefill_chunk`."""
         if cycle_model not in ("dag", "streaming"):
             raise ValueError(f"unknown cycle model {cycle_model!r}")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if kv_recv is not None:
+            if params is not None:
+                raise ValueError(
+                    "kv_recv engines are cost-only: the KV rows arrive by "
+                    "transfer, not by executing a prefill (params=None)")
+            if prefill_chunk is not None:
+                raise ValueError(
+                    "kv_recv decode overlays never prefill; prefill_chunk "
+                    "belongs on the prefill side")
         self.cfg = cfg
         self.hw = hw if hw is not None else NPEHardware()
         self.slots = slots
@@ -186,8 +251,19 @@ class NPEEngine:
         self.queue = queue if queue is not None else RequestQueue()
         self.pool = SlotPool(slots)
         self._next_tok = np.zeros(slots, np.int32)
-        self._prefill_cache: Dict[int, CompiledProgram] = (
+        self.prefill_chunk = prefill_chunk
+        self.kv_recv = kv_recv
+        # slot -> _PrefillState, insertion-ordered: chunked admits stream
+        # their slices FIFO, one slice per engine step
+        self._prefilling: Dict[int, _PrefillState] = {}
+        # keyed (seq, chunk) — NOT seq alone — so a fleet's shared cache
+        # cannot collide a chunked engine's capacity-T cache slices with
+        # another engine's whole-prompt streams of the same length
+        self._prefill_cache: Dict[tuple, CompiledProgram] = (
             prefill_cache if prefill_cache is not None else {})
+        for key in self._prefill_cache:
+            assert isinstance(key, tuple) and len(key) == 2, (
+                f"prefill_cache must be keyed by (seq, chunk); got {key!r}")
         self.stats = EngineStats(
             cycle_model=cycle_model,
             decode_step_cycles=self.step_cycles,
@@ -231,11 +307,17 @@ class NPEEngine:
     # --- serving loop -----------------------------------------------------
 
     def _prefill_program(self, seq: int) -> CompiledProgram:
-        if seq not in self._prefill_cache:
-            self._prefill_cache[seq] = compile_prefill(
+        """The compiled prefill stream for `seq` rows — the whole prompt
+        (chunk=None) or one cache-bank slice (chunked engines), memoized
+        by (seq, chunk)."""
+        key = (seq, self.prefill_chunk)
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = compile_prefill(
                 self.cfg, seq, self.hw, bits=self.bits,
-                nvu_source=self.nvu_source)
-        return self._prefill_cache[seq]
+                nvu_source=self.nvu_source,
+                cache_len=(self.capacity if self.prefill_chunk is not None
+                           else None))
+        return self._prefill_cache[key]
 
     def _schedule_cycles(self, prog: CompiledProgram) -> float:
         return schedule_for(prog, self.cycle_model)["total_cycles"]
@@ -250,20 +332,22 @@ class NPEEngine:
         else:
             self.clock.advance(cycles)
 
-    # Cost-only runs have no logits to argmax, but EOS-aware workloads
-    # still need *some* deterministic token stream to evict against —
-    # draw from a small alphabet (multiplicative-hash PRN per request and
-    # step) so sampled EOS ids actually fire and completions go ragged,
-    # bit-reproducibly (results/npec_serve_cycles.json is guarded).
-    SYNTH_ALPHABET = 32
+    SYNTH_ALPHABET = SYNTH_ALPHABET      # see module-level synthetic_token
 
     def _synthetic_token(self, req: Request) -> int:
-        h = (req.rid * 2654435761 + len(req.generated) * 40503) & 0xffffffff
-        return int((h >> 16) % self.SYNTH_ALPHABET)
+        return synthetic_token(req)
 
     def _admit(self, slot: int, req: Request) -> None:
-        """Compiled prefill: charge the scheduled stream, seed the slot's
-        cache banks, emit the first generated token."""
+        """Admit one request into a free slot.  Default: one whole-prompt
+        compiled prefill (charge the stream, seed the banks, emit the
+        first token).  Chunked engines only bind and enqueue the slices;
+        disaggregated decode overlays charge the KV recv transfer."""
+        if self.kv_recv is not None:
+            self._admit_kv(slot, req)
+            return
+        if self.prefill_chunk is not None:
+            self._admit_chunked(slot, req)
+            return
         prog = self._prefill_program(len(req.prompt))
         if self._external_queue:
             self.stats.requests.append(req)
@@ -281,6 +365,86 @@ class NPEEngine:
         self.pool.bind(slot, req)
         req.generated.append(tok)
         req.first_token_cycle = self.clock.cycles
+        req.token_cycles.append(self.clock.cycles)
+        self.stats.first_token.record(req.submit_cycle, self.clock.cycles)
+        self._next_tok[slot] = tok
+        if not req.wants_more():
+            self._finish(slot)
+
+    def _admit_chunked(self, slot: int, req: Request) -> None:
+        """Chunked admission: the slot is granted now, but the prompt
+        streams as causal cache slices — one per engine step
+        (_prefill_step) — so decoding slots stall by at most one slice."""
+        if self._external_queue:
+            self.stats.requests.append(req)
+        req.admit_cycle = self.clock.cycles
+        self.stats.queue_wait.record(req.submit_cycle, req.admit_cycle)
+        self.pool.bind(slot, req)
+        self._prefilling[slot] = _PrefillState(
+            req, chunk_spans(len(req.prompt), self.prefill_chunk))
+
+    def _admit_kv(self, slot: int, req: Request) -> None:
+        """Disaggregated decode-overlay admission: the request's KV cache
+        was built by a prefill overlay and ships in as MRU recv rows —
+        charge that transfer stream, then decode from its last token."""
+        prog = self.kv_recv(len(req.prompt))
+        if self._external_queue:
+            self.stats.requests.append(req)
+        if req.admit_cycle < 0:
+            req.admit_cycle = self.clock.cycles
+            self.stats.queue_wait.record(req.submit_cycle, req.admit_cycle)
+        self._charge("kv_recv", prog, transfer_cycles(prog))
+        self.pool.bind(slot, req)
+        assert req.generated, (
+            "kv_recv admission expects the prefill overlay's first token")
+        self._next_tok[slot] = req.generated[-1]
+        if not req.wants_more():
+            self._finish(slot)
+
+    def _prefill_step(self) -> bool:
+        """Run at most ONE prefill slice — the oldest admitted prefilling
+        slot's next chunk.  Numeric mode carries the cache banks between
+        slices (cache_updates) and keeps the slice logits for the first
+        token; the final slice seeds the decode slot (load_slot)."""
+        slot = next(iter(self._prefilling))
+        st = self._prefilling[slot]
+        base, rows = st.spans[st.next_i]
+        prog = self._prefill_program(rows)
+        self._charge("prefill", prog, self._schedule_cycles(prog))
+        if self.numeric:
+            if st.caches is None:
+                g = prog.graph
+                st.caches = {name: np.zeros(g.node(nid).shape, np.float32)
+                             for name, nid in g.caches.items()}
+            feeds: Dict[str, Any] = dict(st.caches)
+            feeds["pos_ids"] = np.arange(base, base + rows, dtype=np.int32)
+            feeds["tokens"] = st.req.prompt[base:base + rows]
+            res = execute(prog, self.params, feeds, cfg=self._npe_cfg)
+            st.caches.update({k: np.asarray(v)
+                              for k, v in res.cache_updates.items()})
+            st.logits_tail = np.asarray(res[0])
+        st.next_i += 1
+        if st.next_i == len(st.spans):
+            self._finish_prefill(slot)
+        return True
+
+    def _finish_prefill(self, slot: int) -> None:
+        """Last slice done: seed the decode slot from the carried banks
+        and emit the first generated token (same semantics as the
+        whole-prompt admit's tail)."""
+        st = self._prefilling.pop(slot)
+        req = st.req
+        self.stats.prefills += 1
+        if self.numeric:
+            S = len(req.prompt)
+            self.session.load_slot(
+                slot, {name: arr[:S] for name, arr in st.caches.items()}, S)
+            tok = int(np.argmax(st.logits_tail[..., -1, :]))
+        else:
+            tok = self._synthetic_token(req)
+        req.generated.append(tok)
+        req.first_token_cycle = self.clock.cycles
+        req.token_cycles.append(self.clock.cycles)
         self.stats.first_token.record(req.submit_cycle, self.clock.cycles)
         self._next_tok[slot] = tok
         if not req.wants_more():
@@ -296,19 +460,28 @@ class NPEEngine:
         self._next_tok[slot] = 0
 
     def step(self) -> bool:
-        """Admit into free slots, then decode every occupied slot one
-        token with the batched stream.  Returns False when idle (nothing
-        admitted AND nothing decoding — admissions alone count as
-        progress: a request can finish at its first token)."""
+        """Admit into free slots, interleave at most one prefill slice
+        (chunked engines), then decode every generating slot one token
+        with the batched stream.  Returns False when idle (nothing
+        admitted, prefilling, or decoding — admissions alone count as
+        progress: a request can finish at its first token).
+
+        A slot whose LAST slice ran this step decodes in this same step
+        (first token at prefill completion, second from the decode pass)
+        — exactly the whole-prompt admit's semantics, just with the
+        stream sliced."""
         admitted = 0
         for slot in self.pool.free_ids():
             if not self.queue:
                 break
             self._admit(slot, self.queue.pop())
             admitted += 1
+        chunked = self._prefill_step() if self._prefilling else False
         active = self.pool.active_mask()
+        for s in self._prefilling:          # bound but not yet generating
+            active[s] = False
         if not active.any():
-            return admitted > 0
+            return admitted > 0 or chunked
         self._charge("decode", self.decode_prog, self.step_cycles)
         self.stats.decode_steps += 1
         if self.numeric:
@@ -318,10 +491,15 @@ class NPEEngine:
         else:
             next_tok = np.zeros(self.slots, np.int32)
             for slot, req in self.pool.active():
+                if slot in self._prefilling:
+                    continue
                 next_tok[slot] = self._synthetic_token(req)
         for slot, req in self.pool.active():
+            if slot in self._prefilling:
+                continue
             tok = int(next_tok[slot])
             req.generated.append(tok)
+            req.token_cycles.append(self.clock.cycles)
             self._next_tok[slot] = tok
             if not req.wants_more():
                 self._finish(slot)

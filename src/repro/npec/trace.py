@@ -733,7 +733,8 @@ def trace_decode(cfg: ModelConfig, cache_len: int, *,
 
 def trace_prefill(cfg: ModelConfig, seq: int, *,
                   layers: Optional[int] = None,
-                  include_embed: bool = True) -> Graph:
+                  include_embed: bool = True,
+                  cache_len: Optional[int] = None) -> Graph:
     """Emit the *serving prefill* graph for a `seq`-token prompt: a causal
     prefill pass whose per-kv-head post-rope (S, hd) k/v tensors are
     registered in `Graph.kv_exports` under the decode streams' canonical
@@ -747,11 +748,36 @@ def trace_prefill(cfg: ModelConfig, seq: int, *,
     prompt, NOT the bidirectional encoder); dense traces its ordinary
     causal prefill.  Families without decode streams raise `CompileError`
     (the serving engine needs both halves).
+
+    cache_len=T switches to the *chunked* mode: the graph is one causal
+    SLICE of `seq` prompt rows over the decode streams' (T, head_dim)
+    cache banks — a (seq,) int32 `pos_ids` input carries each row's
+    absolute prompt position, the new k/v rows `cache_append` into the
+    banks at those positions, and a row-masked softmax over the updated
+    cache gives row r the same valid key set the monolithic causal row
+    has.  Executing ceil(S/chunk) such slices (carrying cache_updates
+    between them, as `NPEEngine` does) seeds a cache bank bitwise-equal
+    to one whole-prompt prefill in float mode.
     """
-    if cfg.family == "bert":
+    if cache_len is not None:
+        if seq > cache_len:
+            raise ValueError(
+                f"prefill slice of {seq} rows exceeds the cache capacity "
+                f"{cache_len}")
+        if cfg.family == "bert":
+            return _trace_prefill_chunk_bert(cfg, seq, cache_len, layers,
+                                             include_embed)
+        if cfg.family == "dense":
+            if not cfg.causal:
+                raise CompileError(
+                    f"npec serving prefill needs a causal model; "
+                    f"{cfg.name!r} is bidirectional")
+            return _trace_prefill_chunk_dense(cfg, seq, cache_len, layers,
+                                              include_embed)
+    elif cfg.family == "bert":
         return _trace_bert(cfg, seq, layers, include_embed, causal=True,
                            logits_head=True, export_kv=True)
-    if cfg.family == "dense":
+    elif cfg.family == "dense":
         if not cfg.causal:
             raise CompileError(
                 f"npec serving prefill needs a causal model; {cfg.name!r} "
@@ -763,6 +789,165 @@ def trace_prefill(cfg: ModelConfig, seq: int, *,
     raise CompileError(
         f"npec cannot lower {gap} yet ({cfg.name!r}), so it cannot serve "
         "this family (see ROADMAP.md Open items)")
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill slices: C prompt rows appended into decode cache banks
+# ---------------------------------------------------------------------------
+
+def _chunk_attention(b: GraphBuilder, x: int, l: int, *, T: int, H: int,
+                     A: int, KV: int, hd: int, qkv_bias: bool,
+                     rope_theta: Optional[float], pos_ids: int,
+                     tag: str) -> int:
+    """Causal-slice attention for chunked prefill: C new prompt rows over
+    the decode streams' (T, hd) cache banks; returns the output projection.
+
+    Per kv head: the slice's (C, hd) k/v projections (post-rope at their
+    absolute positions `pos_ids`) burst-append into the cache bank
+    (`cache_append` rows=C, MWU traffic), then each query head runs a
+    (C, T) QK^T over the *updated* bank with a row-masked softmax
+    (row r attends to slots <= pos_ids[r] — same-slice future keys are in
+    the bank but masked, so the slice is causally exact) and the
+    attention-weighted V reduction.  Row r's valid key values are
+    identical to the monolithic causal prefill's row pos_ids[r], which is
+    what makes the chunked path bitwise-equal in float mode.
+    """
+    g = A // KV
+    z_heads = []
+    for j in range(KV):
+        ck = (j * hd, (j + 1) * hd)
+        bk = (b.param(("blocks", "bk"), (hd,), layer=l, cols=ck)
+              if qkv_bias else None)
+        bv = (b.param(("blocks", "bv"), (hd,), layer=l, cols=ck)
+              if qkv_bias else None)
+        k = b.matmul(x, b.param(("blocks", "wk"), (H, hd), layer=l,
+                                cols=ck), bias=bk, tag=f"{tag}.kv{j}.k")
+        if rope_theta is not None:
+            k = b.rope(k, theta=rope_theta, pos=pos_ids,
+                       tag=f"{tag}.kv{j}.k_rope")
+        v = b.matmul(x, b.param(("blocks", "wv"), (H, hd), layer=l,
+                                cols=ck), bias=bv, tag=f"{tag}.kv{j}.v")
+        kc = b.cache(f"{tag}.kv{j}.k", (T, hd))
+        vc = b.cache(f"{tag}.kv{j}.v", (T, hd))
+        kc = b.cache_append(kc, k, pos_ids)
+        vc = b.cache_append(vc, v, pos_ids)
+        for gi in range(g):
+            i = j * g + gi
+            cq = (i * hd, (i + 1) * hd)
+            bq = (b.param(("blocks", "bq"), (hd,), layer=l, cols=cq)
+                  if qkv_bias else None)
+            q = b.matmul(x, b.param(("blocks", "wq"), (H, hd), layer=l,
+                                    cols=cq), bias=bq, tag=f"{tag}.h{i}.q")
+            if rope_theta is not None:
+                q = b.rope(q, theta=rope_theta, pos=pos_ids,
+                           tag=f"{tag}.h{i}.q_rope")
+            qk = b.matmul(q, kc, transpose_b=True, scale=hd ** -0.5,
+                          tag=f"{tag}.h{i}.qk")
+            sm = b.softmax(qk, valid_upto=pos_ids,
+                           tag=f"{tag}.h{i}.softmax")
+            z_heads.append(b.matmul(sm, vc, tag=f"{tag}.h{i}.av"))
+    z = b.concat(z_heads, tag=f"{tag}.merge_heads")
+    wo = b.param(("blocks", "wo"), (A * hd, H), layer=l)
+    return b.matmul(z, wo, tag=f"{tag}.attn.out")
+
+
+def _trace_prefill_chunk_bert(cfg: ModelConfig, rows: int, cache_len: int,
+                              layers: Optional[int],
+                              include_embed: bool) -> Graph:
+    """One causal BERT prefill slice of `rows` prompt tokens over
+    cache banks of capacity `cache_len` (learned positions gathered at
+    `pos_ids`, exactly as the decode step gathers at `pos`)."""
+    b = GraphBuilder()
+    C, T = rows, cache_len
+    H, A, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd, F = cfg.head_dim, cfg.d_ff
+    L = layers if layers is not None else cfg.num_layers
+    pos_ids = b.input("pos_ids", (C,), dtype="int32")
+    if include_embed:
+        tokens = b.input("tokens", (C,), dtype="int32")
+        x = b.embed(tokens, b.param(("embed",), (cfg.vocab_size, H)),
+                    tag="embed.tok")
+        pe = b.embed(pos_ids, b.param(("pos_embed",),
+                                      (cfg.max_position, H)),
+                     tag="embed.pos")
+        x = b.add(x, pe, tag="embed.pos_add")
+        x = b.add(x, b.param(("type_embed",), (H,), index=0),
+                  tag="embed.type")
+        x = b.layernorm(x, b.param(("ln_embed", "gamma"), (H,)),
+                        b.param(("ln_embed", "beta"), (H,)),
+                        eps=1e-12, tag="embed.ln")
+    else:
+        x = b.input("x", (C, H))
+    for l in range(L):
+        tag = f"enc{l}"
+        proj = _chunk_attention(b, x, l, T=T, H=H, A=A, KV=KV, hd=hd,
+                                qkv_bias=cfg.qkv_bias, rope_theta=None,
+                                pos_ids=pos_ids, tag=tag)
+        x = _post_norm_rest(b, x, proj, l, H=H, F=F, eps=1e-12,
+                            mlp_bias=cfg.mlp_bias, norm_beta=True, tag=tag)
+    if include_embed:
+        x = _logits_head(b, cfg, x)
+    b.output(x)
+    return b.g
+
+
+def _trace_prefill_chunk_dense(cfg: ModelConfig, rows: int, cache_len: int,
+                               layers: Optional[int],
+                               include_embed: bool) -> Graph:
+    """One causal dense prefill slice of `rows` prompt tokens over cache
+    banks of capacity `cache_len` (RoPE rotated at `pos_ids`)."""
+    _check_dense_supported(cfg)
+    b = GraphBuilder()
+    C, T = rows, cache_len
+    H, A, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd, F = cfg.head_dim, cfg.d_ff
+    L = layers if layers is not None else cfg.num_layers
+    theta = cfg.rope_theta if cfg.rope == "standard" else None
+    pos_ids = b.input("pos_ids", (C,), dtype="int32")
+    if include_embed:
+        tokens = b.input("tokens", (C,), dtype="int32")
+        x = b.embed(tokens, b.param(("embed",), (cfg.vocab_size, H)),
+                    tag="embed.tok")
+    else:
+        x = b.input("x", (C, H))
+    for l in range(L):
+        tag = f"blk{l}"
+        h = _dense_norm(b, cfg, x, ("blocks", "ln1"), l, f"{tag}.ln1")
+        attn = _chunk_attention(b, h, l, T=T, H=H, A=A, KV=KV, hd=hd,
+                                qkv_bias=cfg.qkv_bias, rope_theta=theta,
+                                pos_ids=pos_ids, tag=tag)
+        x = b.add(x, attn, tag=f"{tag}.res_a")
+        h2 = _dense_norm(b, cfg, x, ("blocks", "ln2"), l, f"{tag}.ln2")
+        down = _dense_mlp(b, cfg, h2, l, H=H, F=F, tag=tag)
+        x = b.add(x, down, tag=f"{tag}.res_b")
+    x = _dense_norm(b, cfg, x, ("ln_f",), None, "ln_f")
+    if include_embed:
+        x = _logits_head(b, cfg, x)
+    b.output(x)
+    return b.g
+
+
+def trace_prefill_slice_shape(shape, cache_len: int, rows: int, *,
+                              layers: int = 1) -> Graph:
+    """Headless chunked-prefill slice graph from a raw `core.cycles`
+    BertShape — the dims-only path `core.cycles.chunked_prefill_cycles`
+    uses to cost the per-chunk stall bound (no ModelConfig, no biases, no
+    embedding/logits head; per-layer streams are identical, so cycle
+    totals scale linearly in layer count)."""
+    b = GraphBuilder()
+    pos_ids = b.input("pos_ids", (rows,), dtype="int32")
+    x = b.input("x", (rows, shape.hidden))
+    for l in range(layers):
+        tag = f"enc{l}"
+        proj = _chunk_attention(b, x, l, T=cache_len, H=shape.hidden,
+                                A=shape.heads, KV=shape.heads,
+                                hd=shape.head_dim, qkv_bias=False,
+                                rope_theta=None, pos_ids=pos_ids, tag=tag)
+        x = _post_norm_rest(b, x, proj, l, H=shape.hidden, F=shape.d_ff,
+                            eps=1e-12, mlp_bias=False, norm_beta=False,
+                            tag=tag)
+    b.output(x)
+    return b.g
 
 
 def trace_decode_bert_shape(shape, cache_len: int, *, layers: int = 1,

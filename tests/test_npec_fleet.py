@@ -310,6 +310,152 @@ def test_fleet_queue_wait_drops_with_overlays():
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill in the fleet
+# ---------------------------------------------------------------------------
+
+def test_fleet_of_one_chunked_bit_equal_to_lone_chunked_engine():
+    """The fleet-of-1 bit-equality gate extends to the chunked-prefill
+    path: replicate N=1 with prefill_chunk reproduces a lone chunked
+    engine exactly."""
+    cfg = _smoke_cfg("bert_base")
+    lone = NPEEngine(cfg, HW, slots=2, capacity=24, max_new_tokens=6,
+                     prefill_chunk=4)
+    _submit_workload(lambda p, e: lone.submit(p, eos_id=e),
+                     vocab=cfg.vocab_size)
+    ls = lone.run()
+
+    fleet = NPEFleet(cfg, HW, overlays=1, shard="replicate", slots=2,
+                     capacity=24, max_new_tokens=6, prefill_chunk=4)
+    _submit_workload(lambda p, e: fleet.submit(p, eos_id=e),
+                     vocab=cfg.vocab_size)
+    fs = fleet.run()
+
+    assert fs.makespan_cycles == ls.total_cycles
+    lr = {r.rid: r for r in ls.requests}
+    fr = {r.rid: r for r in fs.requests}
+    assert set(lr) == set(fr)
+    for rid, lreq in lr.items():
+        freq = fr[rid]
+        assert freq.generated == lreq.generated
+        assert freq.token_cycles == lreq.token_cycles
+        assert (freq.submit_cycle, freq.admit_cycle,
+                freq.first_token_cycle, freq.finish_cycle) == \
+               (lreq.submit_cycle, lreq.admit_cycle,
+                lreq.first_token_cycle, lreq.finish_cycle)
+
+
+# ---------------------------------------------------------------------------
+# Prefill/decode disaggregation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [None, 4])
+def test_fleet_prefill_decode_conserves_tokens_vs_replicate(chunk):
+    """ISSUE acceptance: a disaggregated fleet emits token streams
+    identical to the replicate fleet for the same seed, conserves every
+    request, and itemizes the KV-shipping transfer cycles."""
+    cfg = _smoke_cfg("bert_base")
+    reqs = SyntheticRequests(cfg.vocab_size, max_prompt=12, rate_rps=8.0,
+                             clock_hz=HW.clock_hz)
+    arrive = reqs.arrival_cycles(8)
+
+    def run(shard):
+        fleet = NPEFleet(cfg, HW, overlays=2, shard=shard, slots=2,
+                         capacity=24, max_new_tokens=6,
+                         prefill_chunk=chunk, prefill_overlays=1)
+        for i in range(8):
+            fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i),
+                         arrival_cycle=int(arrive[i]))
+        return fleet, fleet.run()
+
+    rfleet, rep = run("replicate")
+    dfleet, dis = run("prefill_decode")
+
+    assert ({r.rid: r.generated for r in dis.requests}
+            == {r.rid: r.generated for r in rep.requests})
+    assert sorted(r.rid for r in dis.requests) == list(range(8))
+    assert all(r.done for r in dis.requests)
+    assert all(r.admit_cycle >= r.submit_cycle for r in dis.requests)
+    assert dis.tokens == rep.tokens
+    assert dis.prefills == rep.prefills == 8
+    # the KV ship is itemized: kv_rows_per_token rows per prompt token,
+    # charged MWU out of the prefill overlay AND MRU into the decode one
+    kv = dfleet.disagg_plan.kv_rows_per_token
+    expect = 2 * kv * sum(len(r.prompt) for r in dis.requests)
+    assert kv > 0 and dis.transfer_cycles == expect
+    assert rep.transfer_cycles == 0
+    for eng in dfleet.engines:
+        assert len(eng.pool) == 0
+
+
+def test_partition_prefill_decode_plan():
+    """The KV plan sizes transfers from Graph.kv_exports and rejects
+    streams without them."""
+    from repro.npec.fleet import partition_prefill_decode
+    cfg = _smoke_cfg("bert_base")
+    prefill = npec.compile_prefill(cfg, 8, HW, bits=16)
+    plan = partition_prefill_decode(prefill, prefill_overlays=1,
+                                    decode_overlays=1)
+    assert plan.kv_rows_per_token == len(prefill.graph.kv_exports)
+    send, recv = plan.send_prog(8), plan.recv_prog(8)
+    assert npec.transfer_cycles(send) == plan.kv_rows_per_token * 8
+    assert npec.transfer_cycles(recv) == plan.kv_rows_per_token * 8
+    assert send is plan.send_prog(8)                  # memoized
+    # a model stream (no kv exports) is rejected with a pointer
+    model = npec.compile_model(cfg, 8, HW, bits=16)
+    with pytest.raises(ValueError):
+        partition_prefill_decode(model, prefill_overlays=1,
+                                 decode_overlays=1)
+    with pytest.raises(ValueError):
+        NPEFleet(cfg, HW, overlays=2, shard="prefill_decode", slots=2,
+                 capacity=24, prefill_overlays=2)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: same seed + config => byte-identical reports
+# ---------------------------------------------------------------------------
+
+def _fleet_report_json(shard, n, cfg, **kw):
+    import json
+    fleet = NPEFleet(cfg, HW, overlays=n, shard=shard, **kw)
+    if shard == "expert":
+        rng = np.random.default_rng(3)
+        for _ in range(6):
+            fleet.submit(rng.integers(0, cfg.vocab_size, (fleet.seq,),
+                                      np.int32))
+    else:
+        reqs = SyntheticRequests(cfg.vocab_size, max_prompt=12,
+                                 rate_rps=8.0, clock_hz=HW.clock_hz)
+        arrive = reqs.arrival_cycles(8)
+        for i in range(8):
+            fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i),
+                         arrival_cycle=int(arrive[i]))
+    return json.dumps(fleet.run().report(), sort_keys=True)
+
+
+@pytest.mark.parametrize("shard,n", [
+    ("replicate", 1), ("replicate", 2), ("replicate", 4),
+    ("pipeline", 2), ("pipeline", 4),
+    ("expert", 1), ("expert", 2), ("expert", 4),
+    ("prefill_decode", 2), ("prefill_decode", 4),
+])
+def test_fleet_report_deterministic_across_runs(shard, n):
+    """Same seed + config => byte-identical EngineStats/FleetStats
+    reports across two independent runs, for every shard strategy."""
+    if shard == "expert":
+        cfg = _smoke_cfg("granite_moe_1b_a400m")
+        kw = dict(seq=16)
+    else:
+        cfg = _smoke_cfg("bert_base")
+        if shard == "pipeline":
+            cfg = dataclasses.replace(cfg, num_layers=4)
+        kw = dict(slots=2, capacity=24, max_new_tokens=6)
+        if shard == "prefill_decode":
+            kw.update(prefill_chunk=4, prefill_overlays=1)
+    assert (_fleet_report_json(shard, n, cfg, **kw)
+            == _fleet_report_json(shard, n, cfg, **kw))
+
+
+# ---------------------------------------------------------------------------
 # Cycle-record regression (bit-exact, like the other five records)
 # ---------------------------------------------------------------------------
 
