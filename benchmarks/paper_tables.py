@@ -3,14 +3,15 @@
 One function per paper artifact; each returns rows and prints a compact
 CSV.  benchmarks/run.py drives them all.  Paper-quoted values are printed
 alongside ours with the deviation, so faithfulness is auditable in the
-output itself.  Five tables go beyond the paper: `npec_vs_hand` (compiler
-vs hand-built prefill programs), `npec_decode` (autoregressive
+output itself.  Several tables go beyond the paper: `npec_vs_hand`
+(compiler vs hand-built prefill programs), `npec_decode` (autoregressive
 prefill+decode tokens/sec from compiled KV-cache streams), `npec_moe`
 (compiled MoE routing super-blocks for granite/llama4), `npec_serve`
 (batched decode streams + the continuous-batching serving engine,
-repro.npec.runtime), and `npec_stream` (tile-streaming vs whole-op DAG
+repro.npec.runtime), `npec_stream` (tile-streaming vs whole-op DAG
 scheduling per family and per decode batch — the dag -> streaming
-latency delta).
+latency delta), and `npec_buckets` (length-bucketed + windowed decode:
+per-bucket step costs and the bucketed-vs-fixed engine).
 """
 from __future__ import annotations
 
@@ -360,18 +361,14 @@ def npec_fleet(bits=16) -> List[Dict]:
                              clock_hz=hw.clock_hz)
     n_requests = 24
     arrive = reqs.arrival_cycles(n_requests)
-    decode_prog = None
-    prefill_cache: Dict[tuple, object] = {}    # keyed (seq, chunk)
+    from repro.npec.runtime import StreamCache
+    shared = StreamCache()     # one typed cache across every fleet below
     for shard, n in (("replicate", 1), ("replicate", 2), ("replicate", 4),
                      ("pipeline", 2), ("pipeline", 4)):
         for rate in (None, 8.0):
             fleet = NPEFleet(cfg, hw, overlays=n, shard=shard, slots=4,
                              capacity=48, max_new_tokens=12, bits=bits,
-                             decode_prog=decode_prog,
-                             prefill_cache=prefill_cache)
-            if decode_prog is None:
-                decode_prog = (fleet.engines[0].decode_prog
-                               if fleet.engines else None)
+                             stream_cache=shared)
             for i in range(n_requests):
                 fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i),
                              arrival_cycle=(int(arrive[i]) if rate
@@ -429,19 +426,16 @@ def npec_disagg(bits=16) -> List[Dict]:
                              clock_hz=hw.clock_hz)
     n_requests = 24
     arrive = reqs.arrival_cycles(n_requests)
-    decode_prog = None
-    prefill_cache: Dict[tuple, object] = {}
+    from repro.npec.runtime import StreamCache
+    shared = StreamCache()
     ms = lambda c: round(1e3 * float(c) / hw.clock_hz, 4)
     out = []
     for shard, chunk in (("replicate", None), ("replicate", 8),
                          ("prefill_decode", None), ("prefill_decode", 8)):
         fleet = NPEFleet(cfg, hw, overlays=2, shard=shard, slots=4,
                          capacity=48, max_new_tokens=12, bits=bits,
-                         decode_prog=decode_prog,
-                         prefill_cache=prefill_cache,
+                         stream_cache=shared,
                          prefill_chunk=chunk, prefill_overlays=1)
-        if decode_prog is None:
-            decode_prog = fleet.engines[0].decode_prog
         for i in range(n_requests):
             fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i),
                          arrival_cycle=int(arrive[i]))
@@ -468,6 +462,77 @@ def npec_disagg(bits=16) -> List[Dict]:
                                if fleet.disagg_plan else 0),
             decode_steps=rep["decode_steps"],
             prefills=rep["prefills"]))
+    return out
+
+
+def npec_buckets(bits=16) -> List[Dict]:
+    """Length-bucketed + windowed decode (docs/serving.md, the stream-
+    cache tentpole): what compiling the decode stream at growing capacity
+    buckets buys over always clocking the full-capacity stream.
+
+    `kind="step"` rows sweep ONE batched decode step (B=16 slots,
+    paper-BERT dims) across the auto bucket ladder 64/128/256/512: the
+    QK^T/AV tiles shrink with the bucket, so a step at positions <= 64
+    costs >= 2x fewer cycles than the capacity-512 stream it replaces
+    (`saving_vs_capacity` is that ratio).  The `mode="window"` row is the
+    ring variant at W=64 — the bucket that NEVER grows (sliding-window
+    families like starcoder2/gemma3): its banded QK^T matches the 64
+    bucket's cost at any position.
+
+    `kind="engine"` rows run the full continuous-batching engine
+    (cost-only) over the EOS-aware ragged-prompt workload at capacity
+    512, fixed vs `seq_buckets="auto"`: every request lives at positions
+    <= 48, so the bucketed engine clocks ALL decode steps on the 64
+    bucket and `total_cycles` drops accordingly, with the per-bucket step
+    counts and migration traffic (1 row/cycle) itemized."""
+    from repro.configs import get_config
+    from repro.core.overlay import NPEHardware
+    from repro.data.pipeline import SyntheticRequests
+    from repro.npec.runtime import NPEEngine, decode_buckets
+
+    hw = NPEHardware(vrwidth=1024)
+    sh = cy.BertShape(seq=64)
+    batch = 16
+    out = []
+    buckets = decode_buckets(512, "auto")
+    base = cy.batched_decode_step_cycles(hw, sh, buckets[-1], batch, bits)
+    for bkt in buckets:
+        r = cy.batched_decode_step_cycles(hw, sh, bkt, batch, bits)
+        out.append(dict(
+            kind="step", mode="bucketed", bucket=bkt, batch=batch,
+            mmu_bits=bits, step_cycles=int(r["total_cycles"]),
+            cycles_per_token=int(r["cycles_per_token"]),
+            tok_s=round(r["tok_s"], 1),
+            saving_vs_capacity=round(
+                base["total_cycles"] / r["total_cycles"], 2)))
+    rw = cy.batched_decode_step_cycles(hw, sh, 64, batch, bits,
+                                       window=True)
+    out.append(dict(
+        kind="step", mode="window", bucket=64, batch=batch,
+        mmu_bits=bits, step_cycles=int(rw["total_cycles"]),
+        cycles_per_token=int(rw["cycles_per_token"]),
+        tok_s=round(rw["tok_s"], 1),
+        saving_vs_capacity=round(
+            base["total_cycles"] / rw["total_cycles"], 2)))
+    cfg = get_config("bert_base")
+    for mode, sb in (("fixed", None), ("bucketed", "auto")):
+        eng = NPEEngine(cfg, hw, slots=8, capacity=512,
+                        max_new_tokens=16, bits=bits, seq_buckets=sb)
+        reqs = SyntheticRequests(cfg.vocab_size, max_prompt=32)
+        for i in range(16):
+            eng.submit(reqs.request(i), eos_id=reqs.eos_id(i))
+        rep = eng.run().report()
+        out.append(dict(
+            kind="engine", arch="bert_base", mode=mode, slots=8,
+            capacity=512, mmu_bits=bits,
+            seq_buckets=rep["seq_buckets"],
+            decode_steps=rep["decode_steps"],
+            decode_steps_by_bucket=rep["decode_steps_by_bucket"],
+            bucket_migrations=rep["bucket_migrations"],
+            migration_cycles=rep["migration_cycles"],
+            total_cycles=rep["total_cycles"],
+            tok_s=rep["tokens_per_sec"],
+            p99_ms=rep["p99_ms"]))
     return out
 
 
@@ -539,6 +604,7 @@ ALL = {
     "npec_decode": npec_decode,
     "npec_moe": npec_moe,
     "npec_serve": npec_serve,
+    "npec_buckets": npec_buckets,
     "npec_stream": npec_stream,
     "npec_fleet": npec_fleet,
     "npec_disagg": npec_disagg,

@@ -15,10 +15,12 @@ tests/test_npec_runtime.py), the tile-streaming vs whole-op DAG
 schedule deltas to results/npec_stream_cycles.json (guarded by
 tests/test_npec_stream.py), and the multi-overlay fleet serving sweep
 (replicate/expert/pipeline sharding) to results/npec_fleet_cycles.json
-(guarded by tests/test_npec_fleet.py), and the chunked-prefill /
+(guarded by tests/test_npec_fleet.py), the chunked-prefill /
 prefill-decode-disaggregation latency table to
 results/npec_disagg_cycles.json (guarded by
-tests/test_npec_serving_props.py).
+tests/test_npec_serving_props.py), and the length-bucketed/windowed
+decode table to results/npec_buckets_cycles.json (guarded by
+tests/test_npec_buckets.py).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -92,6 +94,7 @@ def write_npec_record(path: Path, rows=None,
                 else paper_tables.npec_stream() if "stream" in schema
                 else paper_tables.npec_fleet() if "fleet" in schema
                 else paper_tables.npec_disagg() if "disagg" in schema
+                else paper_tables.npec_buckets() if "buckets" in schema
                 else paper_tables.npec_vs_hand())
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(
@@ -124,11 +127,15 @@ def main(argv=None):
                     default="results/npec_disagg_cycles.json",
                     help="chunked-prefill/disaggregation cycle record "
                          "('' disables)")
+    ap.add_argument("--json-out-buckets",
+                    default="results/npec_buckets_cycles.json",
+                    help="length-bucketed/windowed decode cycle record "
+                         "('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks import paper_tables
     npec_rows = decode_rows = moe_rows = serve_rows = stream_rows = None
-    fleet_rows = disagg_rows = None
+    fleet_rows = disagg_rows = buckets_rows = None
     for name, fn in paper_tables.ALL.items():
         t0 = time.perf_counter()
         rows = fn()
@@ -148,6 +155,8 @@ def main(argv=None):
             fleet_rows = rows
         elif name == "npec_disagg":
             disagg_rows = rows
+        elif name == "npec_buckets":
+            buckets_rows = rows
 
     if args.json_out:
         write_npec_record(Path(args.json_out), npec_rows)
@@ -169,6 +178,9 @@ def main(argv=None):
     if args.json_out_disagg:
         write_npec_record(Path(args.json_out_disagg), disagg_rows,
                           schema="npec_disagg_cycles/v1")
+    if args.json_out_buckets:
+        write_npec_record(Path(args.json_out_buckets), buckets_rows,
+                          schema="npec_buckets_cycles/v1")
 
     if not args.skip_kernels:
         _print_table("kernel_microbench", bench_kernels(args.quick))

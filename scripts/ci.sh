@@ -216,6 +216,65 @@ python -m repro.launch.serve --backend npec --smoke --overlays 2 \
     --shard prefill_decode
 python -m repro.launch.serve --backend npec --smoke --prefill-chunk 4
 
+# length-bucketed + windowed decode smoke (stream-cache tentpole): the
+# auto ladder, an explicit crossing-heavy ladder on a 2-overlay fleet,
+# and the ring variant on a sliding-window family (W == cfg.window)
+python -m repro.launch.serve --backend npec --smoke --seq-buckets auto
+python -m repro.launch.serve --backend npec --smoke --overlays 2 \
+    --seq-buckets 8,16
+python -m repro.launch.serve --backend npec --smoke \
+    --arch starcoder2_3b --window 32
+
+# docs drift gate: docs/serving.md's bucket ladder and savings must
+# match stream_cache.decode_buckets/BUCKET_FLOOR and the committed
+# buckets record (results/npec_buckets_cycles.json) — mirrors the
+# serve-record gate above
+python - <<'PY'
+import json
+from pathlib import Path
+
+from repro.npec.runtime import BUCKET_FLOOR, decode_buckets
+
+rec = json.loads(Path("results/npec_buckets_cycles.json").read_text())
+assert rec["schema"] == "npec_buckets_cycles/v1"
+ladder = decode_buckets(512, "auto")
+steps = {r["bucket"]: r for r in rec["rows"]
+         if r["kind"] == "step" and r["mode"] == "bucketed"}
+if tuple(steps) != ladder:
+    raise SystemExit(
+        f"buckets record ladder {tuple(steps)} != decode_buckets(512, "
+        f"'auto') = {ladder} — regenerate via `python -m benchmarks.run`")
+window = [r for r in rec["rows"] if r["mode"] == "window"]
+if (not window or window[0]["bucket"] != BUCKET_FLOOR
+        or window[0]["step_cycles"] != steps[BUCKET_FLOOR]["step_cycles"]):
+    raise SystemExit(
+        "buckets record window row out of sync with the floor bucket "
+        "(the ring must cost exactly its linear bucket)")
+eng = {r["mode"]: r for r in rec["rows"] if r["kind"] == "engine"}
+doc = Path("docs/serving.md").read_text()
+needed = {
+    "bucket floor": f"BUCKET_FLOOR = {BUCKET_FLOOR}",
+    "bucket ladder": "**" + ", ".join(str(b) for b in ladder) + "**",
+    "step cycles": (f"**{steps[BUCKET_FLOOR]['step_cycles']}** cycles "
+                    f"vs **{steps[ladder[-1]]['step_cycles']}**"),
+    "floor saving": f"**{steps[BUCKET_FLOOR]['saving_vs_capacity']}**×",
+    "engine cycles": (f"**{eng['fixed']['total_cycles']} → "
+                      f"{eng['bucketed']['total_cycles']}**"),
+    "engine tok/s": (f"**{eng['fixed']['tok_s']} → "
+                     f"{eng['bucketed']['tok_s']} tok/s**"),
+    "window row": f"{window[0]['step_cycles']} cycles at W={BUCKET_FLOOR}",
+}
+missing = [k for k, token in needed.items() if token not in doc]
+if missing:
+    raise SystemExit(
+        f"docs/serving.md out of sync with "
+        f"results/npec_buckets_cycles.json — missing {missing}")
+print("docs/serving.md bucket constants check OK")
+PY
+
+# the bucketed/windowed conformance + clock/stream-cache bugfix suite
+python -m pytest -q tests/test_npec_buckets.py
+
 # docs drift gate: docs/serving.md's chunked-prefill worked example must
 # cite the cycle constants core.cycles.chunked_prefill_cycles actually
 # computes (full bert_base, 16-bit, S=512 chunk=64 + the S=256 padding

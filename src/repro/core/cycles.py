@@ -301,7 +301,8 @@ def decode_step_cycles(hw: NPEHardware, shape: BertShape, cache_len: int,
 def batched_decode_step_cycles(hw: NPEHardware, shape: BertShape,
                                cache_len: int, batch: int, bits: int,
                                nvu_source: str = "paper",
-                               cycle_model: str = "streaming"
+                               cycle_model: str = "streaming",
+                               window: bool = False
                                ) -> Dict[str, float]:
     """Cycles for ONE *batched* decode step: `batch` serving slots share a
     single compiled stream (repro.npec.trace, `trace_decode(batch=B)`), so
@@ -318,11 +319,14 @@ def batched_decode_step_cycles(hw: NPEHardware, shape: BertShape,
     and `streaming_cycles` report both cycle models; `total_cycles`
     follows `cycle_model` (streaming by default — what the serving engine
     charges).  `ideal_step_cycles` keeps the paper's MAC-rate floor for
-    reference (flat cycles/token in B)."""
+    reference (flat cycles/token in B).  `window=True` compiles the ring
+    (sliding-window) variant: the QK^T tile stays banded at `cache_len`
+    keys forever — the bucket that never grows (docs/serving.md)."""
     from repro import npec
     compiled = npec.compile_decode_bert_shape(hw, shape, cache_len, bits,
                                               nvu_source=nvu_source,
-                                              layers=1, batch=batch)
+                                              layers=1, batch=batch,
+                                              window=window)
     dag = npec.greedy_schedule(compiled)["total_cycles"] * shape.encoders
     stream = npec.stream_schedule(compiled)["total_cycles"] * shape.encoders
     stats = _npec_schedule(compiled, cycle_model)

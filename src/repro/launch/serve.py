@@ -37,7 +37,11 @@ ceil(S/C) causal cache slices (engine and fleet alike — the chunked
 single-engine path bounds the decode stall an unchunked admit causes);
 ``--prefill-overlays P`` sizes the prefill side of a disaggregated
 fleet.  N=1 replicate with no rate and no chunking keeps the lone-engine
-path bit-identical.
+path bit-identical.  ``--seq-buckets {auto,64,128,...}`` compiles the
+decode stream at several capacity buckets and clocks each step at the
+smallest one covering the deepest live slot (cache banks migrate at
+crossings); ``--window W`` serves with a ring cache that never grows —
+the sliding-window families' natural shape (docs/serving.md).
 
 For encoder-only BERT, "serving" is one encoder pass per request batch —
 see examples/serve_bert.py, which reproduces the paper's latency table
@@ -189,7 +193,8 @@ def run_npec_fleet(args) -> Dict[str, float]:
                          max_new_tokens=args.gen, bits=args.bits,
                          cycle_model=args.cycle_model,
                          prefill_chunk=args.prefill_chunk,
-                         prefill_overlays=args.prefill_overlays)
+                         prefill_overlays=args.prefill_overlays,
+                         seq_buckets=args.seq_buckets, window=args.window)
         reqs = SyntheticRequests(cfg.vocab_size,
                                  max_prompt=min(16, max_prompt),
                                  rate_rps=args.rate, clock_hz=hw.clock_hz)
@@ -229,7 +234,8 @@ def run_npec(args) -> Dict[str, float]:
                        max_new_tokens=args.gen, bits=args.bits,
                        npe=args.npe, params=params,
                        cycle_model=args.cycle_model,
-                       prefill_chunk=args.prefill_chunk)
+                       prefill_chunk=args.prefill_chunk,
+                       seq_buckets=args.seq_buckets, window=args.window)
     reqs = SyntheticRequests(cfg.vocab_size, max_prompt=min(16, max_prompt))
     for i in range(args.requests):
         # EOS-aware workload: each request carries a sampled stop token,
@@ -282,12 +288,27 @@ def main(argv=None):
                     help="npec fleet: dedicated prefill overlays in "
                          "--shard prefill_decode (the remaining overlays "
                          "decode)")
+    ap.add_argument("--seq-buckets", default=None,
+                    help="npec: length-bucketed decode — 'auto' (64, 128, "
+                         "... doubling up to --capacity) or a comma list "
+                         "like '64,128,256'; each step clocks the "
+                         "smallest bucket covering the deepest live slot, "
+                         "migrating cache banks at crossings "
+                         "(docs/serving.md)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="npec: ring (sliding-window) decode at W rows — "
+                         "the bucket that never grows; prompts must fit "
+                         "W (sliding-attention families: W must equal the "
+                         "config's window)")
     ap.add_argument("--npe", action="store_true")
     ap.add_argument("--dtype-float32", action="store_true",
                     help="npec: force float32 params (test parity)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload (CI): 2 slots, 4 requests, 4 tokens")
     args = ap.parse_args(argv)
+    if args.seq_buckets and args.seq_buckets != "auto":
+        args.seq_buckets = tuple(
+            int(b) for b in args.seq_buckets.split(","))
     if args.smoke:
         args.batch, args.requests, args.gen = 2, 4, 4
         args.capacity = min(args.capacity, 24)

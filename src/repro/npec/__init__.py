@@ -106,15 +106,19 @@ def compile_decode(cfg: ModelConfig, cache_len: int,
                    hw: Optional[NPEHardware] = None, *, bits: int = 16,
                    nvu_source: str = "paper", layers: Optional[int] = None,
                    include_embed: bool = True,
-                   batch: int = 1) -> CompiledProgram:
+                   batch: int = 1, window: bool = False) -> CompiledProgram:
     """Trace one decode step of `cfg` over a KV cache of capacity
     `cache_len` and lower it to the overlay.  Execute statefully with
     `DecodeSession`.  batch=B compiles the merged B-slot stream the
     serving engine (repro.npec.runtime) clocks: B-row projection tiles,
-    per-slot cache banks, a (B,) pos vector."""
+    per-slot cache banks, a (B,) pos vector.  window=True compiles the
+    ring (sliding-window) variant: appends wrap at `cache_len`, positions
+    grow unbounded, the QK^T tile stays banded at `cache_len` keys (for
+    "sliding"-attention configs cache_len must equal cfg.window)."""
     hw = hw if hw is not None else NPEHardware()
     return lower(trace_decode(cfg, cache_len, layers=layers,
-                              include_embed=include_embed, batch=batch),
+                              include_embed=include_embed, batch=batch,
+                              window=window),
                  hw, bits=bits, nvu_source=nvu_source)
 
 
@@ -122,7 +126,8 @@ def compile_prefill(cfg: ModelConfig, seq: int,
                     hw: Optional[NPEHardware] = None, *, bits: int = 16,
                     nvu_source: str = "paper", layers: Optional[int] = None,
                     include_embed: bool = True,
-                    cache_len: Optional[int] = None) -> CompiledProgram:
+                    cache_len: Optional[int] = None,
+                    window: bool = False) -> CompiledProgram:
     """Trace + lower the *serving prefill* stream for a `seq`-token
     prompt: causal, ends at the logits head, and exports each kv head's
     (S, head_dim) k/v rows (`Graph.kv_exports`) so `DecodeSession.
@@ -131,11 +136,16 @@ def compile_prefill(cfg: ModelConfig, seq: int,
     cache_len=T compiles one *chunked-prefill slice* instead: `seq` prompt
     rows appended into (T, head_dim) cache banks with a row-masked causal
     softmax over the updated cache; `NPEEngine(prefill_chunk=...)` runs
-    ceil(S/chunk) of these, carrying cache_updates between them."""
+    ceil(S/chunk) of these, carrying cache_updates between them.
+
+    window=True marks a *windowed-engine* prefill (ring decode banks):
+    the prompt must fit cfg.window for "sliding"-attention configs, whose
+    gate it lifts — a causal S <= W prefill is exactly the sliding model's
+    own computation."""
     hw = hw if hw is not None else NPEHardware()
     return lower(trace_prefill(cfg, seq, layers=layers,
                                include_embed=include_embed,
-                               cache_len=cache_len),
+                               cache_len=cache_len, window=window),
                  hw, bits=bits, nvu_source=nvu_source)
 
 
@@ -153,11 +163,12 @@ def compile_prefill_slice_shape(hw: NPEHardware, shape, cache_len: int,
 
 def compile_decode_bert_shape(hw: NPEHardware, shape, cache_len: int,
                               bits: int, *, nvu_source: str = "paper",
-                              layers: int = 1,
-                              batch: int = 1) -> CompiledProgram:
+                              layers: int = 1, batch: int = 1,
+                              window: bool = False) -> CompiledProgram:
     """Compile a dims-only decode step for a `core.cycles.BertShape` —
     the per-step cost model behind autoregressive serving tables.
-    batch=B merges B decode slots into one stream (B-row MMU tiles)."""
+    batch=B merges B decode slots into one stream (B-row MMU tiles);
+    window=True makes the banks rings (banded `cache_len`-key QK^T)."""
     return lower(trace_decode_bert_shape(shape, cache_len, layers=layers,
-                                         batch=batch),
+                                         batch=batch, window=window),
                  hw, bits=bits, nvu_source=nvu_source)

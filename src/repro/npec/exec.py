@@ -399,6 +399,10 @@ def execute(program: Union[CompiledProgram, Graph], params: Any,
                 put(node.id, jnp.where(keep[:, None], c, write))
             else:
                 cap = node.shape[-2]
+                if node.attrs.get("window"):
+                    # ring bank: the write wraps — the bank holds the last
+                    # `cap` tokens while the position counter keeps growing
+                    posv = posv % cap
                 hit = (jnp.arange(cap, dtype=jnp.int32) == posv)[:, None]
                 put(node.id, jnp.where(hit, new, c))
         elif op == "slot_select":
@@ -471,6 +475,12 @@ class DecodeSession:
             for name, nid in graph.caches.items()}
         self.capacity = min(graph.node(nid).shape[-2]
                             for nid in graph.caches.values())
+        # ring (sliding-window) streams: cache_append wraps at capacity,
+        # the pos-masked softmax saturates, and positions grow unbounded —
+        # the capacity-exhausted guard does not apply
+        self.windowed = any(n.op == "cache_append"
+                            and n.attrs.get("window")
+                            for n in graph.nodes)
         self.pos = np.zeros(self.slots, np.int64) if self.batched else 0
         self._feed_name = next(n for n in graph.inputs if n != "pos")
 
@@ -493,7 +503,7 @@ class DecodeSession:
         cache capacity instead of silently masking to garbage.
         """
         if not self.batched:
-            if self.pos >= self.capacity:
+            if self.pos >= self.capacity and not self.windowed:
                 raise ValueError(
                     f"KV cache capacity {self.capacity} exhausted at "
                     f"pos={self.pos}; compile a longer stream")
@@ -507,12 +517,14 @@ class DecodeSession:
             return res[0]
         active = (np.ones(self.slots, bool) if active is None
                   else np.asarray(active, bool))
-        over = np.flatnonzero(active & (self.pos >= self.capacity))
-        if over.size:
-            raise ValueError(
-                f"KV cache capacity {self.capacity} exhausted for slot(s) "
-                f"{over.tolist()} at pos={self.pos[over].tolist()}; evict "
-                "or compile a longer stream")
+        if not self.windowed:
+            over = np.flatnonzero(active & (self.pos >= self.capacity))
+            if over.size:
+                raise ValueError(
+                    f"KV cache capacity {self.capacity} exhausted for "
+                    f"slot(s) {over.tolist()} at "
+                    f"pos={self.pos[over].tolist()}; evict or compile a "
+                    "longer stream")
         toks = jnp.asarray(tokens)
         if toks.ndim == 2 and toks.shape[-1] == 1 and toks.dtype != jnp.float32:
             toks = toks[:, 0]
@@ -564,3 +576,58 @@ class DecodeSession:
             arr = arr.reshape(arr.shape[-2:])       # drop any lead axes
             self.caches[bank] = self.caches[bank].at[: arr.shape[0]].set(arr)
         self.pos[slot] = n_tokens
+
+    # --- bucket migration (length-bucketed serving) ------------------------
+
+    def migrate(self, compiled: CompiledProgram) -> int:
+        """Move the live session onto a different-capacity compiled stream
+        (a bucket crossing in the length-bucketed engine): every cache
+        bank's leading rows are copied into a zeroed bank of the new
+        capacity, positions and numerics carry over unchanged.  This is
+        exact — rows past a slot's position are zeros in the old bank and
+        inert under the pos-masked softmax in the new one, so only the
+        live prefix matters.  Returns the number of live bank rows moved
+        (the MRU/MWU row traffic the engine charges for the crossing)."""
+        graph = compiled.graph
+        if self.windowed:
+            raise ValueError("ring (windowed) streams never migrate — "
+                             "the window is the bucket that never grows")
+        if set(graph.caches) != set(self.caches):
+            raise ValueError(
+                "target stream's cache banks do not match this session's "
+                "(same model/batch traced at a different capacity required)")
+        new_capacity = min(graph.node(nid).shape[-2]
+                           for nid in graph.caches.values())
+        deepest = int(np.max(self.pos)) if self.batched else int(self.pos)
+        if new_capacity < deepest:
+            raise ValueError(
+                f"cannot migrate to capacity {new_capacity}: slot "
+                f"position(s) reach {deepest}")
+        moved = 0
+        caches: Dict[str, jnp.ndarray] = {}
+        for name, nid in graph.caches.items():
+            old = self.caches[name]
+            shape = graph.node(nid).shape
+            lead = old.shape[:len(old.shape) - len(shape)]
+            if self.batched:
+                live = self._bank_live_rows(name)
+            else:
+                live = deepest
+            n = min(live, old.shape[-2], shape[-2])
+            buf = jnp.zeros(lead + shape, jnp.float32)
+            if n:
+                buf = buf.at[..., :n, :].set(old[..., :n, :])
+            caches[name] = buf
+            moved += n
+        self.caches = caches
+        self.compiled = compiled
+        self.capacity = new_capacity
+        return moved
+
+    def _bank_live_rows(self, name: str) -> int:
+        """Rows of bank `name` holding live tokens: the owning slot's
+        position (batched banks are named `...slotS.k/v`)."""
+        for s in range(self.slots):
+            if f".slot{s}." in name:
+                return int(self.pos[s])
+        return int(np.max(self.pos))

@@ -66,6 +66,7 @@ from repro.npec.runtime.batch import Request
 from repro.npec.runtime.clock import CycleClock, LatencyTracker
 from repro.npec.runtime.engine import (NPEEngine, chunk_spans,
                                        synthetic_token)
+from repro.npec.runtime.stream_cache import StreamCache, StreamKey
 
 SHARD_STRATEGIES = ("replicate", "expert", "pipeline", "prefill_decode")
 
@@ -200,6 +201,11 @@ class FleetStats:
     busy_cycles: List[int] = field(default_factory=list)
     decode_steps: int = 0
     prefills: int = 0
+    # length-bucketed decode + shared stream cache (engine-backed shards)
+    decode_steps_by_bucket: Dict[int, int] = field(default_factory=dict)
+    bucket_migrations: int = 0
+    migration_cycles: int = 0
+    stream_cache: Dict[str, int] = field(default_factory=dict)
 
     def report(self) -> Dict[str, Any]:
         clock = CycleClock(self.clock_hz)
@@ -233,6 +239,12 @@ class FleetStats:
             else 0.0 for b in self.busy_cycles]
         out["decode_steps"] = self.decode_steps
         out["prefills"] = self.prefills
+        out["decode_steps_by_bucket"] = {
+            str(b): n
+            for b, n in sorted(self.decode_steps_by_bucket.items())}
+        out["bucket_migrations"] = self.bucket_migrations
+        out["migration_cycles"] = self.migration_cycles
+        out.update(self.stream_cache)
         return out
 
 
@@ -245,9 +257,8 @@ class NPEFleet:
                  max_new_tokens: int = 16, bits: int = 16,
                  nvu_source: str = "paper", eos_id: Optional[int] = None,
                  cycle_model: str = "streaming", seq: int = 64,
-                 decode_prog: Optional[CompiledProgram] = None,
-                 prefill_cache: Optional[Dict[tuple,
-                                              CompiledProgram]] = None,
+                 stream_cache: Optional[StreamCache] = None,
+                 seq_buckets=None, window: Optional[int] = None,
                  inference_prog: Optional[CompiledProgram] = None,
                  prefill_chunk: Optional[int] = None,
                  prefill_overlays: int = 1):
@@ -284,6 +295,15 @@ class NPEFleet:
         self.cycle_model = cycle_model
         self.max_new_tokens = max_new_tokens
         self.seq = seq
+        # ONE typed compiled-stream cache backs the whole fleet: engines
+        # share decode buckets and prefill streams through it, and its
+        # keys (family, kind, seq, batch, bits, nvu_source, cache_len,
+        # window) make cross-engine collisions structurally impossible
+        # even in heterogeneous multi-fleet setups sharing one cache
+        self.stream_cache = (stream_cache if stream_cache is not None
+                             else StreamCache())
+        self.seq_buckets = seq_buckets
+        self.window = window
         self.timelines = [OverlayTimeline(i) for i in range(overlays)]
         self.queue = SharedAdmissionQueue()
         self.stats = FleetStats(overlays=overlays, shard=shard,
@@ -298,10 +318,15 @@ class NPEFleet:
                                  if shard == "prefill_decode" else 0)
 
         if shard == "expert":
-            self.inference_prog = (
-                inference_prog if inference_prog is not None else
-                compile_model(cfg, seq, self.hw, bits=bits,
-                              nvu_source=nvu_source))
+            if inference_prog is not None:
+                self.inference_prog = inference_prog
+            else:
+                key = StreamKey(cfg.name, "inference", seq, 1, bits,
+                                nvu_source)
+                self.inference_prog = self.stream_cache.get(
+                    key, lambda: compile_model(cfg, seq, self.hw,
+                                               bits=bits,
+                                               nvu_source=nvu_source))
             self.expert_plan = partition_expert(self.inference_prog,
                                                 overlays)
             return
@@ -309,10 +334,6 @@ class NPEFleet:
         self._bits = bits
         self._nvu_source = nvu_source
         self._capacity = capacity
-        # keyed (seq, chunk) like NPEEngine._prefill_program, so one dict
-        # can back a whole fleet (and the disagg prefill phase) safely
-        self._prefill_progs: Dict[tuple, CompiledProgram] = (
-            prefill_cache if prefill_cache is not None else {})
 
         if shard == "prefill_decode":
             # the KV-shipping plan needs a stream with kv_exports; a
@@ -331,14 +352,12 @@ class NPEFleet:
                                 max_new_tokens=max_new_tokens, bits=bits,
                                 nvu_source=nvu_source, eos_id=eos_id,
                                 cycle_model=cycle_model,
-                                decode_prog=decode_prog,
-                                prefill_cache=self._prefill_progs,
+                                stream_cache=self.stream_cache,
+                                seq_buckets=seq_buckets, window=window,
                                 charge_hook=self._disagg_hook,
                                 queue=view, engine_id=g,
                                 kv_recv=self.disagg_plan.recv_prog)
                 view.engine = eng
-                if decode_prog is None:
-                    decode_prog = eng.decode_prog
                 self.engines.append(eng)
             return
 
@@ -352,13 +371,11 @@ class NPEFleet:
                             max_new_tokens=max_new_tokens, bits=bits,
                             nvu_source=nvu_source, eos_id=eos_id,
                             cycle_model=cycle_model,
-                            decode_prog=decode_prog,
-                            prefill_cache=self._prefill_progs,
+                            stream_cache=self.stream_cache,
+                            seq_buckets=seq_buckets, window=window,
                             charge_hook=hook, queue=view, engine_id=g,
                             prefill_chunk=prefill_chunk)
             view.engine = eng
-            if decode_prog is None:
-                decode_prog = eng.decode_prog     # share across the fleet
             self.engines.append(eng)
 
     # --- request intake ------------------------------------------------
@@ -383,10 +400,19 @@ class NPEFleet:
                else self.max_new_tokens)
         if prompt.size < 1:
             raise ValueError("empty prompt")
-        if prompt.size + new > eng.capacity:
+        # same boundary as NPEEngine.submit: the prefill emits the first
+        # token, so the last decode append lands on row prompt + new - 2
+        # and prompt + new - 1 rows must fit the bank
+        if prompt.size + new - 1 > eng.capacity:
             raise ValueError(
-                f"prompt ({prompt.size}) + max_new_tokens ({new}) exceeds "
+                f"prompt ({prompt.size}) + max_new_tokens ({new}) needs "
+                f"{prompt.size + new - 1} cache rows and exceeds "
                 f"the compiled cache capacity {eng.capacity}")
+        if eng.windowed and prompt.size > eng.window:
+            raise ValueError(
+                f"prompt ({prompt.size}) exceeds the ring window "
+                f"{eng.window}: windowed prefill is exact only for "
+                f"prompts that fit the window")
         return self.queue.submit(
             prompt, max_new_tokens=new,
             eos_id=(eos_id if eos_id is not None else eng.eos_id),
@@ -422,14 +448,19 @@ class NPEFleet:
     def _prefill_prog(self, rows: int,
                       chunk: Optional[int]) -> CompiledProgram:
         """Compiled (chunked) prefill stream for `rows` prompt tokens,
-        memoized under the engine cache's (seq, chunk) convention."""
-        key = (rows, chunk)
-        if key not in self._prefill_progs:
-            self._prefill_progs[key] = compile_prefill(
-                self.cfg, rows, self.hw, bits=self._bits,
-                nvu_source=self._nvu_source,
-                cache_len=(self._capacity if chunk is not None else None))
-        return self._prefill_progs[key]
+        memoized in the shared stream cache under the SAME typed key an
+        engine's `_prefill_program` would use — so the disagg prefill
+        phase and any replicate engine of the same shape share streams,
+        and differently-shaped engines can never collide."""
+        cache_len = self._capacity if chunk is not None else None
+        key = StreamKey(self.cfg.name,
+                        "prefill_chunk" if chunk is not None
+                        else "prefill",
+                        rows, 1, self._bits, self._nvu_source,
+                        cache_len=cache_len, window=False)
+        return self.stream_cache.get(key, lambda: compile_prefill(
+            self.cfg, rows, self.hw, bits=self._bits,
+            nvu_source=self._nvu_source, cache_len=cache_len))
 
     def _stage_costs(self, prog: CompiledProgram
                      ) -> List[Tuple[float, int]]:
@@ -460,6 +491,19 @@ class NPEFleet:
         overlays; the engine's clock lands on the final stage's
         completion, so its continuous batching sees end-to-end stream
         latency while the fleet keeps all stages concurrently busy."""
+        if kind == "migrate":
+            # bucket-crossing bank migration: each stage overlay moves its
+            # OWN layers' banks concurrently (1 row/cycle locally), so the
+            # fleet-visible cost is the per-stage share, not the chained
+            # total — and no stage partition of a compute stream applies
+            t0 = engine.clock.cycles
+            share = cycles / max(1, len(self.timelines))
+            t = t0
+            for tl in self.timelines:
+                _, end = tl.place(t0, share)   # local bank traffic,
+                t = max(t, end)                # not inter-overlay xfer
+            engine.clock.advance_to(t)
+            return
         t = engine.clock.cycles
         for s, (c, x) in enumerate(self._stage_costs(prog)):
             _, t = self.timelines[s].place(t, c, x)
@@ -516,7 +560,20 @@ class NPEFleet:
             + [e.clock.cycles for e in engines] + [0])
         self.stats.busy_cycles = [tl.busy for tl in self.timelines]
         self.stats.transfer_cycles = sum(tl.xfer for tl in self.timelines)
+        self._collect_stream_stats()
         return self.stats
+
+    def _collect_stream_stats(self) -> None:
+        """Fold the engines' bucket counters and the shared stream
+        cache's hit/miss totals into the fleet stats (deterministic:
+        pure counters, no wall-clock)."""
+        for e in self.engines:
+            for b, n in e.stats.decode_steps_by_bucket.items():
+                self.stats.decode_steps_by_bucket[b] = (
+                    self.stats.decode_steps_by_bucket.get(b, 0) + n)
+            self.stats.bucket_migrations += e.stats.bucket_migrations
+            self.stats.migration_cycles += e.stats.migration_cycles
+        self.stats.stream_cache = self.stream_cache.report()
 
     def _run_expert(self) -> FleetStats:
         self.queue.finalize()
@@ -547,6 +604,7 @@ class NPEFleet:
             [tl.free for tl in self.timelines] + [0])
         self.stats.busy_cycles = [tl.busy for tl in self.timelines]
         self.stats.transfer_cycles = sum(tl.xfer for tl in self.timelines)
+        self.stats.stream_cache = self.stream_cache.report()
         return self.stats
 
     def _run_prefill_decode(self) -> FleetStats:
@@ -599,6 +657,7 @@ class NPEFleet:
             + [e.clock.cycles for e in self.engines] + [0])
         self.stats.busy_cycles = [tl.busy for tl in self.timelines]
         self.stats.transfer_cycles = sum(tl.xfer for tl in self.timelines)
+        self._collect_stream_stats()
         return self.stats
 
     def run(self) -> FleetStats:

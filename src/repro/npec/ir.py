@@ -44,7 +44,11 @@ Cache-resident tensors (decode streams, paper's autoregressive serving):
                       projection into slot `pos` (MWU traffic, folded).
                       The node's value is the updated cache view; it is
                       registered in `Graph.cache_updates` under the cache's
-                      name so the executor can persist it.
+                      name so the executor can persist it.  attr window=True
+                      makes the bank a ring: the write wraps to
+                      pos % capacity (sliding-window attention; the
+                      pos-masked softmax saturates to all-valid once
+                      pos >= capacity, which IS the full-ring mask).
 
 Decode-step masking: ``softmax`` takes an optional second input — a scalar
 int32 `pos` node — and masks key slots > pos (attr cache_masked); ``rope``
@@ -262,21 +266,33 @@ class GraphBuilder:
     def cache(self, name, shape, dtype="float32"):
         return self.g.add_cache(name, shape, dtype)
 
-    def cache_append(self, cache, new, pos, *, slot=None, tag=""):
+    def cache_append(self, cache, new, pos, *, slot=None, window=False,
+                     tag=""):
         """slot=s (batched decode streams): `new` is the merged (B, hd)
         projection and `pos` the (B,) per-slot position vector — row s is
         written into this cache bank at pos[s].  Without a slot, a `new`
         operand of C > 1 rows (chunked-prefill slices) writes every row r
         at pos[r] in one burst (attr rows=C); the single-row decode write
-        is unchanged."""
+        is unchanged.
+
+        window=True makes the bank a *ring*: the write lands at
+        pos % capacity (sliding-window attention — the bank holds the
+        last `capacity` tokens and the position counter keeps growing).
+        The pos-masked softmax needs no variant: once pos >= capacity the
+        `slot <= pos` mask saturates to all-valid, which is exactly the
+        full-ring window mask (`models/transformer.decode_step`'s
+        `(arange(wlen) <= pos) | (pos >= wlen)` — the second term is
+        redundant given the first saturates)."""
         cn = self.g.node(cache)
         name = cn.attrs["name"]
         ns = self.g.node(new).shape
         rows = (ns[-2] if slot is None and len(ns) >= 2 and ns[-2] > 1
                 else None)
+        assert not (window and rows), \
+            "ring caches take single-row decode writes only"
         nid = self.g.add("cache_append", (cache, new, pos), cn.shape,
                          cn.dtype, tag=tag or f"{name}.append", name=name,
-                         slot=slot, rows=rows)
+                         slot=slot, rows=rows, window=window)
         self.g.cache_updates[name] = nid
         return nid
 

@@ -23,7 +23,11 @@ from repro.npec.runtime.clock import (CycleClock, LatencyTracker,
                                       inter_token_gaps)
 from repro.npec.runtime.engine import (EngineStats, NPEEngine, chunk_spans,
                                        synthetic_token)
+from repro.npec.runtime.stream_cache import (BUCKET_FLOOR, StreamCache,
+                                             StreamKey, bucket_for,
+                                             decode_buckets)
 
-__all__ = ["CycleClock", "EngineStats", "LatencyTracker", "NPEEngine",
-           "Request", "RequestQueue", "SlotPool", "chunk_spans",
+__all__ = ["BUCKET_FLOOR", "CycleClock", "EngineStats", "LatencyTracker",
+           "NPEEngine", "Request", "RequestQueue", "SlotPool", "StreamCache",
+           "StreamKey", "bucket_for", "chunk_spans", "decode_buckets",
            "inter_token_gaps", "synthetic_token"]

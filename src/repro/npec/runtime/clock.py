@@ -20,25 +20,42 @@ import numpy as np
 
 @dataclass
 class CycleClock:
-    """Monotonic cycle counter at a fixed overlay frequency."""
+    """Monotonic cycle counter at a fixed overlay frequency.
+
+    Scheduled stream costs are floats (tile-streaming schedules produce
+    fractional totals); the integer timestamp carries the fractional
+    remainder between charges instead of rounding every charge
+    independently — per-charge `int(round(...))` accumulates up to half a
+    cycle of drift PER CHARGE, which diverges from the exact float sum by
+    thousands of cycles over a long decode run.  With the carried
+    remainder the timestamp stays within half a cycle of the exact sum
+    forever (tests/test_npec_buckets.py::test_clock_carries_fractional_
+    remainder)."""
     clock_hz: float
     cycles: int = 0
+    _frac: float = 0.0
 
     def advance(self, cycles: float) -> int:
         """Charge a scheduled stream; returns the new timestamp."""
         if cycles < 0:
             raise ValueError(f"cannot advance by {cycles} cycles")
-        self.cycles += int(round(cycles))
+        t = self._frac + cycles
+        step = int(round(t))
+        self._frac = t - step
+        self.cycles += step
         return self.cycles
 
     def advance_to(self, cycle: int) -> int:
         """Jump forward to an absolute timestamp (fleet clock alignment:
         an idle overlay waiting on the shared admission queue skips ahead
-        to the next arrival).  Monotonic — rewinding is an error."""
+        to the next arrival).  Monotonic — rewinding is an error.  The
+        jump aligns to an externally-chosen integer cycle, so the carried
+        fractional remainder resets."""
         if cycle < self.cycles:
             raise ValueError(
                 f"cannot rewind the clock from {self.cycles} to {cycle}")
         self.cycles = int(cycle)
+        self._frac = 0.0
         return self.cycles
 
     def ms(self, cycles: float = None) -> float:

@@ -9,6 +9,15 @@ that serving loop in software, end-to-end on compiled programs:
     batch=B)`: B slots share the stream, weight projections run as B-row
     MMU tiles (occupancy ~B/128 instead of the ~0.78% a 1-row decode
     matmul sustains), each slot keeps its own cache bank and position;
+    with `seq_buckets` the stream is compiled at several capacity
+    buckets and every step clocks the smallest one covering the deepest
+    live slot (bank rows migrate at crossings, 1 row/cycle); `window=W`
+    compiles the ring variant whose banks never grow;
+  * **a typed compiled-stream cache** — every decode bucket and prefill
+    length goes through a `StreamCache` keyed by (family, kind, seq,
+    batch, bits, nvu_source, cache_len, window)
+    (repro.npec.runtime.stream_cache), shareable across a fleet's
+    engines without collision;
   * **compiled prefill per admitted request** — `compile_prefill` at the
     prompt's length (memoized per length): one causal pass seeds the
     slot's cache banks (`DecodeSession.load_slot`) and yields the first
@@ -59,6 +68,8 @@ from repro.npec import (CompiledProgram, DecodeSession, compile_decode,
                         schedule_for, stream_schedule, transfer_cycles)
 from repro.npec.runtime.batch import Request, RequestQueue, SlotPool
 from repro.npec.runtime.clock import CycleClock, LatencyTracker
+from repro.npec.runtime.stream_cache import (StreamCache, StreamKey,
+                                             bucket_for, decode_buckets)
 
 # Cost-only runs have no logits to argmax, but EOS-aware workloads still
 # need *some* deterministic token stream to evict against — draw from a
@@ -115,6 +126,17 @@ class EngineStats:
     decode_step_cycles_streaming: int = 0
     mmu_row_occupancy: float = 0.0
     clock_hz: float = 200e6
+    # length-bucketed decode (docs/serving.md): which compiled capacity
+    # bucket each decode step ran at, plus the bank-migration traffic
+    # (1 row/cycle MRU) paid at bucket crossings.  `decode_step_cycles`
+    # above stays the LARGEST bucket's step cost — the fixed-capacity
+    # engine's number — so bucketed records remain comparable.
+    seq_buckets: tuple = ()
+    window: Optional[int] = None
+    decode_steps_by_bucket: Dict[int, int] = field(default_factory=dict)
+    bucket_migrations: int = 0
+    migration_cycles: int = 0
+    stream_cache: Optional[StreamCache] = None
     latency: Optional[LatencyTracker] = None
     first_token: Optional[LatencyTracker] = None
     # end-to-end latency split at the admission boundary: queue-wait
@@ -150,6 +172,16 @@ class EngineStats:
         out["total_cycles"] = self.total_cycles
         out["decode_steps"] = self.decode_steps
         out["prefills"] = self.prefills
+        out["seq_buckets"] = list(self.seq_buckets)
+        if self.window is not None:
+            out["window"] = self.window
+        out["decode_steps_by_bucket"] = {
+            str(b): n
+            for b, n in sorted(self.decode_steps_by_bucket.items())}
+        out["bucket_migrations"] = self.bucket_migrations
+        out["migration_cycles"] = self.migration_cycles
+        if self.stream_cache is not None:
+            out.update(self.stream_cache.report())
         return out
 
 
@@ -162,21 +194,24 @@ class NPEEngine:
                  npe: bool = False, params: Any = None,
                  nvu_source: str = "paper", eos_id: Optional[int] = None,
                  cycle_model: str = "streaming",
-                 decode_prog: Optional[CompiledProgram] = None,
-                 prefill_cache: Optional[Dict] = None,
+                 stream_cache: Optional[StreamCache] = None,
+                 seq_buckets=None, window: Optional[int] = None,
                  charge_hook=None, queue=None, engine_id: int = 0,
                  prefill_chunk: Optional[int] = None, kv_recv=None):
         """Fleet extension points (repro.npec.fleet) — all default to the
         lone-engine behavior, which stays byte-identical:
 
-          * `decode_prog` / `prefill_cache`: share compiled streams (and
-            their memoized schedules) across a fleet's engines instead of
-            recompiling per overlay;
+          * `stream_cache`: a shared `StreamCache` — a fleet hands the
+            SAME cache to every engine so compiled streams (and their
+            memoized schedules) are compiled once per `StreamKey` instead
+            of once per overlay.  Keys carry (family, kind, seq, batch,
+            bits, nvu_source, cache_len, window), so heterogeneous fleets
+            can never collide streams that merely share a length;
           * `charge_hook(engine, kind, prog, cycles)`: replaces
-            `clock.advance` for every stream charge (`kind` is "prefill"
-            or "decode") — the fleet uses it to place the charge on
-            shared overlay timelines and advance this engine's clock to
-            the placed completion cycle;
+            `clock.advance` for every stream charge (`kind` is "prefill",
+            "decode", "kv_recv" or "migrate") — the fleet uses it to
+            place the charge on shared overlay timelines and advance this
+            engine's clock to the placed completion cycle;
           * `queue`: an external admission queue (anything with
             `__bool__` and `pop()`) — the fleet's shared queue gates
             `__bool__` on this engine's clock vs request arrival cycles.
@@ -199,9 +234,37 @@ class NPEEngine:
             KV rows shipped from a prefill overlay) instead of running a
             prefill; requests arrive with their first token already
             generated.  Cost-only (`params` must be None) and mutually
-            exclusive with `prefill_chunk`."""
+            exclusive with `prefill_chunk`.
+
+        Cache-shape extension points (docs/serving.md):
+
+          * `seq_buckets`: length-bucketed decode — compile the decode
+            stream at several capacity buckets (`"auto"`: 64, 128, ...
+            doubling up to `capacity`; or an explicit ascending list) and
+            clock every step at the SMALLEST bucket covering the deepest
+            live slot, migrating cache banks (1 row/cycle MRU traffic,
+            kind="migrate") at crossings.  Tokens are bit-identical to
+            the fixed-capacity engine: rows past a slot's position are
+            zeros in both banks and inert under the pos-masked softmax;
+          * `window=W`: ring (sliding-window) decode — ONE bucket that
+            never grows: appends wrap at W, positions grow unbounded.
+            Prompts must fit W (a causal S <= W prefill is exactly the
+            sliding model's own computation).  Mutually exclusive with
+            `seq_buckets` and `prefill_chunk`."""
         if cycle_model not in ("dag", "streaming"):
             raise ValueError(f"unknown cycle model {cycle_model!r}")
+        if window is not None:
+            if seq_buckets is not None:
+                raise ValueError(
+                    "window and seq_buckets are mutually exclusive: a "
+                    "ring cache is the one bucket that never grows")
+            if prefill_chunk is not None:
+                raise ValueError(
+                    "windowed engines prefill whole prompts (the prompt "
+                    "fits the window); prefill_chunk is unsupported with "
+                    "window=")
+            if window < 1:
+                raise ValueError(f"window must be >= 1, got {window}")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(
                 f"prefill_chunk must be >= 1, got {prefill_chunk}")
@@ -225,25 +288,47 @@ class NPEEngine:
         self.cycle_model = cycle_model
         self.engine_id = engine_id
         self.charge_hook = charge_hook
-        # compile the batched decode stream FIRST: unsupported families
-        # (moe decode) raise CompileError here, before any scheduling
-        self.decode_prog = (decode_prog if decode_prog is not None else
-                            compile_decode(cfg, capacity, self.hw, bits=bits,
-                                           nvu_source=nvu_source,
-                                           batch=slots))
+        self.stream_cache = (stream_cache if stream_cache is not None
+                             else StreamCache())
+        self.window = int(window) if window is not None else None
+        self.windowed = self.window is not None
+        self.buckets = ((self.window,) if self.windowed
+                        else decode_buckets(capacity, seq_buckets))
+        # compile the batched decode stream(s) FIRST: unsupported families
+        # (moe decode) raise CompileError here, before any scheduling.
+        # All buckets go through the stream cache, so a fleet sharing one
+        # cache compiles each (family, bucket, batch, bits, ...) once.
+        self._decode_progs: Dict[int, CompiledProgram] = {}
+        for bkt in self.buckets:
+            key = StreamKey(cfg.name, "decode", bkt, slots, bits,
+                            nvu_source, window=self.windowed)
+            self._decode_progs[bkt] = self.stream_cache.get(
+                key, lambda b=bkt: compile_decode(
+                    cfg, b, self.hw, bits=bits, nvu_source=nvu_source,
+                    batch=slots, window=self.windowed))
+        self.decode_prog = self._decode_progs[self.buckets[-1]]
         tiling = self.decode_prog.mmu_tiling_summary()
         self.step_cycles_dag = int(
             greedy_schedule(self.decode_prog)["total_cycles"])
         self.step_cycles_streaming = int(
             stream_schedule(self.decode_prog)["total_cycles"])
         self.step_cycles = int(self._schedule_cycles(self.decode_prog))
+        self._bucket_step_cycles = {
+            b: int(self._schedule_cycles(p))
+            for b, p in self._decode_progs.items()}
         self.mmu_row_occupancy = tiling["efficiency"]
+        # every slot's cache banks are per-slot in a batch=B stream, so
+        # migration traffic is banks_per_slot rows per live position
+        self._banks_per_slot = max(
+            1, len(self.decode_prog.graph.caches) // slots)
+        self._bucket = self.buckets[0]
+        self._slot_pos = np.zeros(slots, np.int64)
 
         self.numeric = params is not None
         self._npe_cfg = (cfg.with_npe(quant_bits=bits) if npe else None)
         self.params = params
-        self.session = (DecodeSession(self.decode_prog, params,
-                                      cfg=self._npe_cfg)
+        self.session = (DecodeSession(self._decode_progs[self._bucket],
+                                      params, cfg=self._npe_cfg)
                         if self.numeric else None)
 
         self.clock = CycleClock(self.hw.clock_hz)
@@ -256,21 +341,16 @@ class NPEEngine:
         # slot -> _PrefillState, insertion-ordered: chunked admits stream
         # their slices FIFO, one slice per engine step
         self._prefilling: Dict[int, _PrefillState] = {}
-        # keyed (seq, chunk) — NOT seq alone — so a fleet's shared cache
-        # cannot collide a chunked engine's capacity-T cache slices with
-        # another engine's whole-prompt streams of the same length
-        self._prefill_cache: Dict[tuple, CompiledProgram] = (
-            prefill_cache if prefill_cache is not None else {})
-        for key in self._prefill_cache:
-            assert isinstance(key, tuple) and len(key) == 2, (
-                f"prefill_cache must be keyed by (seq, chunk); got {key!r}")
         self.stats = EngineStats(
             cycle_model=cycle_model,
             decode_step_cycles=self.step_cycles,
             decode_step_cycles_dag=self.step_cycles_dag,
             decode_step_cycles_streaming=self.step_cycles_streaming,
             mmu_row_occupancy=self.mmu_row_occupancy,
-            clock_hz=self.hw.clock_hz)
+            clock_hz=self.hw.clock_hz,
+            seq_buckets=self.buckets,
+            window=self.window,
+            stream_cache=self.stream_cache)
         self.stats.latency = LatencyTracker(self.clock)
         self.stats.first_token = LatencyTracker(self.clock)
         self.stats.queue_wait = LatencyTracker(self.clock)
@@ -293,10 +373,20 @@ class NPEEngine:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {new} (prefill always "
                 "emits the first generated token)")
-        if prompt.size + new > self.capacity:
+        # the prefill itself emits the first generated token, so a request
+        # occupies prompt + new - 1 cache rows: the last decode append
+        # (token new-1 of new) lands on row prompt + new - 2, and
+        # prompt + new == capacity exactly fills the bank
+        if prompt.size + new - 1 > self.capacity:
             raise ValueError(
-                f"prompt ({prompt.size}) + max_new_tokens ({new}) exceeds "
+                f"prompt ({prompt.size}) + max_new_tokens ({new}) needs "
+                f"{prompt.size + new - 1} cache rows and exceeds "
                 f"the compiled cache capacity {self.capacity}")
+        if self.windowed and prompt.size > self.window:
+            raise ValueError(
+                f"prompt ({prompt.size}) exceeds the ring window "
+                f"{self.window}: windowed prefill is exact only for "
+                f"prompts that fit the window")
         req = self.queue.submit(prompt, max_new_tokens=new,
                                 eos_id=(eos_id if eos_id is not None
                                         else self.eos_id),
@@ -308,16 +398,23 @@ class NPEEngine:
 
     def _prefill_program(self, seq: int) -> CompiledProgram:
         """The compiled prefill stream for `seq` rows — the whole prompt
-        (chunk=None) or one cache-bank slice (chunked engines), memoized
-        by (seq, chunk)."""
-        key = (seq, self.prefill_chunk)
-        if key not in self._prefill_cache:
-            self._prefill_cache[key] = compile_prefill(
-                self.cfg, seq, self.hw, bits=self.bits,
-                nvu_source=self.nvu_source,
-                cache_len=(self.capacity if self.prefill_chunk is not None
-                           else None))
-        return self._prefill_cache[key]
+        (kind "prefill") or one cache-bank slice (chunked engines, kind
+        "prefill_chunk" with the bank capacity in the key), memoized in
+        the stream cache.  The typed key — not a bare (seq, chunk) tuple
+        — is what makes cross-engine collisions in a shared fleet cache
+        structurally impossible: two engines only ever share a stream
+        when family, kind, rows, bits, nvu_source, cache_len and window
+        ALL agree."""
+        chunked = self.prefill_chunk is not None
+        cache_len = self.capacity if chunked else None
+        key = StreamKey(self.cfg.name,
+                        "prefill_chunk" if chunked else "prefill",
+                        seq, 1, self.bits, self.nvu_source,
+                        cache_len=cache_len, window=self.windowed)
+        return self.stream_cache.get(key, lambda: compile_prefill(
+            self.cfg, seq, self.hw, bits=self.bits,
+            nvu_source=self.nvu_source, cache_len=cache_len,
+            window=self.windowed))
 
     def _schedule_cycles(self, prog: CompiledProgram) -> float:
         return schedule_for(prog, self.cycle_model)["total_cycles"]
@@ -331,6 +428,41 @@ class NPEEngine:
             self.charge_hook(self, kind, prog, cycles)
         else:
             self.clock.advance(cycles)
+
+    # --- length-bucketed decode -------------------------------------------
+
+    def _ensure_bucket(self, need: int) -> None:
+        """Move the engine onto the SMALLEST compiled bucket covering
+        `need` cache rows, migrating live cache banks on a crossing.
+
+        Exactness: rows past a slot's position are zeros in the old bank
+        and inert under the pos-masked softmax in the new one, so copying
+        the leading `pos` live rows per bank reproduces the fixed-capacity
+        engine's state bit-for-bit (the einsum over extra zero key columns
+        adds exact zeros).  The traffic is charged at the MRU/MWU transfer
+        rate, 1 row/cycle (kind="migrate"), on both the numeric and the
+        cost-only path — `DecodeSession.migrate` returns the rows it
+        actually moved, which must equal the analytic charge."""
+        if self.windowed:
+            return                       # the ring never grows
+        # never shrink below the deepest live slot: its next append lands
+        # at row `pos`, so every bank must keep pos + 1 rows addressable
+        deepest = int(self._slot_pos.max()) if self.slots else 0
+        target = bucket_for(self.buckets, max(int(need), deepest + 1, 1))
+        if target == self._bucket:
+            return
+        rows = int(self._banks_per_slot * self._slot_pos.sum())
+        prog = self._decode_progs[target]
+        if self.numeric:
+            moved = self.session.migrate(prog)
+            assert moved == rows, (
+                f"bucket migration moved {moved} rows but the cost model "
+                f"charged {rows}")
+        self._bucket = target
+        self.stats.bucket_migrations += 1
+        self.stats.migration_cycles += rows
+        if rows:
+            self._charge("migrate", prog, float(rows))
 
     SYNTH_ALPHABET = SYNTH_ALPHABET      # see module-level synthetic_token
 
@@ -355,6 +487,7 @@ class NPEEngine:
         self.stats.queue_wait.record(req.submit_cycle, req.admit_cycle)
         self._charge("prefill", prog, self._schedule_cycles(prog))
         self.stats.prefills += 1
+        self._ensure_bucket(len(req.prompt))   # load needs S rows per bank
         if self.numeric:
             res = execute(prog, self.params, {"tokens": req.prompt},
                           cfg=self._npe_cfg)
@@ -363,6 +496,7 @@ class NPEEngine:
         else:
             tok = self._synthetic_token(req)
         self.pool.bind(slot, req)
+        self._slot_pos[slot] = len(req.prompt)
         req.generated.append(tok)
         req.first_token_cycle = self.clock.cycles
         req.token_cycles.append(self.clock.cycles)
@@ -394,7 +528,9 @@ class NPEEngine:
             req.admit_cycle = self.clock.cycles
             self.stats.queue_wait.record(req.submit_cycle, req.admit_cycle)
         self._charge("kv_recv", prog, transfer_cycles(prog))
+        self._ensure_bucket(len(req.prompt))   # recv fills S rows per bank
         self.pool.bind(slot, req)
+        self._slot_pos[slot] = len(req.prompt)
         assert req.generated, (
             "kv_recv admission expects the prefill overlay's first token")
         self._next_tok[slot] = req.generated[-1]
@@ -435,6 +571,7 @@ class NPEEngine:
         st = self._prefilling.pop(slot)
         req = st.req
         self.stats.prefills += 1
+        self._ensure_bucket(len(req.prompt))   # load needs S rows per bank
         if self.numeric:
             S = len(req.prompt)
             self.session.load_slot(
@@ -442,6 +579,7 @@ class NPEEngine:
             tok = int(np.argmax(st.logits_tail[..., -1, :]))
         else:
             tok = self._synthetic_token(req)
+        self._slot_pos[slot] = len(req.prompt)
         req.generated.append(tok)
         req.first_token_cycle = self.clock.cycles
         req.token_cycles.append(self.clock.cycles)
@@ -458,6 +596,7 @@ class NPEEngine:
         if self.numeric:
             self.session.reset_slot(slot)
         self._next_tok[slot] = 0
+        self._slot_pos[slot] = 0
 
     def step(self) -> bool:
         """Admit into free slots, interleave at most one prefill slice
@@ -482,8 +621,14 @@ class NPEEngine:
             active[s] = False
         if not active.any():
             return admitted > 0 or chunked
-        self._charge("decode", self.decode_prog, self.step_cycles)
+        # every decoding slot's next append lands at row pos, so the step
+        # runs on the smallest bucket covering deepest-pos + 1 rows
+        self._ensure_bucket(int(self._slot_pos[active].max()) + 1)
+        self._charge("decode", self._decode_progs[self._bucket],
+                     self._bucket_step_cycles[self._bucket])
         self.stats.decode_steps += 1
+        self.stats.decode_steps_by_bucket[self._bucket] = \
+            self.stats.decode_steps_by_bucket.get(self._bucket, 0) + 1
         if self.numeric:
             out = np.asarray(self.session.step(self._next_tok,
                                                active=active))
@@ -494,6 +639,7 @@ class NPEEngine:
                 if slot in self._prefilling:
                     continue
                 next_tok[slot] = self._synthetic_token(req)
+        self._slot_pos[active] += 1            # this step's cache appends
         for slot, req in self.pool.active():
             if slot in self._prefilling:
                 continue

@@ -195,12 +195,18 @@ def _trace_bert(cfg: ModelConfig, seq: int, layers: Optional[int],
 # Dense decoder family (pre-norm GQA + gated/plain MLP)
 # ---------------------------------------------------------------------------
 
-def _check_block_supported(cfg: ModelConfig, *, moe_ok: bool = False) -> None:
+def _check_block_supported(cfg: ModelConfig, *, moe_ok: bool = False,
+                           window_ok: bool = False) -> None:
     """Feature gates shared by the dense and moe families; `moe_ok` lets
-    the moe tracer accept the MoE config it exists to lower."""
+    the moe tracer accept the MoE config it exists to lower, `window_ok`
+    lets the windowed decode tracers accept "sliding" attention (a ring
+    cache of capacity cfg.window IS sliding-window attention — see
+    `trace_decode(window=True)`)."""
+    attn_gap = (cfg.attention != "full"
+                and not (window_ok and cfg.attention == "sliding"))
     for feat, msg in (
             (cfg.moe is not None and not moe_ok, "MoE routing"),
-            (cfg.attention != "full", f"{cfg.attention!r} attention streams"),
+            (attn_gap, f"{cfg.attention!r} attention streams"),
             (cfg.parallel_block, "parallel attn+mlp blocks"),
             (cfg.qk_norm, "per-head qk-norm"),
             (cfg.logit_softcap > 0, "logit softcapping"),
@@ -214,13 +220,15 @@ def _check_block_supported(cfg: ModelConfig, *, moe_ok: bool = False) -> None:
                 "(see ROADMAP.md Open items)")
 
 
-def _check_dense_supported(cfg: ModelConfig) -> None:
-    _check_block_supported(cfg, moe_ok=False)
+def _check_dense_supported(cfg: ModelConfig, *,
+                           window_ok: bool = False) -> None:
+    _check_block_supported(cfg, moe_ok=False, window_ok=window_ok)
 
 
 def _trace_dense(cfg: ModelConfig, seq: int, layers: Optional[int],
-                 include_embed: bool, *, export_kv: bool = False) -> Graph:
-    _check_dense_supported(cfg)
+                 include_embed: bool, *, export_kv: bool = False,
+                 window_ok: bool = False) -> Graph:
+    _check_dense_supported(cfg, window_ok=window_ok)
     b = GraphBuilder()
     S, H, A, KV = seq, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
     hd, F = cfg.head_dim, cfg.d_ff
@@ -459,7 +467,8 @@ def _decode_attention(b: GraphBuilder, x: int, l: int, *, T: int, H: int,
                       A: int, KV: int, hd: int, qkv_bias: bool,
                       rope_theta: Optional[float], pos: int,
                       tag: str, B: int = 1,
-                      pos_slots: Optional[list] = None) -> int:
+                      pos_slots: Optional[list] = None,
+                      window: bool = False) -> int:
     """Cached one-token attention; returns the output-projection node.
 
     Per kv head: the new k/v appended into the (T, hd) cache at `pos`
@@ -481,13 +490,18 @@ def _decode_attention(b: GraphBuilder, x: int, l: int, *, T: int, H: int,
     merge across slots because every slot attends to a different cache.
     `pos_slots[s]` is the hoisted scalar slot_select of pos for softmax
     masking.
+
+    window=True makes every cache bank a ring (sliding-window attention):
+    the append wraps at T and the pos-masked softmax saturates to the full
+    T-slot ring once pos >= T — the QK^T tile stays (g, T) with T = the
+    window length, never the full context, which is the banded-tile win.
     """
     g = A // KV
     if B > 1:
         return _decode_attention_batched(
             b, x, l, T=T, H=H, A=A, KV=KV, hd=hd, qkv_bias=qkv_bias,
             rope_theta=rope_theta, pos=pos, pos_slots=pos_slots, tag=tag,
-            B=B)
+            B=B, window=window)
     z_groups = []
     for j in range(KV):
         ck = (j * hd, (j + 1) * hd)
@@ -504,8 +518,8 @@ def _decode_attention(b: GraphBuilder, x: int, l: int, *, T: int, H: int,
                                 cols=ck), bias=bv, tag=f"{tag}.kv{j}.v")
         kc = b.cache(f"{tag}.kv{j}.k", (T, hd))
         vc = b.cache(f"{tag}.kv{j}.v", (T, hd))
-        kc = b.cache_append(kc, k, pos)
-        vc = b.cache_append(vc, v, pos)
+        kc = b.cache_append(kc, k, pos, window=window)
+        vc = b.cache_append(vc, v, pos, window=window)
         q_heads = []
         for gi in range(g):
             i = j * g + gi
@@ -537,7 +551,7 @@ def _decode_attention_batched(b: GraphBuilder, x: int, l: int, *, T: int,
                               H: int, A: int, KV: int, hd: int,
                               qkv_bias: bool, rope_theta: Optional[float],
                               pos: int, pos_slots: list, tag: str,
-                              B: int) -> int:
+                              B: int, window: bool = False) -> int:
     """B-slot cached attention over a merged (B, H) hidden state: merged
     B-row k/v/q projections, per-slot cache banks + masked attention
     streams, and a merged B-row output projection.  See _decode_attention.
@@ -561,8 +575,8 @@ def _decode_attention_batched(b: GraphBuilder, x: int, l: int, *, T: int,
         for s in range(B):
             kc = b.cache(f"{tag}.kv{j}.slot{s}.k", (T, hd))
             vc = b.cache(f"{tag}.kv{j}.slot{s}.v", (T, hd))
-            kc = b.cache_append(kc, k, pos, slot=s)
-            vc = b.cache_append(vc, v, pos, slot=s)
+            kc = b.cache_append(kc, k, pos, slot=s, window=window)
+            vc = b.cache_append(vc, v, pos, slot=s, window=window)
             banks.append((kc, vc))
         q_heads = []
         for gi in range(g):
@@ -622,7 +636,7 @@ def _decode_inputs(b: GraphBuilder, batch: int):
 
 def _trace_decode_bert(cfg: ModelConfig, cache_len: int,
                        layers: Optional[int], include_embed: bool,
-                       batch: int = 1) -> Graph:
+                       batch: int = 1, window: bool = False) -> Graph:
     """Causal incremental BERT step, mirroring models/bert.decode_step
     (post-norm blocks, learned positions gathered at `pos`)."""
     b = GraphBuilder()
@@ -649,7 +663,7 @@ def _trace_decode_bert(cfg: ModelConfig, cache_len: int,
         proj = _decode_attention(b, x, l, T=T, H=H, A=A, KV=KV, hd=hd,
                                  qkv_bias=cfg.qkv_bias, rope_theta=None,
                                  pos=pos, tag=tag, B=batch,
-                                 pos_slots=pos_slots)
+                                 pos_slots=pos_slots, window=window)
         x = _post_norm_rest(b, x, proj, l, H=H, F=F, eps=1e-12,
                             mlp_bias=cfg.mlp_bias, norm_beta=True, tag=tag)
     if include_embed:
@@ -660,10 +674,11 @@ def _trace_decode_bert(cfg: ModelConfig, cache_len: int,
 
 def _trace_decode_dense(cfg: ModelConfig, cache_len: int,
                         layers: Optional[int], include_embed: bool,
-                        batch: int = 1) -> Graph:
+                        batch: int = 1, window: bool = False) -> Graph:
     """Pre-norm dense decode step, mirroring models/transformer.decode_step
-    (full-attention layers; ring/window caches are a ROADMAP open item)."""
-    _check_dense_supported(cfg)
+    (full-attention layers, or ring caches for "sliding" attention when
+    window=True — see trace_decode)."""
+    _check_dense_supported(cfg, window_ok=window)
     b = GraphBuilder()
     T, H, A, KV = cache_len, cfg.d_model, cfg.num_heads, cfg.num_kv_heads
     hd, F = cfg.head_dim, cfg.d_ff
@@ -682,7 +697,7 @@ def _trace_decode_dense(cfg: ModelConfig, cache_len: int,
         attn = _decode_attention(b, h, l, T=T, H=H, A=A, KV=KV, hd=hd,
                                  qkv_bias=cfg.qkv_bias, rope_theta=theta,
                                  pos=pos, tag=tag, B=batch,
-                                 pos_slots=pos_slots)
+                                 pos_slots=pos_slots, window=window)
         x = b.add(x, attn, tag=f"{tag}.res_a")
         h2 = _dense_norm(b, cfg, x, ("blocks", "ln2"), l, f"{tag}.ln2")
         down = _dense_mlp(b, cfg, h2, l, H=H, F=F, tag=tag)
@@ -699,7 +714,8 @@ _DECODE_TRACERS = {"bert": _trace_decode_bert, "dense": _trace_decode_dense}
 
 def trace_decode(cfg: ModelConfig, cache_len: int, *,
                  layers: Optional[int] = None,
-                 include_embed: bool = True, batch: int = 1) -> Graph:
+                 include_embed: bool = True, batch: int = 1,
+                 window: bool = False) -> Graph:
     """Emit the one-new-token decode graph for `cfg` over a KV cache of
     capacity `cache_len`.
 
@@ -717,6 +733,16 @@ def trace_decode(cfg: ModelConfig, cache_len: int, *,
     projections merge into B-row MMU tiles, `pos` becomes a (B,) vector,
     and each slot keeps its own cache bank — bitwise-equivalent to B
     independent per-sequence rollouts (tests/test_npec_runtime.py).
+
+    window=True compiles the *ring* (sliding-window) variant: cache banks
+    of capacity `cache_len` whose appends wrap at cache_len (cache_append
+    attr window), so positions grow unbounded while the QK^T tile stays
+    banded at `cache_len` keys.  For "sliding"-attention configs
+    (starcoder2) `cache_len` must equal `cfg.window` — the ring then
+    matches `models/transformer.decode_step`'s window caches exactly at
+    EVERY position.  Full-attention configs may also trace windowed (a
+    serving mode: the smallest bucket that never grows) — identical to
+    the full model only while total tokens <= cache_len.
     """
     tracer = _DECODE_TRACERS.get(cfg.family)
     if tracer is None:
@@ -728,13 +754,19 @@ def trace_decode(cfg: ModelConfig, cache_len: int, *,
             "(see ROADMAP.md Open items)")
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
-    return tracer(cfg, cache_len, layers, include_embed, batch)
+    if window and cfg.attention == "sliding" and cache_len != cfg.window:
+        raise CompileError(
+            f"windowed decode for {cfg.name!r} needs cache_len == "
+            f"cfg.window ({cfg.window}), got {cache_len} — any other ring "
+            "capacity diverges from the model's sliding-window mask")
+    return tracer(cfg, cache_len, layers, include_embed, batch, window)
 
 
 def trace_prefill(cfg: ModelConfig, seq: int, *,
                   layers: Optional[int] = None,
                   include_embed: bool = True,
-                  cache_len: Optional[int] = None) -> Graph:
+                  cache_len: Optional[int] = None,
+                  window: bool = False) -> Graph:
     """Emit the *serving prefill* graph for a `seq`-token prompt: a causal
     prefill pass whose per-kv-head post-rope (S, hd) k/v tensors are
     registered in `Graph.kv_exports` under the decode streams' canonical
@@ -758,7 +790,18 @@ def trace_prefill(cfg: ModelConfig, seq: int, *,
     has.  Executing ceil(S/chunk) such slices (carrying cache_updates
     between them, as `NPEEngine` does) seeds a cache bank bitwise-equal
     to one whole-prompt prefill in float mode.
+
+    window=True serves a *windowed* engine (ring decode banks of capacity
+    cfg.window): the prompt must fit the window — a causal prefill of
+    S <= W tokens is EXACTLY what the sliding-window model computes (every
+    query's window covers the whole prefix) — which also lifts the
+    "sliding"-attention gate for those configs.
     """
+    if window and cfg.attention == "sliding" and seq > cfg.window:
+        raise CompileError(
+            f"windowed prefill for {cfg.name!r} holds at most cfg.window "
+            f"({cfg.window}) prompt tokens, got {seq} — longer prompts "
+            "need banded prefill tiles (see ROADMAP.md Open items)")
     if cache_len is not None:
         if seq > cache_len:
             raise ValueError(
@@ -773,7 +816,8 @@ def trace_prefill(cfg: ModelConfig, seq: int, *,
                     f"npec serving prefill needs a causal model; "
                     f"{cfg.name!r} is bidirectional")
             return _trace_prefill_chunk_dense(cfg, seq, cache_len, layers,
-                                              include_embed)
+                                              include_embed,
+                                              window_ok=window)
     elif cfg.family == "bert":
         return _trace_bert(cfg, seq, layers, include_embed, causal=True,
                            logits_head=True, export_kv=True)
@@ -782,7 +826,8 @@ def trace_prefill(cfg: ModelConfig, seq: int, *,
             raise CompileError(
                 f"npec serving prefill needs a causal model; {cfg.name!r} "
                 "is bidirectional")
-        return _trace_dense(cfg, seq, layers, include_embed, export_kv=True)
+        return _trace_dense(cfg, seq, layers, include_embed, export_kv=True,
+                            window_ok=window)
     gap = ("MoE decode streams (per-token capacity-1 dispatch)"
            if cfg.family == "moe"
            else f"decode streams for family {cfg.family!r}")
@@ -893,10 +938,11 @@ def _trace_prefill_chunk_bert(cfg: ModelConfig, rows: int, cache_len: int,
 
 def _trace_prefill_chunk_dense(cfg: ModelConfig, rows: int, cache_len: int,
                                layers: Optional[int],
-                               include_embed: bool) -> Graph:
+                               include_embed: bool, *,
+                               window_ok: bool = False) -> Graph:
     """One causal dense prefill slice of `rows` prompt tokens over cache
     banks of capacity `cache_len` (RoPE rotated at `pos_ids`)."""
-    _check_dense_supported(cfg)
+    _check_dense_supported(cfg, window_ok=window_ok)
     b = GraphBuilder()
     C, T = rows, cache_len
     H, A, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
@@ -951,7 +997,7 @@ def trace_prefill_slice_shape(shape, cache_len: int, rows: int, *,
 
 
 def trace_decode_bert_shape(shape, cache_len: int, *, layers: int = 1,
-                            batch: int = 1) -> Graph:
+                            batch: int = 1, window: bool = False) -> Graph:
     """Headless decode-step graph from a raw `core.cycles.BertShape` — the
     dims-only path `core.cycles` uses to cost autoregressive serving (no
     ModelConfig, no biases, no embedding/logit head; per-layer streams are
@@ -967,7 +1013,8 @@ def trace_decode_bert_shape(shape, cache_len: int, *, layers: int = 1,
                                  A=shape.heads, KV=shape.heads,
                                  hd=shape.head_dim, qkv_bias=False,
                                  rope_theta=None, pos=pos, tag=tag,
-                                 B=batch, pos_slots=pos_slots)
+                                 B=batch, pos_slots=pos_slots,
+                                 window=window)
         x = _post_norm_rest(b, x, proj, l, H=shape.hidden, F=shape.d_ff,
                             eps=1e-12, mlp_bias=False, norm_beta=False,
                             tag=tag)

@@ -1,0 +1,388 @@
+"""Length-bucketed / windowed decode + compiled-stream cache validation.
+
+Gates (ISSUE 8):
+  * clock — `CycleClock.advance` carries the fractional remainder of
+    every charge instead of rounding each one (the serving-clock drift
+    bugfix): the clock tracks the exact cycle sum to within half a cycle
+    over any charge sequence;
+  * stream cache — typed `StreamKey`s make cross-engine collisions in a
+    shared (heterogeneous-fleet) cache structurally impossible: engines
+    differing only in bits get distinct compiled streams, identical
+    engines share one compile;
+  * boundary — `submit()` admits exactly-full requests
+    (prompt + new - 1 == capacity): the prefill emits the first token, so
+    the LAST decode append lands on bank row capacity - 1, not capacity
+    (the off-by-one the old guard encoded).  Checked unchunked, chunked,
+    and at the `DecodeSession` bank level;
+  * conformance — the bucketed engine (decode compiled at several
+    capacity buckets, banks migrating at crossings) and the windowed
+    engine (ring banks wrapping at W) generate tokens IDENTICAL to the
+    fixed-capacity engine / a per-sequence ring rollout, across family
+    and NPE mode;
+  * cycles — per-bucket step cycles are monotone in bucket capacity, the
+    ring variant costs exactly its linear W-bucket, and recomputing the
+    buckets table reproduces results/npec_buckets_cycles.json bit-exactly
+    (including the >= 2x step-cycle saving at positions <= 64 on
+    bert_base that motivates bucketing).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import cycles as cy
+from repro.core.overlay import NPEHardware
+from repro import npec
+from repro.npec.runtime import (NPEEngine, StreamCache, StreamKey,
+                                bucket_for, decode_buckets)
+from repro.npec.runtime.clock import CycleClock
+
+HW = NPEHardware(vrwidth=1024)
+
+
+def _smoke_cfg(name="bert_base"):
+    from repro.configs import get_config
+    return dataclasses.replace(get_config(name, smoke=True),
+                               dtype="float32")
+
+
+def _params(cfg):
+    import jax
+    from repro.models import registry
+    return registry.init_params(cfg, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Clock: fractional charges must not drift (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+def test_clock_carries_fractional_remainder():
+    """10_000 charges of 0.3 cycles are 3000 cycles.  Per-charge
+    `int(round(...))` — the old behavior — rounds every one to 0 and
+    loses ALL of them; the carried remainder keeps the integer clock
+    within half a cycle of the exact sum at every point."""
+    clk = CycleClock(200e6)
+    for _ in range(10_000):
+        clk.advance(0.3)
+    assert abs(clk.cycles - 3000) <= 1
+    # and a mixed stream stays within 0.5 of its exact running sum
+    clk = CycleClock(200e6)
+    exact = 0.0
+    rng = np.random.default_rng(0)
+    for c in rng.uniform(0.0, 7.0, size=500):
+        clk.advance(float(c))
+        exact += float(c)
+        assert abs(clk.cycles - exact) <= 0.5 + 1e-9
+
+
+def test_clock_advance_to_resets_remainder():
+    """`advance_to` pins the clock to an externally-placed completion
+    cycle (fleet timelines); any carried fraction belongs to the old
+    charge stream and must be dropped, not smeared into the next one."""
+    clk = CycleClock(200e6)
+    clk.advance(2.6)                      # cycles=3, remainder -0.4
+    clk.advance_to(10)
+    assert clk.cycles == 10
+    clk.advance(0.4)                      # fresh remainder: rounds to 0
+    assert clk.cycles == 10
+    clk.advance(0.7)                      # 0.4 + 0.7 carried -> 1 cycle
+    assert clk.cycles == 11
+
+
+# ---------------------------------------------------------------------------
+# Bucket grid + typed stream cache
+# ---------------------------------------------------------------------------
+
+def test_decode_buckets_grid():
+    assert decode_buckets(512, None) == (512,)
+    assert decode_buckets(512, "auto") == (64, 128, 256, 512)
+    assert decode_buckets(96, "auto") == (64, 96)
+    assert decode_buckets(48, "auto") == (48,)
+    assert decode_buckets(160, (64, 96)) == (64, 96, 160)
+    assert decode_buckets(160, (64, 96, 160)) == (64, 96, 160)
+    with pytest.raises(ValueError, match="ascending"):
+        decode_buckets(160, (96, 64))
+    with pytest.raises(ValueError, match="exceeds"):
+        decode_buckets(160, (64, 256))
+    with pytest.raises(ValueError, match="capacity"):
+        decode_buckets(0, "auto")
+    with pytest.raises(ValueError, match="empty"):
+        decode_buckets(160, ())
+
+
+def test_bucket_for_picks_smallest_cover():
+    bks = (64, 128, 256)
+    assert bucket_for(bks, 1) == 64
+    assert bucket_for(bks, 64) == 64
+    assert bucket_for(bks, 65) == 128
+    assert bucket_for(bks, 256) == 256
+    with pytest.raises(ValueError, match="covers"):
+        bucket_for(bks, 257)
+
+
+def test_stream_cache_typed_keys_and_counters():
+    cache = StreamCache()
+    with pytest.raises(TypeError, match="StreamKey"):
+        cache.get(("bert_base", "decode", 64), lambda: None)
+    k1 = StreamKey("bert_base", "decode", 64, 4, 16, "paper")
+    k2 = StreamKey("bert_base", "decode", 64, 4, 8, "paper")  # bits differ
+    a = cache.get(k1, lambda: "prog-a")
+    b = cache.get(k2, lambda: "prog-b")
+    assert (a, b) == ("prog-a", "prog-b")
+    assert cache.get(k1, lambda: "never-built") == "prog-a"
+    assert cache.report() == {"stream_cache_entries": 2,
+                              "stream_cache_hits": 1,
+                              "stream_cache_misses": 2}
+
+
+def test_shared_cache_heterogeneous_engines_no_collision():
+    """ISSUE satellite: the old `_prefill_cache` was keyed by
+    ``(seq, chunk)`` alone, so a heterogeneous fleet sharing it would
+    have served one engine's compiled streams to another.  With typed
+    keys, two engines differing ONLY in bits draw distinct programs from
+    one shared cache, while a third engine identical to the first reuses
+    its compiles as hits."""
+    cfg = _smoke_cfg("bert_base")
+    shared = StreamCache()
+    e16 = NPEEngine(cfg, HW, slots=2, capacity=16, max_new_tokens=3,
+                    bits=16, stream_cache=shared)
+    e8 = NPEEngine(cfg, HW, slots=2, capacity=16, max_new_tokens=3,
+                   bits=8, stream_cache=shared)
+    assert e16.decode_prog is not e8.decode_prog
+    assert e16.step_cycles != e8.step_cycles     # 8-bit MMU tiles differ
+    for eng in (e16, e8):
+        for n in (5, 9):
+            eng.submit(np.arange(n, dtype=np.int32) % cfg.vocab_size)
+        eng.run()
+    # same (family, kind, seq, batch, nvu_source) twice — only bits split
+    # them, which is exactly the collision the bare (seq, chunk) key had
+    assert shared.misses == len(shared) == 6     # 2 decode + 2x2 prefill
+    assert {k.bits for k in shared.keys()} == {8, 16}
+    twin = NPEEngine(cfg, HW, slots=2, capacity=16, max_new_tokens=3,
+                     bits=16, stream_cache=shared)
+    assert twin.decode_prog is e16.decode_prog   # identical identity: hit
+    assert shared.misses == 6 and shared.hits >= 1
+
+
+# ---------------------------------------------------------------------------
+# Submit boundary: prompt + new - 1 == capacity exactly fills the bank
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [None, 2])
+def test_engine_submit_boundary_exact_fill(chunk):
+    """The prefill emits the first generated token, so a request needs
+    prompt + new - 1 rows: the old `prompt + new > capacity` guard
+    rejected exactly-full requests one row early (ISSUE bugfix).  Both
+    the whole-prompt and the chunked admit must accept the boundary and
+    reject one token past it."""
+    cfg = _smoke_cfg("bert_base")
+    eng = NPEEngine(cfg, HW, slots=2, capacity=8, max_new_tokens=4,
+                    prefill_chunk=chunk)
+    req = eng.submit(np.arange(5, dtype=np.int32))   # 5 + 4 - 1 == 8: fits
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=5)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(np.arange(6, dtype=np.int32))     # 6 + 4 - 1 == 9 > 8
+    eng.run()
+    assert req.done and len(req.generated) == 4
+
+
+def test_session_last_append_lands_on_last_row():
+    """Bank-level check of the same boundary: seeding slot 0 at pos S and
+    decoding until the capacity-C bank is full puts the LAST
+    `cache_append` on row C - 1, the bank's final row — and only the step
+    past that overflows."""
+    cfg = _smoke_cfg("bert_base")
+    params = _params(cfg)
+    C, S = 6, 3
+    import jax
+    with jax.disable_jit():
+        pre = npec.compile_prefill(cfg, S, HW, bits=16)
+        res = npec.execute(
+            pre, params, {"tokens": np.arange(S, dtype=np.int32)})
+        sess = npec.DecodeSession(
+            npec.compile_decode(cfg, C, HW, bits=16, batch=2), params)
+        sess.load_slot(0, res.kv_exports, S)
+        toks = np.ones(2, np.int32)
+        only0 = np.array([True, False])
+        for _ in range(C - S):            # appends at rows S .. C-1
+            sess.step(toks, active=only0)
+        assert list(sess.pos) == [C, 0]
+        slot0 = [n for n in sess.caches if "slot0" in n]
+        assert slot0
+        for name in slot0:
+            arr = np.asarray(sess.caches[name])
+            assert np.any(arr[..., C - 1, :] != 0), \
+                f"{name}: final append missed the last bank row"
+        with pytest.raises(ValueError, match=r"slot"):
+            sess.step(toks, active=only0)     # row C does not exist
+
+
+# ---------------------------------------------------------------------------
+# Conformance: bucketed / windowed tokens identical to the fixed engine
+# ---------------------------------------------------------------------------
+
+def _run_engine(cfg, params, *, npe=False, bits=16, **kw):
+    eng = NPEEngine(cfg, HW, slots=2, capacity=24, max_new_tokens=4,
+                    npe=npe, bits=bits, params=params, **kw)
+    for n in (3, 12, 18, 5):
+        eng.submit((np.arange(n, dtype=np.int32) * 7 + 1) % cfg.vocab_size)
+    return eng.run()
+
+
+@pytest.mark.parametrize("name,npe,bits", [
+    ("bert_base", False, 16),
+    ("glm4_9b", False, 16),
+    ("bert_base", True, 8),
+], ids=["bert-float", "glm-float", "bert-npe8"])
+def test_bucketed_engine_tokens_match_fixed(name, npe, bits):
+    """The ISSUE's central invariant: length-bucketed decode is a pure
+    cycle optimization.  Ragged prompts force bucket crossings (deepest
+    slot walks 8 -> 16 -> 24) with live banks migrating, and every
+    generated token equals the fixed-capacity engine's, in float and NPE
+    mode alike."""
+    import jax
+    cfg = _smoke_cfg(name)
+    params = _params(cfg)
+    with jax.disable_jit():
+        fixed = _run_engine(cfg, params, npe=npe, bits=bits)
+        bucketed = _run_engine(cfg, params, npe=npe, bits=bits,
+                               seq_buckets=(8, 16))
+    for rf, rb in zip(fixed.requests, bucketed.requests):
+        assert rf.generated == rb.generated
+    assert bucketed.bucket_migrations >= 1
+    assert len(bucketed.decode_steps_by_bucket) >= 2
+    assert bucketed.migration_cycles > 0
+    assert sum(bucketed.decode_steps_by_bucket.values()) \
+        == bucketed.decode_steps == fixed.decode_steps
+    # smaller streams, same tokens: the whole point
+    assert bucketed.total_cycles < fixed.total_cycles
+
+
+def test_windowed_engine_matches_ring_rollout():
+    """`window=W` decode on a sliding-attention family: the engine's ring
+    banks wrap (positions run past W) and every token equals a
+    per-sequence ring `DecodeSession` rollout seeded by the same windowed
+    prefill."""
+    import jax
+    cfg = dataclasses.replace(_smoke_cfg("starcoder2_3b"), window=8)
+    W = cfg.window
+    params = _params(cfg)
+    prompts = [(np.arange(5, dtype=np.int32) * 3 + 2) % cfg.vocab_size,
+               (np.arange(3, dtype=np.int32) * 5 + 1) % cfg.vocab_size]
+    with jax.disable_jit():
+        eng = NPEEngine(cfg, HW, slots=2, capacity=24, max_new_tokens=12,
+                        window=W, params=params)
+        for p in prompts:
+            eng.submit(p)
+        stats = eng.run()
+        assert stats.window == W and stats.seq_buckets == (W,)
+        import jax.numpy as jnp
+        for p, req in zip(prompts, stats.requests):
+            sess = npec.DecodeSession(
+                npec.compile_decode(cfg, W, HW, bits=16, window=True),
+                params)
+            for t in range(len(p)):       # prompt, one ring step at a time
+                out = sess.step(jnp.asarray(p[t:t + 1][None]))
+            toks = [int(np.argmax(np.asarray(out)[0, -1]))]
+            for _ in range(11):           # positions cross W: ring wraps
+                out = sess.step(jnp.asarray([[toks[-1]]], dtype=jnp.int32))
+                toks.append(int(np.argmax(np.asarray(out)[0, -1])))
+            assert int(sess.pos) == len(p) + 11 > W
+            assert toks == req.generated
+
+
+def test_windowed_engine_guards():
+    cfg = dataclasses.replace(_smoke_cfg("starcoder2_3b"), window=8)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        NPEEngine(cfg, HW, slots=2, capacity=24, window=8,
+                  seq_buckets="auto")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        NPEEngine(cfg, HW, slots=2, capacity=24, window=8, prefill_chunk=2)
+    eng = NPEEngine(cfg, HW, slots=2, capacity=24, max_new_tokens=4,
+                    window=8)
+    with pytest.raises(ValueError, match="ring window"):
+        eng.submit(np.arange(9, dtype=np.int32))     # prompt > W
+    eng.submit(np.arange(8, dtype=np.int32))         # prompt == W is exact
+
+
+# ---------------------------------------------------------------------------
+# Cycles: monotone buckets, ring == linear-W cost, record regression
+# ---------------------------------------------------------------------------
+
+def test_bucket_step_cycles_monotone():
+    """Smaller buckets never cost more: the gate that makes bucketed
+    total cycles <= fixed-capacity total cycles for ANY workload (modulo
+    migration traffic, which the conformance test bounds separately)."""
+    cfg = _smoke_cfg("bert_base")
+    eng = NPEEngine(cfg, HW, slots=4, capacity=512, seq_buckets="auto")
+    assert eng.buckets == (64, 128, 256, 512)
+    costs = [eng._bucket_step_cycles[b] for b in eng.buckets]
+    assert costs == sorted(costs)
+    assert costs[0] < costs[-1]
+    assert eng.step_cycles == costs[-1]   # reported cost stays comparable
+
+
+def test_window_costs_its_linear_bucket():
+    """The ring stream's step cost equals the linear stream's at the same
+    capacity — wrapping changes the append address, not the tile shapes —
+    so `window=W` is exactly 'the W-bucket forever'."""
+    sh = cy.BertShape(seq=64)
+    lin = cy.batched_decode_step_cycles(HW, sh, 64, 8, 16)
+    ring = cy.batched_decode_step_cycles(HW, sh, 64, 8, 16, window=True)
+    assert ring["total_cycles"] == lin["total_cycles"]
+
+
+def test_fleet_bucketed_deterministic_and_reported():
+    """Bucketed decode through the fleet: replicate overlays share ONE
+    stream cache (each bucket compiles once fleet-wide), per-bucket step
+    counts and migrations surface in the fleet report, and the whole run
+    is bit-deterministic."""
+    from repro.data.pipeline import SyntheticRequests
+    from repro.npec.fleet import NPEFleet
+    cfg = _smoke_cfg("bert_base")
+
+    def run():
+        fleet = NPEFleet(cfg, HW, overlays=2, shard="replicate", slots=2,
+                         capacity=32, max_new_tokens=4,
+                         seq_buckets=(8, 16, 32))
+        reqs = SyntheticRequests(cfg.vocab_size, max_prompt=12)
+        for i in range(6):
+            fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i))
+        return fleet.run().report()
+
+    r1, r2 = run(), run()
+    assert r1 == r2
+    assert set(r1["decode_steps_by_bucket"]) <= {"8", "16", "32"}
+    assert sum(r1["decode_steps_by_bucket"].values()) == r1["decode_steps"]
+    # 3 decode buckets compiled ONCE for 2 engines: the second engine's
+    # bucket compiles are all hits
+    assert r1["stream_cache_hits"] >= 3
+    assert r1["bucket_migrations"] >= 0                  # key present
+
+
+def test_buckets_cycle_record_regression():
+    """results/npec_buckets_cycles.json reproduces bit-exactly, and its
+    rows carry the ISSUE acceptance gate: bucket-64 decode steps on
+    bert_base cost >= 2x less than the capacity-512 stream, with the
+    sliding-window row alongside."""
+    import json
+    from conftest import RESULTS_DIR, assert_cycle_record
+    assert_cycle_record("npec_buckets_cycles.json",
+                        "npec_buckets_cycles/v1", "npec_buckets")
+    rows = json.loads(
+        (RESULTS_DIR / "npec_buckets_cycles.json").read_text())["rows"]
+    steps = {r["bucket"]: r for r in rows if r["kind"] == "step"
+             and r["mode"] == "bucketed"}
+    assert steps[64]["step_cycles"] * 2 <= steps[512]["step_cycles"]
+    assert steps[64]["saving_vs_capacity"] >= 2.0
+    window = [r for r in rows if r["mode"] == "window"]
+    assert window and window[0]["bucket"] == 64
+    engine = {r["mode"]: r for r in rows if r["kind"] == "engine"}
+    assert engine["bucketed"]["total_cycles"] \
+        <= engine["fixed"]["total_cycles"]
+    # the workload lives at positions <= 48, so EVERY decode step clocks
+    # the 64 bucket and no crossing ever happens — that is the saving
+    assert engine["bucketed"]["decode_steps_by_bucket"] == {
+        "64": engine["bucketed"]["decode_steps"]}
+    assert engine["bucketed"]["bucket_migrations"] == 0
