@@ -302,10 +302,10 @@ def npec_serve(batches=(1, 2, 4, 8), bits_list=(8, 16),
             generated_tokens=rep["generated_tokens"],
             p50_ms=rep["p50_ms"], p99_ms=rep["p99_ms"],
             first_token_p50_ms=rep["first_token_p50_ms"],
-            tok_s=rep["tokens_per_sec"],
+            tok_s=round(rep["tokens_per_sec"], 1),
             decode_step_cycles=rep["decode_step_cycles"],
             decode_step_cycles_dag=rep["decode_step_cycles_dag"],
-            mmu_row_occupancy=rep["mmu_row_occupancy"],
+            mmu_row_occupancy=round(rep["mmu_row_occupancy"], 4),
             total_cycles=rep["total_cycles"],
             decode_steps=rep["decode_steps"],
             prefills=rep["prefills"]))
@@ -350,10 +350,15 @@ def npec_fleet(bits=16) -> List[Dict]:
             queue_wait_p50_ms=rep["queue_wait_p50_ms"],
             queue_wait_p99_ms=rep["queue_wait_p99_ms"],
             service_p50_ms=rep["service_p50_ms"],
-            tok_s=rep["tokens_per_sec"],
+            tok_s=round(rep["tokens_per_sec"], 1),
             makespan_cycles=rep["makespan_cycles"],
             transfer_cycles=rep["transfer_cycles"],
-            overlay_util=rep["overlay_util"])
+            overlay_util=rep["overlay_util"],
+            stream_cache_entries=rep.get("stream_cache_entries", 0),
+            stream_cache_hits=rep.get("stream_cache_hits", 0),
+            stream_cache_misses=rep.get("stream_cache_misses", 0),
+            bucket_migrations=rep.get("bucket_migrations", 0),
+            migration_cycles=rep.get("migration_cycles", 0))
 
     # --- bert_base: replicate + pipeline engine fleets -----------------
     cfg = get_config("bert_base")
@@ -455,7 +460,7 @@ def npec_disagg(bits=16) -> List[Dict]:
             decode_gap_p99_ms=(ms(np.percentile(gaps, 99))
                                if gaps.size else 0.0),
             decode_gap_max_ms=(ms(gaps.max()) if gaps.size else 0.0),
-            tok_s=rep["tokens_per_sec"],
+            tok_s=round(rep["tokens_per_sec"], 1),
             makespan_cycles=rep["makespan_cycles"],
             transfer_cycles=rep["transfer_cycles"],
             kv_rows_per_token=(fleet.disagg_plan.kv_rows_per_token
@@ -531,8 +536,11 @@ def npec_buckets(bits=16) -> List[Dict]:
             bucket_migrations=rep["bucket_migrations"],
             migration_cycles=rep["migration_cycles"],
             total_cycles=rep["total_cycles"],
-            tok_s=rep["tokens_per_sec"],
-            p99_ms=rep["p99_ms"]))
+            tok_s=round(rep["tokens_per_sec"], 1),
+            p99_ms=rep["p99_ms"],
+            stream_cache_entries=rep["stream_cache_entries"],
+            stream_cache_hits=rep["stream_cache_hits"],
+            stream_cache_misses=rep["stream_cache_misses"]))
     return out
 
 

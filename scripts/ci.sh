@@ -346,3 +346,73 @@ if missing:
         f"results/npec_disagg_cycles.json — missing {missing}")
 print("docs/fleet.md disaggregation constants check OK")
 PY
+
+# observability smoke: serve a 2-overlay disaggregated fleet with
+# --trace, schema-check the exported Perfetto JSON, reconcile its
+# attribution/busy totals against the cycle report, and run the
+# profiler CLI over it (repro.npec.obs end to end, docs/observability.md)
+TRACE_OUT=$(mktemp /tmp/npec_trace.XXXXXX.json)
+JSON_OUT=$(mktemp /tmp/npec_report.XXXXXX.json)
+python -m repro.launch.serve --backend npec --smoke --overlays 2 \
+    --shard prefill_decode --prefill-chunk 8 \
+    --trace "$TRACE_OUT" --json "$JSON_OUT"
+python - "$TRACE_OUT" "$JSON_OUT" <<'PY'
+import json, sys
+
+from repro.npec.obs import validate_trace
+
+trace = json.load(open(sys.argv[1]))
+errs = validate_trace(trace)
+if errs:
+    raise SystemExit("trace schema violations:\n  " + "\n  ".join(errs))
+snap = json.load(open(sys.argv[2]))
+attributed = sum(r["attributed_cycles"]
+                 for r in trace["summary"]["requests"].values())
+charged = sum(o["charged_cycles"]
+              for o in trace["summary"]["overlays"].values())
+if attributed != charged:
+    raise SystemExit(
+        f"trace attribution ({attributed}) != charged cycles ({charged})")
+rep = snap["report"]
+if trace["report"] != rep:
+    raise SystemExit("--trace embedded report != --json report")
+if snap["metrics"]["counters"]["decode_steps"] != rep["decode_steps"]:
+    raise SystemExit("metrics snapshot disagrees with the report counters")
+print(f"trace schema + conservation OK ({len(trace['traceEvents'])} "
+      f"events, {charged} cycles attributed)")
+PY
+python -m repro.npec.obs.profile "$TRACE_OUT" --top 5 --requests 3
+rm -f "$TRACE_OUT" "$JSON_OUT"
+
+# docs drift gate: docs/observability.md must name every event and
+# metric the obs layer actually emits (repro.npec.obs.schema constants
+# are the single source of truth)
+python - <<'PY'
+from pathlib import Path
+
+from repro.npec.obs import schema
+from repro.npec.obs.tracer import UNITS
+
+doc = Path("docs/observability.md").read_text()
+names = {
+    "request spans": schema.REQUEST_SPANS,
+    "request instants": schema.REQUEST_INSTANTS,
+    "stream kinds": schema.STREAM_KINDS,
+    "units": UNITS,
+    "counters": schema.METRIC_COUNTERS,
+    "families": schema.METRIC_FAMILIES,
+    "histograms": schema.METRIC_HISTOGRAMS,
+}
+missing = [f"{group}: {n}" for group, ns in names.items()
+           for n in ns if f"`{n}`" not in doc]
+if missing:
+    raise SystemExit(
+        "docs/observability.md out of sync with repro.npec.obs.schema "
+        f"— missing {missing}")
+print("docs/observability.md event/metric names check OK")
+PY
+
+# the observability gate suite: trace determinism (engine + all four
+# fleet shards), disabled-tracer report byte-identity, schema checker
+# positives/negatives, conservation identities, exact histograms
+python -m pytest -q tests/test_npec_obs.py

@@ -52,6 +52,7 @@ CI smoke: PYTHONPATH=src python -m repro.launch.serve --backend npec --smoke
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -162,6 +163,44 @@ class Server:
         return stats
 
 
+# cycle reports carry full precision (derived math never inherits print
+# loss); these keys are rounded HERE, at the presentation layer, so the
+# printed lines match the committed table records
+_PRINT_ROUND = {"tokens_per_sec": 1, "mmu_row_occupancy": 4}
+
+
+def _print_report(report: Dict) -> None:
+    for k, v in report.items():
+        if k in _PRINT_ROUND and isinstance(v, float):
+            v = round(v, _PRINT_ROUND[k])
+        print(f"  {k}: {v}")
+
+
+def _make_tracer(args, clock_hz: float):
+    """A live cycle tracer when --trace is set, else None (the engine and
+    fleet then default to the no-op NULL_TRACER fast path)."""
+    if not getattr(args, "trace", None):
+        return None
+    from repro.npec.obs import Tracer
+    return Tracer(clock_hz=clock_hz)
+
+
+def _npec_outputs(args, tracer, snapshot: Dict) -> None:
+    """--json / --trace artifacts from one run's stats snapshot."""
+    if getattr(args, "json", None):
+        with open(args.json, "w") as f:
+            json.dump(snapshot, f, indent=1)
+            f.write("\n")
+        print(f"wrote json report -> {args.json}")
+    if tracer is not None:
+        from repro.npec.obs import write_chrome_trace
+        write_chrome_trace(tracer, args.trace,
+                           report=snapshot["report"],
+                           metrics=snapshot["metrics"])
+        print(f"wrote trace -> {args.trace} "
+              f"({len(tracer.events)} events)")
+
+
 def run_npec_fleet(args) -> Dict[str, float]:
     """Multi-overlay serving (repro.npec.fleet, docs/fleet.md): N
     overlays pull from a shared admission queue — plain replicas, or one
@@ -174,11 +213,12 @@ def run_npec_fleet(args) -> Dict[str, float]:
 
     cfg = get_config(args.arch, smoke=True)
     hw = NPEHardware(vrwidth=args.vrwidth)
+    tracer = _make_tracer(args, hw.clock_hz)
     if args.shard == "expert":
         seq = min(16, args.capacity)
         fleet = NPEFleet(cfg, hw, overlays=args.overlays, shard="expert",
                          bits=args.bits, cycle_model=args.cycle_model,
-                         seq=seq)
+                         seq=seq, tracer=tracer)
         reqs = SyntheticRequests(cfg.vocab_size, max_prompt=seq,
                                  rate_rps=args.rate, clock_hz=hw.clock_hz)
         arrivals = reqs.arrival_cycles(args.requests)
@@ -194,7 +234,8 @@ def run_npec_fleet(args) -> Dict[str, float]:
                          cycle_model=args.cycle_model,
                          prefill_chunk=args.prefill_chunk,
                          prefill_overlays=args.prefill_overlays,
-                         seq_buckets=args.seq_buckets, window=args.window)
+                         seq_buckets=args.seq_buckets, window=args.window,
+                         tracer=tracer)
         reqs = SyntheticRequests(cfg.vocab_size,
                                  max_prompt=min(16, max_prompt),
                                  rate_rps=args.rate, clock_hz=hw.clock_hz)
@@ -202,13 +243,14 @@ def run_npec_fleet(args) -> Dict[str, float]:
         for i in range(args.requests):
             fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i),
                          arrival_cycle=int(arrivals[i]))
-    report = fleet.run().report()
+    snapshot = fleet.run().snapshot()
+    report = snapshot["report"]
     print(f"npec fleet ({args.arch}, {args.overlays} overlays, "
           f"shard={args.shard}, {args.bits}-bit MMU, "
           f"rate={args.rate or 'all-at-t0'}, "
           f"{args.cycle_model} cycle model):")
-    for k, v in report.items():
-        print(f"  {k}: {v}")
+    _print_report(report)
+    _npec_outputs(args, tracer, snapshot)
     return report
 
 
@@ -229,25 +271,29 @@ def run_npec(args) -> Dict[str, float]:
             f"--capacity ({args.capacity}) must be at least --gen "
             f"({args.gen}) + 4: prompts are 4..{max_prompt} tokens and "
             "every request must fit prompt + generation in its cache slot")
-    engine = NPEEngine(cfg, NPEHardware(vrwidth=args.vrwidth),
+    hw = NPEHardware(vrwidth=args.vrwidth)
+    tracer = _make_tracer(args, hw.clock_hz)
+    engine = NPEEngine(cfg, hw,
                        slots=args.batch, capacity=args.capacity,
                        max_new_tokens=args.gen, bits=args.bits,
                        npe=args.npe, params=params,
                        cycle_model=args.cycle_model,
                        prefill_chunk=args.prefill_chunk,
-                       seq_buckets=args.seq_buckets, window=args.window)
+                       seq_buckets=args.seq_buckets, window=args.window,
+                       tracer=tracer)
     reqs = SyntheticRequests(cfg.vocab_size, max_prompt=min(16, max_prompt))
     for i in range(args.requests):
         # EOS-aware workload: each request carries a sampled stop token,
         # so eviction is ragged rather than budget-only
         engine.submit(reqs.request(i), eos_id=reqs.eos_id(i))
-    report = engine.run().report()
+    snapshot = engine.run().snapshot()
+    report = snapshot["report"]
     print(f"npec engine ({args.arch}, B={args.batch} slots, "
           f"T={args.capacity}, {args.bits}-bit MMU @ "
           f"{engine.hw.clock_hz / 1e6:.0f} MHz, "
           f"{args.cycle_model} cycle model):")
-    for k, v in report.items():
-        print(f"  {k}: {v}")
+    _print_report(report)
+    _npec_outputs(args, tracer, snapshot)
     return report
 
 
@@ -300,6 +346,17 @@ def main(argv=None):
                          "the bucket that never grows; prompts must fit "
                          "W (sliding-attention families: W must equal the "
                          "config's window)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="npec: write a Chrome trace-event/Perfetto JSON "
+                         "of the run (cycle-stamped request lifecycles + "
+                         "per-overlay unit timelines, docs/"
+                         "observability.md); inspect with chrome://"
+                         "tracing, ui.perfetto.dev, or python -m "
+                         "repro.npec.obs.profile PATH")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="npec: write the cycle report + metrics "
+                         "snapshot (counters, families, histograms) as "
+                         "structured JSON")
     ap.add_argument("--npe", action="store_true")
     ap.add_argument("--dtype-float32", action="store_true",
                     help="npec: force float32 params (test parity)")

@@ -62,6 +62,8 @@ from repro.npec.fleet.partition import (ExpertPlan, PipelinePlan,
                                         partition_expert,
                                         partition_pipeline,
                                         partition_prefill_decode)
+from repro.npec.obs.metrics import MetricsRegistry
+from repro.npec.obs.tracer import NULL_TRACER
 from repro.npec.runtime.batch import Request
 from repro.npec.runtime.clock import CycleClock, LatencyTracker
 from repro.npec.runtime.engine import (NPEEngine, chunk_spans,
@@ -190,7 +192,12 @@ class _ReadyQueue:
 class FleetStats:
     """Cycle-derived fleet summary.  `tokens` counts generated tokens for
     engine-backed shards (replicate/pipeline) and processed prompt tokens
-    for expert-parallel single-pass inference."""
+    for expert-parallel single-pass inference.
+
+    The serving counters live in a `MetricsRegistry` (repro.npec.obs):
+    every engine's registry is folded in at collection time, so the fleet
+    snapshot carries the per-engine counter families and cycle histograms
+    too; the legacy counter names stay readable as properties."""
     overlays: int
     shard: str
     clock_hz: float
@@ -199,13 +206,33 @@ class FleetStats:
     makespan_cycles: int = 0
     transfer_cycles: int = 0
     busy_cycles: List[int] = field(default_factory=list)
-    decode_steps: int = 0
-    prefills: int = 0
-    # length-bucketed decode + shared stream cache (engine-backed shards)
-    decode_steps_by_bucket: Dict[int, int] = field(default_factory=dict)
-    bucket_migrations: int = 0
-    migration_cycles: int = 0
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
     stream_cache: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self.metrics.value("decode_steps"))
+
+    @property
+    def prefills(self) -> int:
+        return int(self.metrics.value("prefills"))
+
+    @property
+    def bucket_migrations(self) -> int:
+        return int(self.metrics.value("bucket_migrations"))
+
+    @property
+    def migration_cycles(self) -> int:
+        return int(self.metrics.value("migration_cycles"))
+
+    @property
+    def decode_steps_by_bucket(self) -> Dict[int, int]:
+        return {b: int(v) for b, v in
+                self.metrics.family("decode_steps_by_bucket").items()}
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Report dict plus the merged registry snapshot (serve --json)."""
+        return {"report": self.report(), "metrics": self.metrics.snapshot()}
 
     def report(self) -> Dict[str, Any]:
         clock = CycleClock(self.clock_hz)
@@ -229,8 +256,10 @@ class FleetStats:
         sv = service.percentiles()
         out["service_p50_ms"] = sv["p50_ms"]
         out["service_p99_ms"] = sv["p99_ms"]
+        # full precision — presentation layers round (serve.py prints,
+        # paper_tables rows), so derived math never inherits print loss
         out["tokens_per_sec"] = (
-            round(self.tokens * self.clock_hz / self.makespan_cycles, 1)
+            self.tokens * self.clock_hz / self.makespan_cycles
             if self.makespan_cycles else 0.0)
         out["makespan_cycles"] = self.makespan_cycles
         out["transfer_cycles"] = self.transfer_cycles
@@ -261,7 +290,7 @@ class NPEFleet:
                  seq_buckets=None, window: Optional[int] = None,
                  inference_prog: Optional[CompiledProgram] = None,
                  prefill_chunk: Optional[int] = None,
-                 prefill_overlays: int = 1):
+                 prefill_overlays: int = 1, tracer=None):
         if shard not in SHARD_STRATEGIES:
             raise ValueError(f"unknown shard strategy {shard!r} "
                              f"(choose from {SHARD_STRATEGIES})")
@@ -293,6 +322,10 @@ class NPEFleet:
         self.overlays = overlays
         self.shard = shard
         self.cycle_model = cycle_model
+        # opt-in cycle-domain tracing (repro.npec.obs): the fleet shares
+        # ONE tracer with its engines; untraced runs keep the no-op
+        # NULL_TRACER fast path everywhere
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.max_new_tokens = max_new_tokens
         self.seq = seq
         # ONE typed compiled-stream cache backs the whole fleet: engines
@@ -356,8 +389,11 @@ class NPEFleet:
                                 seq_buckets=seq_buckets, window=window,
                                 charge_hook=self._disagg_hook,
                                 queue=view, engine_id=g,
-                                kv_recv=self.disagg_plan.recv_prog)
+                                kv_recv=self.disagg_plan.recv_prog,
+                                tracer=self.tracer)
                 view.engine = eng
+                # decode engine g occupies overlay prefill_overlays + g
+                eng.trace_overlay = prefill_overlays + g
                 self.engines.append(eng)
             return
 
@@ -374,8 +410,14 @@ class NPEFleet:
                             stream_cache=self.stream_cache,
                             seq_buckets=seq_buckets, window=window,
                             charge_hook=hook, queue=view, engine_id=g,
-                            prefill_chunk=prefill_chunk)
+                            prefill_chunk=prefill_chunk,
+                            tracer=self.tracer)
             view.engine = eng
+            if shard == "pipeline":
+                # stage placements are traced by _pipeline_hook itself
+                # (one span per stage overlay); the engine's own
+                # whole-charge emission would double-book them
+                eng.trace_streams = False
             self.engines.append(eng)
 
     # --- request intake ------------------------------------------------
@@ -463,9 +505,9 @@ class NPEFleet:
             nvu_source=self._nvu_source, cache_len=cache_len))
 
     def _stage_costs(self, prog: CompiledProgram
-                     ) -> List[Tuple[float, int]]:
-        """Per-stage (scheduled cycles, transfer cycles) for a stream,
-        partitioned once per compiled program."""
+                     ) -> List[Tuple[CompiledProgram, float, int]]:
+        """Per-stage (stage stream, scheduled cycles, transfer cycles)
+        for a stream, partitioned once per compiled program."""
         key = id(prog)
         if key not in self._pipeline_plans:
             # boundary rows in flight = token rows in the stream: B slots
@@ -474,7 +516,7 @@ class NPEFleet:
             plan = partition_pipeline(prog, self.overlays, rows=rows)
             self._pipeline_plans[key] = (prog, plan)
         _, plan = self._pipeline_plans[key]
-        return [(schedule_for(p, self.cycle_model)["total_cycles"],
+        return [(p, schedule_for(p, self.cycle_model)["total_cycles"],
                  transfer_cycles(p)) for p in plan.stages]
 
     def _stream_rows(self, prog: CompiledProgram) -> int:
@@ -491,6 +533,7 @@ class NPEFleet:
         overlays; the engine's clock lands on the final stage's
         completion, so its continuous batching sees end-to-end stream
         latency while the fleet keeps all stages concurrently busy."""
+        tr = self.tracer
         if kind == "migrate":
             # bucket-crossing bank migration: each stage overlay moves its
             # OWN layers' banks concurrently (1 row/cycle locally), so the
@@ -500,14 +543,21 @@ class NPEFleet:
             share = cycles / max(1, len(self.timelines))
             t = t0
             for tl in self.timelines:
-                _, end = tl.place(t0, share)   # local bank traffic,
-                t = max(t, end)                # not inter-overlay xfer
-            engine.clock.advance_to(t)
+                start, end = tl.place(t0, share)  # local bank traffic,
+                t = max(t, end)                   # not inter-overlay xfer
+                if tr.enabled:
+                    tr.stream(tl.idx, "migrate", prog, start, end,
+                              self.cycle_model)
+            # alignment to work already placed on the stage timelines —
+            # busy elsewhere, not idle (docs/observability.md)
+            engine.clock.advance_to(t, idle=False)
             return
         t = engine.clock.cycles
-        for s, (c, x) in enumerate(self._stage_costs(prog)):
-            _, t = self.timelines[s].place(t, c, x)
-        engine.clock.advance_to(t)
+        for s, (stage_prog, c, x) in enumerate(self._stage_costs(prog)):
+            start, t = self.timelines[s].place(t, c, x)
+            if tr.enabled:
+                tr.stream(s, kind, stage_prog, start, t, self.cycle_model)
+        engine.clock.advance_to(t, idle=False)
 
     # --- serving loop --------------------------------------------------
 
@@ -552,9 +602,6 @@ class NPEFleet:
                       key=lambda r: r.rid)
         self.stats.requests = reqs
         self.stats.tokens = sum(len(r.generated) for r in reqs)
-        self.stats.decode_steps = sum(e.stats.decode_steps
-                                      for e in engines)
-        self.stats.prefills = sum(e.stats.prefills for e in engines)
         self.stats.makespan_cycles = max(
             [tl.free for tl in self.timelines]
             + [e.clock.cycles for e in engines] + [0])
@@ -564,22 +611,21 @@ class NPEFleet:
         return self.stats
 
     def _collect_stream_stats(self) -> None:
-        """Fold the engines' bucket counters and the shared stream
-        cache's hit/miss totals into the fleet stats (deterministic:
-        pure counters, no wall-clock)."""
+        """Fold every engine's metrics registry (decode/prefill counters,
+        bucket families, cycle histograms) and the shared stream cache's
+        hit/miss totals into the fleet stats (deterministic: pure
+        counters, no wall-clock)."""
         for e in self.engines:
-            for b, n in e.stats.decode_steps_by_bucket.items():
-                self.stats.decode_steps_by_bucket[b] = (
-                    self.stats.decode_steps_by_bucket.get(b, 0) + n)
-            self.stats.bucket_migrations += e.stats.bucket_migrations
-            self.stats.migration_cycles += e.stats.migration_cycles
+            self.stats.metrics.merge(e.stats.metrics)
         self.stats.stream_cache = self.stream_cache.report()
 
     def _run_expert(self) -> FleetStats:
         self.queue.finalize()
         plan = self.expert_plan
         n = self.overlays
-        costs = [[(schedule_for(t.prog, self.cycle_model)["total_cycles"],
+        tr = self.tracer
+        costs = [[(t.prog,
+                   schedule_for(t.prog, self.cycle_model)["total_cycles"],
                    t.xfer_rows, t.rel) for t in ph.tasks]
                  for ph in plan.phases]
         while len(self.queue):
@@ -587,17 +633,37 @@ class NPEFleet:
             home = req.rid % n
             t = req.submit_cycle
             first = True
-            for phase in costs:
-                ends = []
-                for cyc, xfer, rel in phase:
+            for pi, phase in enumerate(costs):
+                starts, ends, placed = [], [], 0
+                for prog, cyc, xfer, rel in phase:
                     tl = self.timelines[(home + rel) % n]
                     s, e = tl.place(t, cyc, xfer)
                     if first:
                         req.admit_cycle = s
                         first = False
+                        if tr.enabled:
+                            tr.request_admitted(req, home)
+                    if tr.enabled:
+                        tr.stream(tl.idx, "expert", prog, s, e,
+                                  self.cycle_model)
+                    starts.append(s)
                     ends.append(e)
+                    placed += e - s
                 t = max(ends)
+                if tr.enabled:
+                    # an expert phase fans its tasks across overlays in
+                    # parallel: the request span covers [min start, max
+                    # end] (clipped to the admit cycle so it never
+                    # overlaps the queue span) but is CHARGED the sum of
+                    # the placed task lengths so attributions reconcile
+                    # with busy_cycles
+                    tr.req_span(req.rid, "expert_phase",
+                                max(min(starts), req.admit_cycle), t,
+                                home, attributed=placed, phase=pi,
+                                tasks=len(phase))
             req.finish_cycle = t
+            if tr.enabled:
+                tr.instant(req.rid, "evict", t)
             self.stats.requests.append(req)
         self.stats.tokens = sum(len(r.prompt) for r in self.stats.requests)
         self.stats.makespan_cycles = max(
@@ -618,6 +684,9 @@ class NPEFleet:
         approximation."""
         self.queue.finalize()
         plan = self.disagg_plan
+        tr = self.tracer
+        chunk_name = ("prefill_chunk" if self.prefill_chunk is not None
+                      else "prefill")
         done: List[Request] = []
         while len(self.queue):
             req = self.queue.pop()
@@ -626,32 +695,52 @@ class NPEFleet:
                      key=lambda l: (max(l.free, req.submit_cycle), l.idx))
             t = req.submit_cycle
             first = True
-            for _, rows in chunk_spans(len(req.prompt),
-                                       self.prefill_chunk):
+            spans = list(chunk_spans(len(req.prompt), self.prefill_chunk))
+            for i, (base, rows) in enumerate(spans):
                 prog = self._prefill_prog(rows, self.prefill_chunk)
                 c = schedule_for(prog, self.cycle_model)["total_cycles"]
                 s, t = tl.place(t, c)
                 if first:
                     req.admit_cycle = s
                     first = False
+                    self.stats.metrics.observe(
+                        "queue_wait_cycles", s - req.submit_cycle)
+                    if tr.enabled:
+                        tr.request_admitted(req, tl.idx)
+                self.stats.metrics.inc("charge_cycles", t - s,
+                                       label="prefill")
+                self.stats.metrics.observe("prefill_cycles", t - s)
+                if tr.enabled:
+                    tr.stream(tl.idx, "prefill", prog, s, t,
+                              self.cycle_model)
+                    tr.req_span(req.rid, chunk_name, s, t, tl.idx,
+                                index=i, base=base, rows=rows,
+                                of=len(spans))
             send = plan.send_prog(len(req.prompt))
             xfer = transfer_cycles(send)          # 1 row/cycle MWU ship
-            _, t = tl.place(t, xfer, xfer)
-            self.stats.prefills += 1
+            s, t = tl.place(t, xfer, xfer)
+            self.stats.metrics.inc("prefills")
+            self.stats.metrics.inc("charge_cycles", t - s, label="kv_ship")
+            if tr.enabled:
+                tr.stream(tl.idx, "kv_ship", send, s, t, self.cycle_model)
+                tr.req_span(req.rid, "kv_ship", s, t, tl.idx,
+                            rows=len(req.prompt))
             tok = synthetic_token(req)            # cost-only first token
             req.generated.append(tok)
             req.first_token_cycle = t
             req.token_cycles.append(t)
+            if tr.enabled:
+                tr.instant(req.rid, "first_token", t)
             if req.wants_more():
                 self._ready.push(t, req)
             else:
                 req.finish_cycle = t
+                if tr.enabled:
+                    tr.instant(req.rid, "evict", t)
         self._ready.finalize()
         self._event_loop(self._ready)
         self.stats.requests = sorted(done, key=lambda r: r.rid)
         self.stats.tokens = sum(len(r.generated) for r in done)
-        self.stats.decode_steps = sum(e.stats.decode_steps
-                                      for e in self.engines)
         self.stats.makespan_cycles = max(
             [tl.free for tl in self.timelines]
             + [e.clock.cycles for e in self.engines] + [0])

@@ -33,6 +33,7 @@ class CycleClock:
     remainder)."""
     clock_hz: float
     cycles: int = 0
+    idle_cycles: int = 0
     _frac: float = 0.0
 
     def advance(self, cycles: float) -> int:
@@ -45,15 +46,24 @@ class CycleClock:
         self.cycles += step
         return self.cycles
 
-    def advance_to(self, cycle: int) -> int:
+    def advance_to(self, cycle: int, *, idle: bool = True) -> int:
         """Jump forward to an absolute timestamp (fleet clock alignment:
         an idle overlay waiting on the shared admission queue skips ahead
         to the next arrival).  Monotonic — rewinding is an error.  The
         jump aligns to an externally-chosen integer cycle, so the carried
-        fractional remainder resets."""
+        fractional remainder resets.
+
+        `idle` classifies the skipped cycles: a queue-starved wait counts
+        toward `idle_cycles` (the per-overlay idle term in the
+        observability conservation identity, docs/observability.md);
+        a jump that merely aligns this clock to work ALREADY placed on a
+        shared timeline (the pipeline hook's chained stage completions)
+        passes idle=False — those cycles are busy elsewhere, not idle."""
         if cycle < self.cycles:
             raise ValueError(
                 f"cannot rewind the clock from {self.cycles} to {cycle}")
+        if idle:
+            self.idle_cycles += int(cycle) - self.cycles
         self.cycles = int(cycle)
         self._frac = 0.0
         return self.cycles

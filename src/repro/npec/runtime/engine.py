@@ -66,6 +66,8 @@ from repro.core.overlay import NPEHardware
 from repro.npec import (CompiledProgram, DecodeSession, compile_decode,
                         compile_prefill, execute, greedy_schedule,
                         schedule_for, stream_schedule, transfer_cycles)
+from repro.npec.obs.metrics import MetricsRegistry
+from repro.npec.obs.tracer import NULL_TRACER
 from repro.npec.runtime.batch import Request, RequestQueue, SlotPool
 from repro.npec.runtime.clock import CycleClock, LatencyTracker
 from repro.npec.runtime.stream_cache import (StreamCache, StreamKey,
@@ -115,12 +117,19 @@ class EngineStats:
     clock).  Both cycle models' step costs are recorded —
     `decode_step_cycles` is the one the clock charged (`cycle_model`),
     with the dag/streaming pair alongside so the tile-streaming latency
-    delta is auditable in every serving record."""
+    delta is auditable in every serving record.
+
+    The serving counters (decode_steps, prefills, bucket migrations, the
+    per-bucket step family) live in a `MetricsRegistry`
+    (repro.npec.obs.metrics) — one deterministic snapshot covering
+    counters, labeled families, and exact cycle histograms — and are
+    exposed here as read-only compatibility properties; `report()` is
+    assembled from the same registry, so registry and report can never
+    disagree."""
     requests: List[Request] = field(default_factory=list)
     total_cycles: int = 0
-    decode_steps: int = 0
-    prefills: int = 0
     cycle_model: str = "streaming"
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
     decode_step_cycles: int = 0
     decode_step_cycles_dag: int = 0
     decode_step_cycles_streaming: int = 0
@@ -133,9 +142,6 @@ class EngineStats:
     # engine's number — so bucketed records remain comparable.
     seq_buckets: tuple = ()
     window: Optional[int] = None
-    decode_steps_by_bucket: Dict[int, int] = field(default_factory=dict)
-    bucket_migrations: int = 0
-    migration_cycles: int = 0
     stream_cache: Optional[StreamCache] = None
     latency: Optional[LatencyTracker] = None
     first_token: Optional[LatencyTracker] = None
@@ -144,6 +150,33 @@ class EngineStats:
     # split that makes fleet p99 under load attributable (docs/fleet.md)
     queue_wait: Optional[LatencyTracker] = None
     service: Optional[LatencyTracker] = None
+
+    # registry-backed counter views (read-only; mutate via self.metrics)
+    @property
+    def decode_steps(self) -> int:
+        return int(self.metrics.value("decode_steps"))
+
+    @property
+    def prefills(self) -> int:
+        return int(self.metrics.value("prefills"))
+
+    @property
+    def bucket_migrations(self) -> int:
+        return int(self.metrics.value("bucket_migrations"))
+
+    @property
+    def migration_cycles(self) -> int:
+        return int(self.metrics.value("migration_cycles"))
+
+    @property
+    def decode_steps_by_bucket(self) -> Dict[int, int]:
+        return {b: int(v) for b, v in
+                self.metrics.family("decode_steps_by_bucket").items()}
+
+    def snapshot(self) -> Dict[str, Any]:
+        """The full observability snapshot: the report dict plus the
+        registry's counters/families/histograms (serve.py --json)."""
+        return {"report": self.report(), "metrics": self.metrics.snapshot()}
 
     def report(self) -> Dict[str, float]:
         gen = sum(len(r.generated) for r in self.requests)
@@ -160,15 +193,18 @@ class EngineStats:
             sv = self.service.percentiles()
             out["service_p50_ms"] = sv["p50_ms"]
             out["service_p99_ms"] = sv["p99_ms"]
+        # full precision here — consumers round at the presentation layer
+        # (serve.py prints 1/4 decimals, paper_tables rounds its rows), so
+        # downstream math never inherits print-precision loss
         out["tokens_per_sec"] = (
-            round(gen * self.clock_hz / self.total_cycles, 1)
+            gen * self.clock_hz / self.total_cycles
             if self.total_cycles else 0.0)
         out["cycle_model"] = self.cycle_model
         out["decode_step_cycles"] = self.decode_step_cycles
         out["decode_step_cycles_dag"] = self.decode_step_cycles_dag
         out["decode_step_cycles_streaming"] = \
             self.decode_step_cycles_streaming
-        out["mmu_row_occupancy"] = round(self.mmu_row_occupancy, 4)
+        out["mmu_row_occupancy"] = self.mmu_row_occupancy
         out["total_cycles"] = self.total_cycles
         out["decode_steps"] = self.decode_steps
         out["prefills"] = self.prefills
@@ -197,7 +233,8 @@ class NPEEngine:
                  stream_cache: Optional[StreamCache] = None,
                  seq_buckets=None, window: Optional[int] = None,
                  charge_hook=None, queue=None, engine_id: int = 0,
-                 prefill_chunk: Optional[int] = None, kv_recv=None):
+                 prefill_chunk: Optional[int] = None, kv_recv=None,
+                 tracer=None):
         """Fleet extension points (repro.npec.fleet) — all default to the
         lone-engine behavior, which stays byte-identical:
 
@@ -219,7 +256,16 @@ class NPEEngine:
             `stats.requests` at admission (they were never `submit`ted
             here);
           * `engine_id`: this engine's overlay index (deterministic fleet
-            tie-breaking).
+            tie-breaking);
+          * `tracer`: a `repro.npec.obs.Tracer` — strictly opt-in; the
+            default NULL_TRACER has enabled=False and every emission site
+            is gated on it, so the untraced path does no extra work and
+            reports stay byte-identical.  `trace_overlay` is the overlay
+            index trace events carry (fleets override it where an
+            engine's timeline is not overlay `engine_id`, e.g. the
+            disaggregated decode overlays); `trace_streams=False`
+            suppresses the engine's own overlay-track emission when the
+            fleet places stage costs itself (pipeline sharding).
 
         Serving-shape extension points:
 
@@ -288,6 +334,9 @@ class NPEEngine:
         self.cycle_model = cycle_model
         self.engine_id = engine_id
         self.charge_hook = charge_hook
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.trace_overlay = engine_id
+        self.trace_streams = True
         self.stream_cache = (stream_cache if stream_cache is not None
                              else StreamCache())
         self.window = int(window) if window is not None else None
@@ -420,14 +469,25 @@ class NPEEngine:
         return schedule_for(prog, self.cycle_model)["total_cycles"]
 
     def _charge(self, kind: str, prog: CompiledProgram,
-                cycles: float) -> None:
+                cycles: float) -> tuple:
         """Charge a compiled stream to the clock — or hand the charge to
         the fleet's hook, which places it on shared overlay timelines and
-        advances this engine's clock to the placed completion cycle."""
+        advances this engine's clock to the placed completion cycle.
+        Returns the integer engine-clock window ``(t0, t1)`` the charge
+        occupied, which is what the tracer's spans and the per-request
+        attributions are stamped with."""
+        t0 = self.clock.cycles
         if self.charge_hook is not None:
             self.charge_hook(self, kind, prog, cycles)
         else:
             self.clock.advance(cycles)
+        t1 = self.clock.cycles
+        self.stats.metrics.inc("charge_cycles", t1 - t0, label=kind)
+        tr = self.tracer
+        if tr.enabled and self.trace_streams:
+            tr.stream(self.trace_overlay, kind, prog, t0, t1,
+                      self.cycle_model)
+        return t0, t1
 
     # --- length-bucketed decode -------------------------------------------
 
@@ -459,10 +519,18 @@ class NPEEngine:
                 f"bucket migration moved {moved} rows but the cost model "
                 f"charged {rows}")
         self._bucket = target
-        self.stats.bucket_migrations += 1
-        self.stats.migration_cycles += rows
+        self.stats.metrics.inc("bucket_migrations")
+        self.stats.metrics.inc("migration_cycles", rows)
         if rows:
-            self._charge("migrate", prog, float(rows))
+            t0, t1 = self._charge("migrate", prog, float(rows))
+            if self.tracer.enabled:
+                # attribute the moved rows to the slots that own them
+                live = [r.rid for s, r in self.pool.active()
+                        if self._slot_pos[s] > 0]
+                if live:
+                    self.tracer.req_split(live, "migrate", t0, t1,
+                                          self.trace_overlay,
+                                          bucket=target)
 
     SYNTH_ALPHABET = SYNTH_ALPHABET      # see module-level synthetic_token
 
@@ -485,8 +553,17 @@ class NPEEngine:
             self.stats.requests.append(req)
         req.admit_cycle = self.clock.cycles
         self.stats.queue_wait.record(req.submit_cycle, req.admit_cycle)
-        self._charge("prefill", prog, self._schedule_cycles(prog))
-        self.stats.prefills += 1
+        self.stats.metrics.observe("queue_wait_cycles",
+                                   req.admit_cycle - req.submit_cycle)
+        tr = self.tracer
+        if tr.enabled:
+            tr.request_admitted(req, self.trace_overlay)
+        t0, t1 = self._charge("prefill", prog, self._schedule_cycles(prog))
+        self.stats.metrics.inc("prefills")
+        self.stats.metrics.observe("prefill_cycles", t1 - t0)
+        if tr.enabled:
+            tr.req_span(req.rid, "prefill", t0, t1, self.trace_overlay,
+                        rows=len(req.prompt))
         self._ensure_bucket(len(req.prompt))   # load needs S rows per bank
         if self.numeric:
             res = execute(prog, self.params, {"tokens": req.prompt},
@@ -501,6 +578,8 @@ class NPEEngine:
         req.first_token_cycle = self.clock.cycles
         req.token_cycles.append(self.clock.cycles)
         self.stats.first_token.record(req.submit_cycle, self.clock.cycles)
+        if tr.enabled:
+            tr.instant(req.rid, "first_token", req.first_token_cycle)
         self._next_tok[slot] = tok
         if not req.wants_more():
             self._finish(slot)
@@ -513,6 +592,10 @@ class NPEEngine:
             self.stats.requests.append(req)
         req.admit_cycle = self.clock.cycles
         self.stats.queue_wait.record(req.submit_cycle, req.admit_cycle)
+        self.stats.metrics.observe("queue_wait_cycles",
+                                   req.admit_cycle - req.submit_cycle)
+        if self.tracer.enabled:
+            self.tracer.request_admitted(req, self.trace_overlay)
         self.pool.bind(slot, req)
         self._prefilling[slot] = _PrefillState(
             req, chunk_spans(len(req.prompt), self.prefill_chunk))
@@ -527,7 +610,14 @@ class NPEEngine:
         if req.admit_cycle < 0:
             req.admit_cycle = self.clock.cycles
             self.stats.queue_wait.record(req.submit_cycle, req.admit_cycle)
-        self._charge("kv_recv", prog, transfer_cycles(prog))
+            self.stats.metrics.observe("queue_wait_cycles",
+                                       req.admit_cycle - req.submit_cycle)
+            if self.tracer.enabled:
+                self.tracer.request_admitted(req, self.trace_overlay)
+        t0, t1 = self._charge("kv_recv", prog, transfer_cycles(prog))
+        if self.tracer.enabled:
+            self.tracer.req_span(req.rid, "kv_recv", t0, t1,
+                                 self.trace_overlay, rows=len(req.prompt))
         self._ensure_bucket(len(req.prompt))   # recv fills S rows per bank
         self.pool.bind(slot, req)
         self._slot_pos[slot] = len(req.prompt)
@@ -546,7 +636,13 @@ class NPEEngine:
         st = self._prefilling[slot]
         base, rows = st.spans[st.next_i]
         prog = self._prefill_program(rows)
-        self._charge("prefill", prog, self._schedule_cycles(prog))
+        t0, t1 = self._charge("prefill", prog, self._schedule_cycles(prog))
+        self.stats.metrics.observe("prefill_cycles", t1 - t0)
+        if self.tracer.enabled:
+            self.tracer.req_span(st.req.rid, "prefill_chunk", t0, t1,
+                                 self.trace_overlay, index=st.next_i,
+                                 base=base, rows=rows,
+                                 of=len(st.spans))
         if self.numeric:
             if st.caches is None:
                 g = prog.graph
@@ -570,7 +666,7 @@ class NPEEngine:
         whole-prompt admit's tail)."""
         st = self._prefilling.pop(slot)
         req = st.req
-        self.stats.prefills += 1
+        self.stats.metrics.inc("prefills")
         self._ensure_bucket(len(req.prompt))   # load needs S rows per bank
         if self.numeric:
             S = len(req.prompt)
@@ -584,6 +680,9 @@ class NPEEngine:
         req.first_token_cycle = self.clock.cycles
         req.token_cycles.append(self.clock.cycles)
         self.stats.first_token.record(req.submit_cycle, self.clock.cycles)
+        if self.tracer.enabled:
+            self.tracer.instant(req.rid, "first_token",
+                                req.first_token_cycle)
         self._next_tok[slot] = tok
         if not req.wants_more():
             self._finish(slot)
@@ -593,6 +692,12 @@ class NPEEngine:
         req.finish_cycle = self.clock.cycles
         self.stats.latency.record(req.submit_cycle, req.finish_cycle)
         self.stats.service.record(req.admit_cycle, req.finish_cycle)
+        self.stats.metrics.observe("service_cycles",
+                                   req.finish_cycle - req.admit_cycle)
+        self.stats.metrics.observe("e2e_cycles",
+                                   req.finish_cycle - req.submit_cycle)
+        if self.tracer.enabled:
+            self.tracer.instant(req.rid, "evict", req.finish_cycle)
         if self.numeric:
             self.session.reset_slot(slot)
         self._next_tok[slot] = 0
@@ -624,11 +729,18 @@ class NPEEngine:
         # every decoding slot's next append lands at row pos, so the step
         # runs on the smallest bucket covering deepest-pos + 1 rows
         self._ensure_bucket(int(self._slot_pos[active].max()) + 1)
-        self._charge("decode", self._decode_progs[self._bucket],
-                     self._bucket_step_cycles[self._bucket])
-        self.stats.decode_steps += 1
-        self.stats.decode_steps_by_bucket[self._bucket] = \
-            self.stats.decode_steps_by_bucket.get(self._bucket, 0) + 1
+        t0, t1 = self._charge("decode", self._decode_progs[self._bucket],
+                              self._bucket_step_cycles[self._bucket])
+        self.stats.metrics.inc("decode_steps")
+        self.stats.metrics.inc("decode_steps_by_bucket",
+                               label=self._bucket)
+        self.stats.metrics.observe("decode_step_cycles", t1 - t0)
+        if self.tracer.enabled:
+            self.tracer.req_split(
+                [r.rid for s, r in self.pool.active()
+                 if s not in self._prefilling],
+                "decode_step", t0, t1, self.trace_overlay,
+                bucket=self._bucket)
         if self.numeric:
             out = np.asarray(self.session.step(self._next_tok,
                                                active=active))

@@ -45,6 +45,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 from repro.npec.lower import CompiledProgram
+from repro.npec.obs.metrics import MetricsRegistry
 
 # the default doubling grid starts here: one 128-PE-row MMU tile holds 64
 # key columns of a 16-bit (g, T) QK^T on both sides of the paper's
@@ -75,10 +76,20 @@ class StreamCache:
     can back any number of engines (a fleet shares one), because the key
     carries the full compile identity."""
 
-    def __init__(self):
+    def __init__(self, metrics: Optional[MetricsRegistry] = None):
         self._progs: Dict[StreamKey, CompiledProgram] = {}
-        self.hits = 0
-        self.misses = 0
+        # hit/miss counters live in a MetricsRegistry (repro.npec.obs) so
+        # one snapshot covers cache behavior alongside the engine's own
+        # counters; `hits`/`misses` stay readable as plain attributes
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+
+    @property
+    def hits(self) -> int:
+        return int(self.metrics.value("stream_cache_hits"))
+
+    @property
+    def misses(self) -> int:
+        return int(self.metrics.value("stream_cache_misses"))
 
     def get(self, key: StreamKey,
             build: Callable[[], CompiledProgram]) -> CompiledProgram:
@@ -89,9 +100,9 @@ class StreamCache:
                 f"stream cache keys must be StreamKey, got {type(key)!r}")
         prog = self._progs.get(key)
         if prog is not None:
-            self.hits += 1
+            self.metrics.inc("stream_cache_hits")
             return prog
-        self.misses += 1
+        self.metrics.inc("stream_cache_misses")
         prog = build()
         self._progs[key] = prog
         return prog

@@ -296,7 +296,42 @@ def stream_schedule(compiled: CompiledProgram) -> Dict:
     busy = compiled.busy_by_unit()
 
     # --- per-stall budgets: MMU idle gaps + trailing NVU excess ---------
+    intervals = _stall_intervals(instrs, start, end)
     stalls: Dict[str, float] = {}
+    for t0, t1, key in intervals:
+        stalls[key] = stalls.get(key, 0.0) + (t1 - t0)
+
+    sched = {
+        "total_cycles": total,
+        "mmu_busy": float(busy.get("MMU", 0)),
+        "nvu_busy": float(busy.get("NVU", 0)),
+        "mmu_util": busy.get("MMU", 0) / total if total else 0.0,
+        "stalls": stalls,
+        "stall_intervals": intervals,
+        "order": order,
+        "start": start,
+        "end": end,
+    }
+    compiled.sched_cache["stream"] = sched
+    return sched
+
+
+def _stall_intervals(instrs: List[LoweredInstr], start: List[float],
+                     end: List[float]) -> List[tuple]:
+    """Attributed stall gaps as explicit ``(t0, t1, key)`` intervals in
+    stream-local cycles: MMU idle gaps attributed to the blocking NVU
+    instruction, then the trailing NVU excess past the last matmul.
+
+    This is the single source of truth for stall accounting —
+    `stream_schedule` folds these intervals into its per-key ``stalls``
+    budgets (same iteration order, so the float sums are bit-identical to
+    the pre-refactor walk), and the observability tracer
+    (repro.npec.obs) re-emits them as timeline spans, which is what lets
+    traces reconcile exactly against the scheduled stall budgets.
+    Intervals are non-overlapping and sorted by start within each of the
+    two phases (gap walk, then trailing excess)."""
+    n = len(instrs)
+    intervals: List[tuple] = []
     mmu = sorted((i for i in range(n) if instrs[i].unit == "MMU"),
                  key=lambda i: start[i])
     prev_end = 0.0
@@ -307,30 +342,16 @@ def stream_schedule(compiled: CompiledProgram) -> Dict:
                         if instrs[d].unit == "NVU" and end[d] > prev_end]
             if blockers:
                 b = max(blockers, key=lambda d: end[d])
-                key = _stall_key(instrs[b])
-                stalls[key] = stalls.get(key, 0.0) + gap
+                intervals.append((prev_end, start[i], _stall_key(instrs[b])))
         prev_end = max(prev_end, end[i])
     last_mmu = max((end[i] for i in mmu), default=0.0)
     t = last_mmu
     for i in sorted(range(n), key=lambda i: end[i]):
         if instrs[i].unit != "NVU" or end[i] <= t:
             continue
-        key = _stall_key(instrs[i])
-        stalls[key] = stalls.get(key, 0.0) + end[i] - max(t, start[i])
+        intervals.append((max(t, start[i]), end[i], _stall_key(instrs[i])))
         t = end[i]
-
-    sched = {
-        "total_cycles": total,
-        "mmu_busy": float(busy.get("MMU", 0)),
-        "nvu_busy": float(busy.get("NVU", 0)),
-        "mmu_util": busy.get("MMU", 0) / total if total else 0.0,
-        "stalls": stalls,
-        "order": order,
-        "start": start,
-        "end": end,
-    }
-    compiled.sched_cache["stream"] = sched
-    return sched
+    return intervals
 
 
 def transfer_cycles(compiled: CompiledProgram) -> int:

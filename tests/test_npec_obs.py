@@ -1,0 +1,316 @@
+"""Observability-layer gates (repro.npec.obs, docs/observability.md).
+
+Five families:
+
+  * determinism — two identical runs (lone engine AND all four fleet
+    shards) export byte-identical Perfetto JSON: every timestamp is an
+    engine-clock cycle, never wall clock;
+  * opt-in invariance — running WITH a tracer changes no report: the
+    cycle reports of traced and untraced runs are byte-identical, so
+    `--trace` can never perturb the committed records;
+  * schema — exported traces pass `validate_trace` (required keys, known
+    event names, per-track spans sorted and non-overlapping), and the
+    checker actually catches corrupted traces;
+  * conservation — per-request attributed cycles and per-overlay charged
+    cycles reconcile EXACTLY with the cycle report: on a lone engine
+    charged + idle == total_cycles and attribution == charge; on
+    replicate/prefill_decode/expert fleets the attributed sum equals the
+    summed per-overlay busy cycles;
+  * metrics — histograms are exact (integer counts/sums, power-of-two
+    buckets), registry merges add exactly, and reports carry full
+    precision (rounding happens at the presentation layer only).
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.overlay import NPEHardware
+from repro.data.pipeline import SyntheticRequests
+from repro.npec.fleet import NPEFleet
+from repro.npec.runtime import NPEEngine
+from repro.npec.obs import (CycleHistogram, MetricsRegistry, Tracer,
+                            dumps_trace, trace_to_dict, validate_trace)
+from repro.npec.obs.profile import analyze
+
+HW = NPEHardware(vrwidth=1024)
+
+SHARDS = ("replicate", "pipeline", "expert", "prefill_decode")
+
+
+def _smoke_cfg(name="bert_base"):
+    from repro.configs import get_config
+    return dataclasses.replace(get_config(name, smoke=True),
+                               dtype="float32")
+
+
+def _run_engine(tracer):
+    cfg = _smoke_cfg()
+    eng = NPEEngine(cfg, HW, slots=2, capacity=24, max_new_tokens=6,
+                    tracer=tracer)
+    reqs = SyntheticRequests(cfg.vocab_size, max_prompt=12)
+    for i in range(8):
+        eng.submit(reqs.request(i), eos_id=reqs.eos_id(i))
+    return eng, eng.run()
+
+
+def _run_fleet(shard, tracer):
+    if shard == "expert":
+        cfg = _smoke_cfg("granite_moe_1b_a400m")
+        fleet = NPEFleet(cfg, HW, overlays=2, shard="expert", seq=16,
+                         tracer=tracer)
+        rng = np.random.default_rng(3)
+        for _ in range(5):
+            fleet.submit(rng.integers(0, cfg.vocab_size, (16,), np.int32))
+        return fleet, fleet.run()
+    cfg = _smoke_cfg("bert_base")
+    kw = dict(slots=2, capacity=24, max_new_tokens=6)
+    if shard == "pipeline":
+        cfg = dataclasses.replace(cfg, num_layers=4)
+    if shard == "prefill_decode":
+        kw.update(prefill_chunk=8, prefill_overlays=1)
+    fleet = NPEFleet(cfg, HW, overlays=2, shard=shard, tracer=tracer, **kw)
+    reqs = SyntheticRequests(cfg.vocab_size, max_prompt=12)
+    for i in range(8):
+        fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i))
+    return fleet, fleet.run()
+
+
+# traced runs are reused across the determinism/schema/conservation
+# gates; each entry is (trace_doc_run1, trace_doc_run2, stats, tracer,
+# owner) where owner is the engine or fleet of run 1
+_CACHE = {}
+
+
+def _traced(kind):
+    if kind in _CACHE:
+        return _CACHE[kind]
+    docs = []
+    stats = owner = tracer = None
+    for _ in range(2):
+        tr = Tracer(clock_hz=HW.clock_hz)
+        if kind == "engine":
+            obj, st = _run_engine(tr)
+        else:
+            obj, st = _run_fleet(kind, tr)
+        docs.append(trace_to_dict(tr, report=st.report()))
+        stats, owner, tracer = st, obj, tr
+    _CACHE[kind] = (docs[0], docs[1], stats, tracer, owner)
+    return _CACHE[kind]
+
+
+# ---------------------------------------------------------------------------
+# Determinism: two runs, byte-identical traces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ("engine",) + SHARDS)
+def test_trace_two_runs_byte_identical(kind):
+    doc1, doc2, _, _, _ = _traced(kind)
+    assert dumps_trace(doc1) == dumps_trace(doc2)
+
+
+# ---------------------------------------------------------------------------
+# Opt-in invariance: tracing never changes the cycle report
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_engine_report_byte_identical():
+    _, plain = _run_engine(None)
+    _, _, traced_stats, _, _ = _traced("engine")
+    assert json.dumps(plain.report(), sort_keys=True) == \
+        json.dumps(traced_stats.report(), sort_keys=True)
+
+
+@pytest.mark.parametrize("shard", SHARDS)
+def test_disabled_tracer_fleet_report_byte_identical(shard):
+    _, plain = _run_fleet(shard, None)
+    _, _, traced_stats, _, _ = _traced(shard)
+    assert json.dumps(plain.report(), sort_keys=True) == \
+        json.dumps(traced_stats.report(), sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ("engine",) + SHARDS)
+def test_trace_schema_valid(kind):
+    doc, _, _, _, _ = _traced(kind)
+    assert validate_trace(doc) == []
+
+
+def test_schema_catches_corruption():
+    doc, _, _, _, _ = _traced("engine")
+    doc = json.loads(dumps_trace(doc))     # deep copy
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(spans) >= 2
+
+    # overlapping spans on one track
+    bad = json.loads(dumps_trace(doc))
+    lane = [e for e in bad["traceEvents"] if e["ph"] == "X"]
+    first = lane[0]
+    clone = dict(first, ts=first["ts"], dur=first["dur"] + 7)
+    bad["traceEvents"].append(clone)
+    assert any("overlap" in v or "out of order" in v
+               for v in validate_trace(bad))
+
+    # span without a duration
+    bad = json.loads(dumps_trace(doc))
+    next(e for e in bad["traceEvents"] if e["ph"] == "X").pop("dur")
+    assert any("dur" in v for v in validate_trace(bad))
+
+    # unknown request-track event name
+    bad = json.loads(dumps_trace(doc))
+    ev = next(e for e in bad["traceEvents"]
+              if e.get("cat") == "request")
+    ev["name"] = "warp_drive"
+    assert any("warp_drive" in v for v in validate_trace(bad))
+
+    # missing clock metadata
+    bad = json.loads(dumps_trace(doc))
+    bad["otherData"].pop("clock_hz")
+    assert any("clock_hz" in v for v in validate_trace(bad))
+
+
+# ---------------------------------------------------------------------------
+# Conservation: traces reconcile exactly with the cycle report
+# ---------------------------------------------------------------------------
+
+def test_engine_conservation_exact():
+    _, _, stats, tracer, engine = _traced("engine")
+    charged = sum(tracer.charged.values())
+    attributed = sum(tracer.attributed.values())
+    # every charged cycle lands on exactly one overlay stream...
+    assert charged + engine.clock.idle_cycles == stats.total_cycles
+    # ...and is attributed to exactly one request
+    assert attributed == charged
+    # request coverage: every served request has an attribution
+    assert set(tracer.attributed) == {r.rid for r in stats.requests}
+
+
+@pytest.mark.parametrize("shard", ("replicate", "prefill_decode", "expert"))
+def test_fleet_attribution_matches_busy_cycles(shard):
+    """On shards where each overlay's busy cycles are charged streams
+    (replicate engines, disagg prefill placements + decode engines,
+    expert task placements), the per-request attributed total equals the
+    summed per-overlay busy cycles exactly.  (The pipeline shard chains
+    ONE request's stream across all stage overlays concurrently, so its
+    stage placements deliberately exceed the engine-clock charge.)"""
+    _, _, stats, tracer, fleet = _traced(shard)
+    assert sum(tracer.attributed.values()) == sum(stats.busy_cycles)
+    for tl in fleet.timelines:
+        assert tracer.charged.get(tl.idx, 0) == tl.busy
+
+
+@pytest.mark.parametrize("shard", ("replicate", "prefill_decode"))
+def test_fleet_engine_clock_identity(shard):
+    """Per engine: charged + idle == final clock, with idle counting only
+    queue-starved waits (the event loop's advance_to jumps)."""
+    _, _, _, tracer, fleet = _traced(shard)
+    for eng in fleet.engines:
+        assert (tracer.charged.get(eng.trace_overlay, 0)
+                + eng.clock.idle_cycles == eng.clock.cycles)
+
+
+def test_unit_busy_and_stalls_reconcile_with_schedule():
+    """Per-unit busy aggregates re-derive from the charged programs'
+    schedules; streaming stall budgets re-emit stream_schedule's stalls
+    dict bit-exactly (same float sums, same keys)."""
+    from repro import npec
+    cfg = _smoke_cfg()
+    prog = npec.compile_decode(cfg, 24, HW, bits=16, batch=2)
+    sched = npec.schedule_for(prog, "streaming")
+    total = sched["total_cycles"]
+
+    tr = Tracer(clock_hz=HW.clock_hz)
+    t1 = int(total)
+    tr.stream(0, "decode", prog, 0, t1, "streaming")
+
+    busy = prog.busy_by_unit()
+    for u, b in busy.items():
+        if b > 0:
+            assert tr.unit_busy[(0, u)] == b
+    by_key = {}
+    for s0, s1, key in sched["stall_intervals"]:
+        by_key[key] = by_key.get(key, 0.0) + (s1 - s0)
+    assert by_key == dict(sched["stalls"])          # bit-exact floats
+    for key, v in by_key.items():
+        assert tr.stalls[(0, key)] == v
+
+
+def test_profile_analyze_reconciles_with_summary():
+    doc, _, stats, tracer, _ = _traced("prefill_decode")
+    an = analyze(doc)
+    assert an["makespan"] == stats.makespan_cycles
+    for o, charged in tracer.charged.items():
+        assert an["overlays"][o]["charged"] == charged
+    att = {rid: r["attributed"] for rid, r in an["requests"].items()}
+    assert att == tracer.attributed
+
+
+# ---------------------------------------------------------------------------
+# Metrics: exactness + full-precision reports
+# ---------------------------------------------------------------------------
+
+def test_cycle_histogram_exact():
+    h = CycleHistogram("t")
+    for v in (0, 1, 2, 3, 64, 65, 1000):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 7
+    assert snap["sum"] == 0 + 1 + 2 + 3 + 64 + 65 + 1000
+    assert snap["min"] == 0 and snap["max"] == 1000
+    # 0,1 -> le_1; 2 -> le_2; 3 -> le_4; 64 -> le_64; 65 -> le_128;
+    # 1000 -> le_1024
+    assert snap["buckets"] == {"le_1": 2, "le_2": 1, "le_4": 1,
+                               "le_64": 1, "le_128": 1, "le_1024": 1}
+    with pytest.raises(ValueError):
+        h.observe(-1)
+
+
+def test_registry_merge_exact():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.inc("x", 2)
+    b.inc("x", 3)
+    a.inc("fam", 1, label=64)
+    b.inc("fam", 1, label=64)
+    b.inc("fam", 5, label=128)
+    a.observe("h", 10)
+    b.observe("h", 20)
+    a.merge(b)
+    assert a.value("x") == 5
+    assert a.family("fam") == {64: 2, 128: 5}
+    snap = a.histogram("h").snapshot()
+    assert (snap["count"], snap["sum"], snap["min"], snap["max"]) == \
+        (2, 30, 10, 20)
+
+
+def test_req_split_exact_attribution():
+    tr = Tracer()
+    tr.req_split([5, 3, 9], "decode_step", 100, 110, 0, bucket=64)
+    # 10 cycles over 3 requests: floor 3 each, remainder to lowest rids
+    assert tr.attributed == {3: 4, 5: 3, 9: 3}
+    assert sum(tr.attributed.values()) == 10
+
+
+def test_reports_carry_full_precision():
+    _, _, stats, _, _ = _traced("engine")
+    rep = stats.report()
+    gen = rep["generated_tokens"]
+    assert rep["tokens_per_sec"] == gen * stats.clock_hz / stats.total_cycles
+    frep = _traced("replicate")[2].report()
+    assert frep["tokens_per_sec"] == (
+        frep["tokens"] * HW.clock_hz / frep["makespan_cycles"])
+
+
+def test_snapshot_subsumes_report_counters():
+    """One snapshot() carries the report AND the registry the report's
+    counters come from — serve.py --json and paper_tables read this."""
+    _, _, stats, _, _ = _traced("engine")
+    snap = stats.snapshot()
+    assert set(snap) == {"report", "metrics"}
+    m = snap["metrics"]
+    assert m["counters"]["decode_steps"] == snap["report"]["decode_steps"]
+    assert m["counters"]["prefills"] == snap["report"]["prefills"]
+    assert m["histograms"]["decode_step_cycles"]["count"] == \
+        snap["report"]["decode_steps"]
