@@ -397,6 +397,78 @@ def npec_fleet(bits=16) -> List[Dict]:
     return out
 
 
+def npec_tensor(bits=16) -> List[Dict]:
+    """Tensor-parallel projection sharding (repro.npec.fleet.
+    partition_tensor, docs/fleet.md): single-request latency vs overlay
+    count at FULL bert_base scale (12 heads / 12 kv heads / 3072 d_ff —
+    divisible by every N here), cost-only, bit-exact record guard in
+    tests/test_npec_fleet.py.
+
+    All three rows serve the SAME 4-request all-at-t0 EOS-aware workload,
+    so `p50_ms`/`service_p50_ms` read as per-request latency: unlike
+    replicate (throughput at fixed per-request latency), carving every
+    projection's output columns across N overlays makes each admitted
+    request FASTER — `decode_step_cycles` and `prefill_cycles` (the
+    critical shard's streaming schedule of the canonical B=4/cap=48
+    decode and S=24 prefill streams) drop with N while the all-reduce
+    tax (`decode_allreduce_cycles`/`prefill_allreduce_cycles`, the
+    per-shard itemized MRU/MWU rows at the attention-output / FFN-down /
+    logits boundaries) grows.  Tokens are bit-identical across N (the
+    tensor-vs-replicate identity gate); the N=1 row is the lone-engine
+    baseline (fleet-of-1 tensor is bit-equal to `NPEEngine.run()`)."""
+    from repro.configs import get_config
+    from repro.core.overlay import NPEHardware
+    from repro.data.pipeline import SyntheticRequests
+    from repro.npec import compile_decode, compile_prefill, stream_schedule
+    from repro.npec.fleet import NPEFleet, partition_tensor
+    from repro.npec.schedule import transfer_cycles
+    from repro.npec.runtime import StreamCache
+
+    hw = NPEHardware(vrwidth=1024)
+    cfg = get_config("bert_base")
+    reqs = SyntheticRequests(cfg.vocab_size, max_prompt=24)
+    slots, capacity, seq = 4, 48, 24
+    dec = compile_decode(cfg, capacity, hw, bits=bits, batch=slots)
+    pre = compile_prefill(cfg, seq, hw, bits=bits)
+    shared = StreamCache()
+
+    def critical(plan):
+        """(slowest shard's streaming cycles, its itemized xfer rows)."""
+        costs = [(stream_schedule(p)["total_cycles"], transfer_cycles(p))
+                 for p in plan.shards]
+        return (int(max(c for c, _ in costs)),
+                int(max(x for _, x in costs)))
+
+    out = []
+    for n in (1, 2, 4):
+        fleet = NPEFleet(cfg, hw, overlays=n, shard="tensor", slots=slots,
+                         capacity=capacity, max_new_tokens=12, bits=bits,
+                         stream_cache=shared)
+        for i in range(4):
+            fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i))
+        rep = fleet.run().report()
+        dplan = partition_tensor(dec, n)
+        pplan = partition_tensor(pre, n)
+        d_cyc, d_xfer = critical(dplan)
+        p_cyc, p_xfer = critical(pplan)
+        out.append(dict(
+            family="bert", shard="tensor", overlays=n, mmu_bits=bits,
+            heads_per_overlay=cfg.num_heads // n,
+            boundaries=dplan.boundaries,
+            requests=rep["requests"], tokens=rep["tokens"],
+            p50_ms=rep["p50_ms"], p99_ms=rep["p99_ms"],
+            service_p50_ms=rep["service_p50_ms"],
+            tok_s=round(rep["tokens_per_sec"], 1),
+            makespan_cycles=rep["makespan_cycles"],
+            transfer_cycles=rep["transfer_cycles"],
+            overlay_util=rep["overlay_util"],
+            decode_step_cycles=d_cyc,
+            decode_allreduce_cycles=d_xfer,
+            prefill_cycles=p_cyc,
+            prefill_allreduce_cycles=p_xfer))
+    return out
+
+
 def npec_disagg(bits=16) -> List[Dict]:
     """Chunked prefill + prefill/decode disaggregation (docs/serving.md,
     docs/fleet.md): decode inter-token latency under Poisson load, with
@@ -615,5 +687,6 @@ ALL = {
     "npec_buckets": npec_buckets,
     "npec_stream": npec_stream,
     "npec_fleet": npec_fleet,
+    "npec_tensor": npec_tensor,
     "npec_disagg": npec_disagg,
 }

@@ -15,7 +15,9 @@ tests/test_npec_runtime.py), the tile-streaming vs whole-op DAG
 schedule deltas to results/npec_stream_cycles.json (guarded by
 tests/test_npec_stream.py), and the multi-overlay fleet serving sweep
 (replicate/expert/pipeline sharding) to results/npec_fleet_cycles.json
-(guarded by tests/test_npec_fleet.py), the chunked-prefill /
+(guarded by tests/test_npec_fleet.py), the tensor-parallel fleet
+latency-vs-overlays table to results/npec_tensor_cycles.json (guarded
+by tests/test_npec_fleet.py), the chunked-prefill /
 prefill-decode-disaggregation latency table to
 results/npec_disagg_cycles.json (guarded by
 tests/test_npec_serving_props.py), and the length-bucketed/windowed
@@ -93,6 +95,7 @@ def write_npec_record(path: Path, rows=None,
                 else paper_tables.npec_serve() if "serve" in schema
                 else paper_tables.npec_stream() if "stream" in schema
                 else paper_tables.npec_fleet() if "fleet" in schema
+                else paper_tables.npec_tensor() if "tensor" in schema
                 else paper_tables.npec_disagg() if "disagg" in schema
                 else paper_tables.npec_buckets() if "buckets" in schema
                 else paper_tables.npec_vs_hand())
@@ -123,6 +126,9 @@ def main(argv=None):
     ap.add_argument("--json-out-fleet",
                     default="results/npec_fleet_cycles.json",
                     help="multi-overlay fleet cycle record ('' disables)")
+    ap.add_argument("--json-out-tensor",
+                    default="results/npec_tensor_cycles.json",
+                    help="tensor-parallel fleet cycle record ('' disables)")
     ap.add_argument("--json-out-disagg",
                     default="results/npec_disagg_cycles.json",
                     help="chunked-prefill/disaggregation cycle record "
@@ -135,7 +141,7 @@ def main(argv=None):
 
     from benchmarks import paper_tables
     npec_rows = decode_rows = moe_rows = serve_rows = stream_rows = None
-    fleet_rows = disagg_rows = buckets_rows = None
+    fleet_rows = tensor_rows = disagg_rows = buckets_rows = None
     for name, fn in paper_tables.ALL.items():
         t0 = time.perf_counter()
         rows = fn()
@@ -153,6 +159,8 @@ def main(argv=None):
             stream_rows = rows
         elif name == "npec_fleet":
             fleet_rows = rows
+        elif name == "npec_tensor":
+            tensor_rows = rows
         elif name == "npec_disagg":
             disagg_rows = rows
         elif name == "npec_buckets":
@@ -175,6 +183,9 @@ def main(argv=None):
     if args.json_out_fleet:
         write_npec_record(Path(args.json_out_fleet), fleet_rows,
                           schema="npec_fleet_cycles/v1")
+    if args.json_out_tensor:
+        write_npec_record(Path(args.json_out_tensor), tensor_rows,
+                          schema="npec_tensor_cycles/v1")
     if args.json_out_disagg:
         write_npec_record(Path(args.json_out_disagg), disagg_rows,
                           schema="npec_disagg_cycles/v1")

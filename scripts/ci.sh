@@ -182,7 +182,7 @@ if moe2["transfer_cycles"] != per_req * moe2["requests"]:
 
 doc = Path("docs/fleet.md").read_text()
 needed = {
-    "shard choices": "{replicate,expert,pipeline,prefill_decode}",
+    "shard choices": "{replicate,expert,pipeline,prefill_decode,tensor}",
     "expert capacity": f"= {cap}` rows",
     "dispatch crossing rows": f"{cap} x {e_r} = {rows}`",
     "per-layer crossing": f"4 x {rows} = {4 * rows} transfer cycles",
@@ -202,6 +202,78 @@ if missing:
         f"docs/fleet.md out of sync with the fleet partitioner / "
         f"results/npec_fleet_cycles.json — missing {missing}")
 print("docs/fleet.md fleet constants check OK")
+PY
+
+# tensor-parallel serving smoke (column-carved streams + cycle-charged
+# all-reduce on a 2-overlay fleet, end to end on the CLI)
+python -m repro.launch.serve --backend npec --smoke --overlays 2 \
+    --shard tensor
+
+# docs drift gate: docs/fleet.md's worked tensor-parallel all-reduce
+# must cite the constants partition_tensor actually computes (boundary
+# structure read off a smoke-scale carved plan, scaled to full
+# bert_base) and the committed tensor record's latency/transfer
+# numbers — and the record must keep the latency-drops-with-N property
+python - <<'PY'
+import json
+from pathlib import Path
+
+from repro import npec
+from repro.configs import get_config
+from repro.core.overlay import NPEHardware
+from repro.npec.fleet import partition_tensor
+
+hw = NPEHardware(vrwidth=1024)
+cfg = get_config("bert_base")                 # full: 12 layers, 12 heads
+smoke = get_config("bert_base", smoke=True)
+plan = partition_tensor(
+    npec.compile_decode(smoke, 24, hw, bits=16, batch=4), 2)
+per_layer = (plan.boundaries - 1) // smoke.num_layers
+boundaries = per_layer * cfg.num_layers + 1   # + the logits all-gather
+heads_per = cfg.num_heads // 2
+
+rec = json.loads(Path("results/npec_tensor_cycles.json").read_text())
+assert rec["schema"] == "npec_tensor_cycles/v1"
+rows = {r["overlays"]: r for r in rec["rows"]}
+for n in (2, 4):
+    r = rows[n]
+    if r["boundaries"] != boundaries:
+        raise SystemExit(
+            f"tensor record boundaries drifted from partition_tensor: "
+            f"{r['boundaries']} != {boundaries}")
+    if (r["decode_allreduce_cycles"] != 2 * 4 * (n - 1) * boundaries
+            or r["prefill_allreduce_cycles"]
+            != 2 * 24 * (n - 1) * boundaries):
+        raise SystemExit(
+            f"tensor record all-reduce cycles at N={n} drifted from the "
+            "2 x rows x (N-1) x boundaries convention")
+    if not (r["p50_ms"] < rows[1]["p50_ms"]
+            and r["decode_step_cycles"] < rows[1]["decode_step_cycles"]
+            and r["prefill_cycles"] < rows[1]["prefill_cycles"]):
+        raise SystemExit(
+            f"tensor record lost the latency-drops-with-N property at "
+            f"N={n} — regenerate via `python -m benchmarks.run`")
+
+doc = Path("docs/fleet.md").read_text()
+needed = {
+    "heads per overlay": f"{heads_per} heads per overlay",
+    "boundary formula": f"2 x {cfg.num_layers} + 1 =",
+    "boundary count": f"{boundaries} sync boundaries",
+    "decode allreduce":
+        f"= {rows[2]['decode_allreduce_cycles']}` all-reduce cycles",
+    "prefill allreduce": f"= {rows[2]['prefill_allreduce_cycles']}`",
+    "e2e p50 drop": (f"{rows[1]['p50_ms']:.1f} → {rows[2]['p50_ms']:.1f}"
+                     f" → {rows[4]['p50_ms']:.1f} ms"),
+    "decode step drop": (f"{rows[1]['decode_step_cycles']:,} → "
+                         f"{rows[2]['decode_step_cycles']:,} → "
+                         f"{rows[4]['decode_step_cycles']:,} cycles"),
+}
+missing = [k for k, token in needed.items() if token not in doc]
+if missing:
+    raise SystemExit(
+        f"docs/fleet.md out of sync with partition_tensor / "
+        f"results/npec_tensor_cycles.json — missing {missing}")
+print("docs/fleet.md tensor constants check OK")
 PY
 
 # serving-stack property suite: chunked-prefill equivalence + engine
@@ -412,7 +484,7 @@ if missing:
 print("docs/observability.md event/metric names check OK")
 PY
 
-# the observability gate suite: trace determinism (engine + all four
-# fleet shards), disabled-tracer report byte-identity, schema checker
+# the observability gate suite: trace determinism (engine + every
+# fleet shard), disabled-tracer report byte-identity, schema checker
 # positives/negatives, conservation identities, exact histograms
 python -m pytest -q tests/test_npec_obs.py

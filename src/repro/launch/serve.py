@@ -27,11 +27,11 @@ Two backends:
     results/npec_serve_cycles.json.
 
 ``--overlays N`` (with ``--shard {replicate,expert,pipeline,
-prefill_decode}`` and an optional Poisson ``--rate``) lifts the npec
-backend to the multi-overlay fleet simulator (`repro.npec.fleet.
+prefill_decode,tensor}`` and an optional Poisson ``--rate``) lifts the
+npec backend to the multi-overlay fleet simulator (`repro.npec.fleet.
 NPEFleet`, docs/fleet.md): N overlays pull from a shared admission queue
-on a common fleet clock, with expert-/pipeline-parallel sharding and
-prefill/decode disaggregation charging inter-overlay transfers as
+on a common fleet clock, with expert-/pipeline-/tensor-parallel sharding
+and prefill/decode disaggregation charging inter-overlay transfers as
 MRU/MWU traffic.  ``--prefill-chunk C`` streams every admitted prompt as
 ceil(S/C) causal cache slices (engine and fleet alike — the chunked
 single-engine path bounds the decode stall an unchunked admit causes);
@@ -212,6 +212,15 @@ def run_npec_fleet(args) -> Dict[str, float]:
     from repro.npec.fleet import NPEFleet
 
     cfg = get_config(args.arch, smoke=True)
+    if args.shard == "tensor" and args.overlays > 1:
+        for dim, what in ((cfg.num_heads, "attention heads"),
+                          (cfg.num_kv_heads, "kv heads"),
+                          (cfg.d_ff, "FFN width (d_ff)")):
+            if dim % args.overlays:
+                raise SystemExit(
+                    f"--shard tensor carves projections column-wise: "
+                    f"{what} ({dim}) of {args.arch} must divide evenly "
+                    f"across --overlays {args.overlays}")
     hw = NPEHardware(vrwidth=args.vrwidth)
     tracer = _make_tracer(args, hw.clock_hz)
     if args.shard == "expert":
@@ -316,12 +325,14 @@ def main(argv=None):
                     help="npec: overlays in the fleet (1 = the single-"
                          "engine path, bit-identical to before)")
     ap.add_argument("--shard", choices=("replicate", "expert", "pipeline",
-                                        "prefill_decode"),
+                                        "prefill_decode", "tensor"),
                     default="replicate",
                     help="npec fleet: replicate engines, expert-parallel "
-                         "MoE, pipeline-parallel layer groups, or "
+                         "MoE, pipeline-parallel layer groups, "
                          "prefill/decode disaggregation with KV caches "
-                         "shipped between overlays (docs/fleet.md)")
+                         "shipped between overlays, or tensor-parallel "
+                         "column-carved projections with cycle-charged "
+                         "all-reduces (docs/fleet.md)")
     ap.add_argument("--rate", type=float, default=None,
                     help="npec fleet: Poisson request rate (requests/sec "
                          "at the overlay clock); default all-at-t0")

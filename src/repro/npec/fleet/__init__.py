@@ -3,8 +3,9 @@
 N NPE overlays serve one admission queue on a common fleet clock, either
 as plain replicas (one `NPEEngine` per overlay) or with one model's
 compiled streams *sharded* across them — expert-parallel MoE,
-pipeline-parallel layer groups, and prefill/decode disaggregation with
-KV caches shipped between overlays — with inter-overlay transfers
+pipeline-parallel layer groups, prefill/decode disaggregation with
+KV caches shipped between overlays, and tensor-parallel column-carved
+projections with cycle-charged all-reduces — with inter-overlay transfers
 charged as MRU/MWU traffic instructions
 (`repro.npec.lower.make_transfer`).  See
 docs/fleet.md for the queue/clock/sharding semantics and
@@ -12,15 +13,16 @@ results/npec_fleet_cycles.json for the guarded benchmark record.
 """
 from repro.npec.fleet.partition import (ExpertPlan, Phase, PipelinePlan,
                                         PrefillDecodePlan, ShardTask,
-                                        instr_layer, partition_expert,
-                                        partition_pipeline,
-                                        partition_prefill_decode)
+                                        TensorPlan, instr_layer,
+                                        partition_expert, partition_pipeline,
+                                        partition_prefill_decode,
+                                        partition_tensor)
 from repro.npec.fleet.sim import (FleetStats, NPEFleet, OverlayTimeline,
                                   SHARD_STRATEGIES, SharedAdmissionQueue)
 
 __all__ = [
     "ExpertPlan", "FleetStats", "NPEFleet", "OverlayTimeline", "Phase",
     "PipelinePlan", "PrefillDecodePlan", "SHARD_STRATEGIES", "ShardTask",
-    "SharedAdmissionQueue", "instr_layer", "partition_expert",
-    "partition_pipeline", "partition_prefill_decode",
+    "SharedAdmissionQueue", "TensorPlan", "instr_layer", "partition_expert",
+    "partition_pipeline", "partition_prefill_decode", "partition_tensor",
 ]

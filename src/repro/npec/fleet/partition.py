@@ -27,6 +27,14 @@ instruction, `embed.*` precedes the first layer, and the untagged tail
     send / MRU recv pair sized from `Graph.kv_exports` — S tokens cross
     as `len(kv_exports) x S` rows (every kv head's k and v row per
     position, the exact rows `DecodeSession.load_slot` seeds).
+  * `partition_tensor(compiled, n)` — tensor parallelism for bert/dense
+    streams: every projection matmul's output columns split across the N
+    overlays at tile granularity (`repro.npec.lower.shard_tile` re-tiles
+    each shard through the same row_tiles x k_tiles carving), per-head
+    NVU consumers stay home with their head, and the row-parallel
+    reductions (attention output projection, FFN down-projection) plus
+    the logits all-gather charge `rows x (N-1)` send + recv pairs at
+    every shard boundary.
   * `partition_expert(compiled, n)` — expert parallelism for MoE streams:
     the per-expert matmul runs are independent by construction (PR 3), so
     expert e lands on *relative* overlay e % n (relative to the request's
@@ -43,10 +51,14 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.npec.lower import CompiledProgram, LoweredInstr, make_transfer
+from repro.core.overlay import nvu_cycles
+from repro.npec.lower import (CompiledProgram, LoweredInstr, make_transfer,
+                              nvu_consume, shard_tile)
 
 _LAYER_RE = re.compile(r"^(?:enc|blk)(\d+)\.")
 _EXPERT_RE = re.compile(r"^(?:enc|blk)(\d+)\.x(\d+)\.")
+_HEAD_RE = re.compile(r"\.h(\d+)(?:\.|$)")
+_KV_RE = re.compile(r"\.kv(\d+)(?:\.|$)")
 
 
 def instr_layer(tag: str) -> Optional[int]:
@@ -322,3 +334,221 @@ def partition_expert(compiled: CompiledProgram, n: int) -> ExpertPlan:
                 tasks.append(ShardTask(rel, prog, 2 * rows))
             phases.append(Phase(tasks))
     return ExpertPlan(phases=phases, overlays=n, capacity=capacity)
+
+
+# --- tensor parallelism (bert / dense) ---------------------------------
+
+# projection classification by tag tail (repro.npec.trace conventions):
+# column-parallel matmuls keep a balanced slice of the output columns on
+# every overlay; row-parallel matmuls split the contraction (each overlay
+# computes a partial sum over its own heads' / FFN columns' slice) and
+# close with an all-reduce; the logits head is column-parallel over the
+# vocab and closes with an all-gather so every overlay can sample.
+_COL_TAILS = ("ff1", "ffg", "ffu")
+_ROW_TAILS = ("ff2", "ffd")
+
+
+def _mm_kind(tag: str) -> Optional[str]:
+    if tag.endswith(".attn.out"):
+        return "reduce"
+    tail = tag.rsplit(".", 1)[-1]
+    if tail in _ROW_TAILS:
+        return "reduce"
+    if tail in _COL_TAILS:
+        return "col"
+    if tail == "logits":
+        return "gather"
+    return None
+
+
+@dataclass
+class TensorPlan:
+    """Column-carved shards of one compiled stream, one per overlay.
+
+    Every shard is a complete stream for its slice of the model — its
+    heads' attention, its columns of the FFN, its slice of the vocab —
+    synchronized with its peers at `boundaries` all-reduce/all-gather
+    points, each charging `rows x (overlays - 1)` send + recv rows on
+    every shard (`transfer_rows_per_shard`)."""
+    shards: List[CompiledProgram]
+    overlays: int
+    rows: int                      # activation rows in flight (S or B)
+    heads: int                     # attention heads carved across shards
+    kv_heads: int                  # kv groups carved across shards
+    boundaries: int                # sync points per shard stream
+
+    @property
+    def transfer_rows_per_shard(self) -> int:
+        return 2 * self.rows * (self.overlays - 1) * self.boundaries
+
+    @property
+    def transfer_rows(self) -> int:
+        return self.overlays * self.transfer_rows_per_shard
+
+
+def _head_counts(compiled: CompiledProgram) -> Tuple[int, int]:
+    """(heads, kv_heads) carried by a stream's tags.  Decode streams name
+    kv groups outright (`.kv{j}.`); prefill streams tag k/v projections
+    under each group's first head, so the kv count is how many distinct
+    heads own a `.k` projection."""
+    heads = set()
+    kvs = set()
+    k_owners = set()
+    for ins in compiled.instrs:
+        m = _HEAD_RE.search(ins.tag)
+        if m:
+            heads.add(int(m.group(1)))
+            if ins.tag.rsplit(".", 1)[-1] == "k":
+                k_owners.add(int(m.group(1)))
+        m = _KV_RE.search(ins.tag)
+        if m:
+            kvs.add(int(m.group(1)))
+    n_heads = (max(heads) + 1) if heads else 0
+    if kvs:
+        n_kv = max(kvs) + 1
+    elif k_owners:
+        n_kv = len(k_owners)
+    else:
+        n_kv = n_heads
+    return n_heads, n_kv
+
+
+def partition_tensor(compiled: CompiledProgram, n: int) -> TensorPlan:
+    """Carve a bert/dense stream into `n` tensor-parallel column shards.
+
+    Per-head work (q/k/v projections, qk, softmax, av, rope) lands whole
+    on the overlay owning the head — heads split into contiguous blocks
+    of `heads/n`, kv groups into blocks of `kv_heads/n`, so a group's
+    grouped-query consumers always live with its k/v banks.  FFN up
+    projections split their output columns `m/n` per overlay (the
+    elementwise activation scales with them); the attention output
+    projection and FFN down projection split the *contraction* instead —
+    each overlay multiplies its own slice against its rows of the weight
+    and the partial sums meet in an all-reduce charged as paired MWU
+    send / MRU recv of `rows x (n-1)` each.  The logits head splits the
+    vocab columns and closes with the same-shaped all-gather.  Layer
+    norms replicate whole (every overlay needs the full hidden state to
+    re-enter its columns), matching Megatron-style tensor parallelism.
+    Tokens are therefore bit-identical to the monolithic stream — only
+    cycles move."""
+    if n < 1:
+        raise ValueError(f"need at least one overlay, got {n}")
+    heads, kv_heads = _head_counts(compiled)
+    if heads == 0:
+        raise ValueError("stream has no per-head attention tags to carve "
+                         "(tensor parallelism needs a bert/dense stream)")
+    if heads % n or kv_heads % n:
+        raise ValueError(
+            f"tensor parallelism carves attention head-wise: {heads} heads"
+            f" / {kv_heads} kv heads must divide across {n} overlays")
+    rows = next((ins.shape[0] for ins in compiled.instrs
+                 if ins.unit == "MMU"), 1)
+    if n == 1:
+        return TensorPlan(shards=[compiled], overlays=1, rows=int(rows),
+                          heads=heads, kv_heads=kv_heads, boundaries=0)
+    hw, bits = compiled.hw, compiled.bits
+    h_per, kv_per = heads // n, kv_heads // n
+    xfer_rows = int(rows) * (n - 1)
+
+    def owner(tag: str) -> Optional[int]:
+        m = _HEAD_RE.search(tag)
+        if m:
+            return int(m.group(1)) // h_per
+        m = _KV_RE.search(tag)
+        if m:
+            return int(m.group(1)) // kv_per
+        return None
+
+    shards: List[CompiledProgram] = []
+    boundaries = 0
+    for s in range(n):
+        instrs: List[LoweredInstr] = []
+        new_index: Dict[int, int] = {}
+        last_sync: Optional[int] = None
+        boundaries = 0
+
+        def mapped_deps(ins: LoweredInstr) -> Tuple[int, ...]:
+            # deps on instructions another shard owns are satisfied by the
+            # last all-reduce: their contribution arrived with the reduced
+            # activations (dropped before the first boundary — the carved
+            # prologue has no cross-shard consumers yet)
+            deps: List[int] = []
+            for d in ins.deps:
+                nd = new_index.get(d, last_sync)
+                if nd is not None and nd not in deps:
+                    deps.append(nd)
+            return tuple(deps)
+
+        def boundary(oi: int, ins: LoweredInstr, kind: str) -> None:
+            nonlocal last_sync, boundaries
+            mi = new_index[oi]
+            send = make_transfer("MWU", xfer_rows, (mi,),
+                                 f"{kind}.{ins.tag}.send")
+            si = len(instrs)
+            instrs.append(send)
+            recv = make_transfer("MRU", xfer_rows, (si,),
+                                 f"{kind}.{ins.tag}.recv")
+            new_index[oi] = len(instrs)     # consumers see the synced value
+            instrs.append(recv)
+            last_sync = new_index[oi]
+            boundaries += 1
+
+        for oi, ins in enumerate(compiled.instrs):
+            own = owner(ins.tag)
+            if own is not None and own != s:
+                continue
+            deps = mapped_deps(ins)
+            if ins.unit == "MMU" and own is None:
+                kind = _mm_kind(ins.tag)
+                if kind is not None:
+                    mm_n, mm_k, mm_m = ins.shape
+                    axis = "k" if kind == "reduce" else "m"
+                    if axis == "m" and kind == "col" and mm_m % n:
+                        raise ValueError(
+                            f"tensor parallelism carves {ins.tag} "
+                            f"column-wise: FFN width {mm_m} must divide "
+                            f"across {n} overlays")
+                    st = shard_tile(hw, mm_n, mm_k, mm_m, bits,
+                                    idx=s, of=n, axis=axis)
+                    new_index[oi] = len(instrs)
+                    instrs.append(LoweredInstr(
+                        "MMU", "matmul", st["cycles"], deps, ins.tag,
+                        (st["n"], st["k"], st["m"]), ins.node,
+                        meta=dict(tiling=st["tiling"], stream=st["stream"],
+                                  weight_resident=ins.meta.get(
+                                      "weight_resident", True),
+                                  shard=st["shard"])))
+                    if kind == "reduce":
+                        boundary(oi, ins, "allreduce")
+                    elif kind == "gather":
+                        boundary(oi, ins, "allgather")
+                    continue
+            if ins.unit == "NVU" and own is None \
+                    and ins.meta.get("ir_op") == "act":
+                # elementwise activation over a column-split FFN: each
+                # overlay sweeps only its own slice of the elements
+                n_el = ins.shape[0]
+                el = n_el // n + (1 if s < n_el % n else 0)
+                charged = nvu_cycles(hw, ins.op, el, compiled.nvu_source)
+                meta = dict(ins.meta,
+                            consume=nvu_consume(hw, charged, el),
+                            model_cycles=nvu_cycles(hw, ins.op, el,
+                                                    "model"),
+                            shard=dict(idx=s, of=n, elements=el,
+                                       full_elements=n_el))
+                new_index[oi] = len(instrs)
+                instrs.append(LoweredInstr(
+                    "NVU", ins.op, charged, deps, ins.tag, (el,),
+                    ins.node, meta))
+                continue
+            # owned-whole (per-head work) or replicated-whole (layer
+            # norms, structural traffic): the original instruction rides
+            # along at its original charge
+            new_index[oi] = len(instrs)
+            instrs.append(LoweredInstr(ins.unit, ins.op, ins.cycles, deps,
+                                       ins.tag, ins.shape, ins.node,
+                                       ins.meta))
+        shards.append(CompiledProgram(compiled.graph, hw, bits,
+                                      compiled.nvu_source, instrs, {}))
+    return TensorPlan(shards=shards, overlays=n, rows=int(rows),
+                      heads=heads, kv_heads=kv_heads, boundaries=boundaries)

@@ -34,6 +34,16 @@ Three sharding strategies:
     the KV recv transfer instead of a prefill — so decode steps are
     NEVER stalled by a prompt's prefill, the p99 inter-token cliff the
     chunked single-engine mode only bounds.
+  * ``tensor`` — tensor parallelism (bert/dense): ONE engine's
+    continuous batching drives all N overlays in lockstep.  Every stream
+    charge is carved into N column shards (repro.npec.fleet.partition,
+    `partition_tensor`): per-overlay heads, FFN columns, and vocab
+    slices, with the attention-output / FFN-down all-reduces and the
+    logits all-gather charged as MWU/MRU rows inside each shard stream.
+    The shards place concurrently on the shard timelines and the engine
+    clock lands on the slowest shard's completion — so a single
+    request's latency (not just fleet throughput) drops with N, at the
+    cost of the itemized all-reduce traffic.
   * ``expert`` — MoE expert parallelism over single-pass inference
     requests (MoE decode streams are a ROADMAP open item, so the moe
     family serves compiled full-stream inferences): each request's
@@ -58,10 +68,11 @@ from repro.core.overlay import NPEHardware
 from repro.npec import (CompiledProgram, compile_decode, compile_model,
                         compile_prefill, schedule_for, transfer_cycles)
 from repro.npec.fleet.partition import (ExpertPlan, PipelinePlan,
-                                        PrefillDecodePlan,
+                                        PrefillDecodePlan, TensorPlan,
                                         partition_expert,
                                         partition_pipeline,
-                                        partition_prefill_decode)
+                                        partition_prefill_decode,
+                                        partition_tensor)
 from repro.npec.obs.metrics import MetricsRegistry
 from repro.npec.obs.tracer import NULL_TRACER
 from repro.npec.runtime.batch import Request
@@ -70,7 +81,8 @@ from repro.npec.runtime.engine import (NPEEngine, chunk_spans,
                                        synthetic_token)
 from repro.npec.runtime.stream_cache import StreamCache, StreamKey
 
-SHARD_STRATEGIES = ("replicate", "expert", "pipeline", "prefill_decode")
+SHARD_STRATEGIES = ("replicate", "expert", "pipeline", "prefill_decode",
+                    "tensor")
 
 
 @dataclass
@@ -317,6 +329,15 @@ class NPEFleet:
                 raise ValueError(
                     f"prefill_overlays must leave at least one decode "
                     f"overlay: 1 <= {prefill_overlays} < {overlays}")
+        if shard == "tensor" and overlays > 1:
+            for dim, what in ((cfg.num_heads, "attention head count"),
+                              (cfg.num_kv_heads, "kv head count"),
+                              (cfg.d_ff, "FFN width (d_ff)")):
+                if dim % overlays:
+                    raise ValueError(
+                        f"tensor parallelism carves projections "
+                        f"column-wise: {what} ({dim}) must divide evenly "
+                        f"across {overlays} overlays")
         self.cfg = cfg
         self.hw = hw if hw is not None else NPEHardware()
         self.overlays = overlays
@@ -344,6 +365,8 @@ class NPEFleet:
         self.engines: List[NPEEngine] = []
         self._pipeline_plans: Dict[int, Tuple[CompiledProgram,
                                               PipelinePlan]] = {}
+        self._tensor_plans: Dict[int, Tuple[CompiledProgram,
+                                            TensorPlan]] = {}
         self.expert_plan: Optional[ExpertPlan] = None
         self.disagg_plan: Optional[PrefillDecodePlan] = None
         self.prefill_chunk = prefill_chunk
@@ -398,10 +421,14 @@ class NPEFleet:
             return
 
         # replicate: one engine per overlay; pipeline: one overlay per
-        # STAGE, plus N engine groups so every stage has work in flight.
-        hook = (self._replicate_hook if shard == "replicate"
-                else self._pipeline_hook)
-        for g in range(overlays):
+        # STAGE, plus N engine groups so every stage has work in flight;
+        # tensor: ONE engine drives all N overlays in lockstep (each of
+        # its charges is carved into N concurrent column shards).
+        hook = {"replicate": self._replicate_hook,
+                "pipeline": self._pipeline_hook,
+                "tensor": self._tensor_hook}[shard]
+        n_engines = 1 if shard == "tensor" else overlays
+        for g in range(n_engines):
             view = _EngineQueueView(self.queue)
             eng = NPEEngine(cfg, self.hw, slots=slots, capacity=capacity,
                             max_new_tokens=max_new_tokens, bits=bits,
@@ -413,10 +440,10 @@ class NPEFleet:
                             prefill_chunk=prefill_chunk,
                             tracer=self.tracer)
             view.engine = eng
-            if shard == "pipeline":
-                # stage placements are traced by _pipeline_hook itself
-                # (one span per stage overlay); the engine's own
-                # whole-charge emission would double-book them
+            if shard == "pipeline" or (shard == "tensor" and overlays > 1):
+                # stage/shard placements are traced by the hook itself
+                # (one span per overlay); the engine's own whole-charge
+                # emission would double-book them
                 eng.trace_streams = False
             self.engines.append(eng)
 
@@ -557,6 +584,64 @@ class NPEFleet:
             start, t = self.timelines[s].place(t, c, x)
             if tr.enabled:
                 tr.stream(s, kind, stage_prog, start, t, self.cycle_model)
+        engine.clock.advance_to(t, idle=False)
+
+    def _tensor_costs(self, prog: CompiledProgram
+                      ) -> List[Tuple[CompiledProgram, float, int]]:
+        """Per-shard (shard stream, scheduled cycles, transfer cycles)
+        for a stream, carved once per compiled program."""
+        key = id(prog)
+        if key not in self._tensor_plans:
+            plan = partition_tensor(prog, self.overlays)
+            self._tensor_plans[key] = (prog, plan)
+        _, plan = self._tensor_plans[key]
+        return [(p, schedule_for(p, self.cycle_model)["total_cycles"],
+                 transfer_cycles(p)) for p in plan.shards]
+
+    def _tensor_hook(self, engine: NPEEngine, kind: str,
+                     prog: CompiledProgram, cycles: float) -> None:
+        """Place the stream's N column shards concurrently on the shard
+        timelines; the engine clock lands on the slowest shard's
+        completion, so its continuous batching sees the tensor-parallel
+        step latency directly.  The critical-path all-reduce share is
+        reported back through `engine._xfer_attr` so the engine's request
+        spans can split communication from compute (docs/observability.md
+        `allreduce` spans)."""
+        if self.overlays == 1:
+            # identity plan: bit-equal replicate semantics, fractional
+            # cycle carry included (the fleet-of-1 gate)
+            tl = self.timelines[0]
+            start = engine.clock.cycles
+            end = engine.clock.advance(cycles)
+            tl.free = end
+            tl.busy += end - start
+            return
+        tr = self.tracer
+        t0 = engine.clock.cycles
+        if kind == "migrate":
+            # bucket-crossing bank migration: each shard overlay moves
+            # its OWN heads' / columns' banks concurrently (local
+            # traffic, not inter-overlay xfer)
+            share = cycles / self.overlays
+            t = t0
+            for tl in self.timelines:
+                start, end = tl.place(t0, share)
+                t = max(t, end)
+                if tr.enabled:
+                    tr.stream(tl.idx, "migrate", prog, start, end,
+                              self.cycle_model)
+            engine.clock.advance_to(t, idle=False)
+            return
+        t = t0
+        xfer_crit = 0
+        for s, (shard_prog, c, x) in enumerate(self._tensor_costs(prog)):
+            start, end = self.timelines[s].place(t0, c, x)
+            t = max(t, end)
+            xfer_crit = max(xfer_crit, int(x))
+            if tr.enabled:
+                tr.stream(s, kind, shard_prog, start, end,
+                          self.cycle_model)
+        engine._xfer_attr = min(xfer_crit, max(0, t - t0 - 1))
         engine.clock.advance_to(t, idle=False)
 
     # --- serving loop --------------------------------------------------

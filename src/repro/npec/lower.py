@@ -103,6 +103,37 @@ def tile_stream(tiling: Dict[str, Any]) -> Dict[str, int]:
     return dict(slices=tiling["tiles"], slice_cycles=tiling["cols"])
 
 
+def shard_tile(hw: NPEHardware, n: int, k: int, m: int, bits: int, *,
+               idx: int, of: int, axis: str) -> Dict[str, Any]:
+    """Re-tile one tensor-parallel shard of an (n,k)@(k,m) matmul
+    (repro.npec.fleet.partition_tensor).  ``axis="m"`` keeps shard `idx`'s
+    slice of the N output columns (column-parallel: each overlay streams
+    its own `m//of` columns through the same row_tiles x k_tiles carving,
+    balanced when `m % of != 0`); ``axis="k"`` keeps its slice of the
+    contraction (row-parallel: each overlay computes a partial sum over
+    `k//of` of the K inputs, reduced at the shard boundary).  Returns the
+    shard's `tiling` + `stream` metadata — the same per-tile carving
+    `tile_matmul` emits, so `mmu_tiling_summary`'s slices x slice_cycles
+    invariant holds on sharded streams too."""
+    if axis not in ("m", "k"):
+        raise ValueError(f"shard axis must be 'm' or 'k', got {axis!r}")
+    if not 0 <= idx < of:
+        raise ValueError(f"shard index {idx} outside fleet of {of}")
+    full_k, full_m = k, m
+    if axis == "m":
+        m = m // of + (1 if idx < m % of else 0)
+    else:
+        if k % of:
+            raise ValueError(
+                f"contraction dim {k} does not divide across {of} overlays")
+        k = k // of
+    tiling = tile_matmul(hw, n, k, m, bits)
+    return dict(cycles=tiling["tiled_cycles"], n=n, k=k, m=m,
+                tiling=tiling, stream=tile_stream(tiling),
+                shard=dict(idx=idx, of=of, axis=axis,
+                           full_k=full_k, full_m=full_m))
+
+
 def nvu_consume(hw: NPEHardware, cycles: int, n_elements: int,
                 elem_bits: int = 16) -> Dict[str, int]:
     """Rate-matched consumption profile of an NVU instruction: the routine
@@ -323,8 +354,11 @@ class CompiledProgram:
 
         Invariant (ragged-tile charging): every MMU instruction charges
         exactly the sum of its per-tile slices — slices x slice_cycles ==
-        tiled_cycles == the instruction's scheduled cost."""
-        ideal = tiled = skinny = 0
+        tiled_cycles == the instruction's scheduled cost.  Tensor-parallel
+        shard streams (repro.npec.fleet.partition_tensor) re-tile their
+        carved matmuls through `shard_tile`, so the same invariant covers
+        them; `sharded_matmuls` counts how many carry shard metadata."""
+        ideal = tiled = skinny = sharded = 0
         worst = 1.0
         for ins in self.instrs:
             if ins.unit != "MMU":
@@ -336,12 +370,15 @@ class CompiledProgram:
                 ins.tag, "per-tile charges drifted from the charged cost")
             ideal += t["ideal_cycles"]
             tiled += t["tiled_cycles"]
+            if "shard" in ins.meta:
+                sharded += 1
             if ins.shape[0] < self.hw.mmu_pes:
                 skinny += 1
                 worst = min(worst, t["efficiency"])
         return dict(ideal_cycles=ideal, tiled_cycles=tiled,
                     efficiency=(ideal / tiled) if tiled else 1.0,
-                    skinny_matmuls=skinny, worst_skinny_efficiency=worst)
+                    skinny_matmuls=skinny, worst_skinny_efficiency=worst,
+                    sharded_matmuls=sharded)
 
 
 def make_transfer(unit: str, rows: int, deps: Tuple[int, ...],

@@ -21,9 +21,14 @@ SPAN_MIGRATE = "migrate"
 SPAN_KV_RECV = "kv_recv"
 SPAN_KV_SHIP = "kv_ship"
 SPAN_EXPERT = "expert_phase"
+#: Tensor-sharded fleets split each charged window into compute + the
+#: critical-path all-reduce tail (repro.npec.fleet `_tensor_hook` ->
+#: `NPEEngine._xfer_attr`), so communication is attributable per request.
+SPAN_ALLREDUCE = "allreduce"
 
 REQUEST_SPANS = (SPAN_QUEUE, SPAN_PREFILL, SPAN_PREFILL_CHUNK, SPAN_DECODE,
-                 SPAN_MIGRATE, SPAN_KV_RECV, SPAN_KV_SHIP, SPAN_EXPERT)
+                 SPAN_MIGRATE, SPAN_KV_RECV, SPAN_KV_SHIP, SPAN_EXPERT,
+                 SPAN_ALLREDUCE)
 
 INSTANT_SUBMIT = "submit"
 INSTANT_FIRST_TOKEN = "first_token"
@@ -42,6 +47,7 @@ ATTR_CATEGORY = {
     SPAN_KV_SHIP: "transfer",
     SPAN_MIGRATE: "migrate",
     SPAN_EXPERT: "expert",
+    SPAN_ALLREDUCE: "transfer",
 }
 
 # --- overlay-track stream kinds ------------------------------------------

@@ -337,6 +337,12 @@ class NPEEngine:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.trace_overlay = engine_id
         self.trace_streams = True
+        # critical-path inter-overlay transfer cycles inside the LAST
+        # charge, written back by a fleet's charge hook (tensor sharding):
+        # request spans split the charged window into compute + an
+        # `allreduce` tail so profile.py can attribute communication vs
+        # compute per request.  Always 0 on the lone-engine path.
+        self._xfer_attr = 0
         self.stream_cache = (stream_cache if stream_cache is not None
                              else StreamCache())
         self.window = int(window) if window is not None else None
@@ -477,6 +483,7 @@ class NPEEngine:
         occupied, which is what the tracer's spans and the per-request
         attributions are stamped with."""
         t0 = self.clock.cycles
+        self._xfer_attr = 0              # hooks set it per charge
         if self.charge_hook is not None:
             self.charge_hook(self, kind, prog, cycles)
         else:
@@ -562,8 +569,15 @@ class NPEEngine:
         self.stats.metrics.inc("prefills")
         self.stats.metrics.observe("prefill_cycles", t1 - t0)
         if tr.enabled:
-            tr.req_span(req.rid, "prefill", t0, t1, self.trace_overlay,
+            # a tensor fleet's hook reports the critical-path all-reduce
+            # share of the charge; split it off the compute span so the
+            # request track attributes communication separately
+            tm = t1 - self._xfer_attr
+            tr.req_span(req.rid, "prefill", t0, tm, self.trace_overlay,
                         rows=len(req.prompt))
+            if tm < t1:
+                tr.req_span(req.rid, "allreduce", tm, t1,
+                            self.trace_overlay, rows=len(req.prompt))
         self._ensure_bucket(len(req.prompt))   # load needs S rows per bank
         if self.numeric:
             res = execute(prog, self.params, {"tokens": req.prompt},
@@ -639,10 +653,14 @@ class NPEEngine:
         t0, t1 = self._charge("prefill", prog, self._schedule_cycles(prog))
         self.stats.metrics.observe("prefill_cycles", t1 - t0)
         if self.tracer.enabled:
-            self.tracer.req_span(st.req.rid, "prefill_chunk", t0, t1,
+            tm = t1 - self._xfer_attr
+            self.tracer.req_span(st.req.rid, "prefill_chunk", t0, tm,
                                  self.trace_overlay, index=st.next_i,
                                  base=base, rows=rows,
                                  of=len(st.spans))
+            if tm < t1:
+                self.tracer.req_span(st.req.rid, "allreduce", tm, t1,
+                                     self.trace_overlay, rows=rows)
         if self.numeric:
             if st.caches is None:
                 g = prog.graph
@@ -736,11 +754,15 @@ class NPEEngine:
                                label=self._bucket)
         self.stats.metrics.observe("decode_step_cycles", t1 - t0)
         if self.tracer.enabled:
-            self.tracer.req_split(
-                [r.rid for s, r in self.pool.active()
-                 if s not in self._prefilling],
-                "decode_step", t0, t1, self.trace_overlay,
-                bucket=self._bucket)
+            rids = [r.rid for s, r in self.pool.active()
+                    if s not in self._prefilling]
+            tm = t1 - self._xfer_attr
+            self.tracer.req_split(rids, "decode_step", t0, tm,
+                                  self.trace_overlay, bucket=self._bucket)
+            if tm < t1:
+                self.tracer.req_split(rids, "allreduce", tm, t1,
+                                      self.trace_overlay,
+                                      bucket=self._bucket)
         if self.numeric:
             out = np.asarray(self.session.step(self._next_tok,
                                                active=active))

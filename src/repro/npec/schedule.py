@@ -220,6 +220,39 @@ def _stall_key(ins: LoweredInstr) -> str:
     return tail or ins.op
 
 
+def _xfer_key(ins: LoweredInstr) -> str:
+    """Stall key for an inter-overlay transfer instruction: the LEADING
+    tag component names the crossing kind (`allreduce.enc0.attn.out.send`
+    -> `allreduce`, `allgather.logits.recv` -> `allgather`,
+    `xfer.s1.recv` -> `xfer`), so sharded streams attribute their
+    communication stalls separately from the NVU budgets."""
+    head = ins.tag.split(".", 1)[0] if ins.tag else ins.op
+    return head or ins.op
+
+
+def _xfer_blocker(instrs: List[LoweredInstr], i: int,
+                  end: List[float], prev_end: float):
+    """Latest-ending transfer instruction the MMU instruction `i`
+    transitively waits on past `prev_end` — the all-reduce (or stage
+    crossing) actually blocking it.  Only consulted when no direct NVU
+    dependency explains the gap, so monolithic streams (which carry no
+    ``meta["xfer"]`` instructions) schedule bit-identically."""
+    seen = set()
+    frontier = list(instrs[i].deps)
+    best = None
+    while frontier:
+        d = frontier.pop()
+        if d in seen:
+            continue
+        seen.add(d)
+        if instrs[d].meta.get("xfer") and end[d] > prev_end:
+            if best is None or end[d] > end[best]:
+                best = d
+            continue
+        frontier.extend(instrs[d].deps)
+    return best
+
+
 def stream_schedule(compiled: CompiledProgram) -> Dict:
     """Tile-granular streaming schedule (the paper's own latency model).
 
@@ -343,13 +376,22 @@ def _stall_intervals(instrs: List[LoweredInstr], start: List[float],
             if blockers:
                 b = max(blockers, key=lambda d: end[d])
                 intervals.append((prev_end, start[i], _stall_key(instrs[b])))
+            else:
+                # sharded streams: no nonlinearity explains the gap, but a
+                # transfer (all-reduce / stage crossing) it waits on might
+                b = _xfer_blocker(instrs, i, end, prev_end)
+                if b is not None:
+                    intervals.append((prev_end, start[i],
+                                      _xfer_key(instrs[b])))
         prev_end = max(prev_end, end[i])
     last_mmu = max((end[i] for i in mmu), default=0.0)
     t = last_mmu
     for i in sorted(range(n), key=lambda i: end[i]):
-        if instrs[i].unit != "NVU" or end[i] <= t:
+        is_xfer = bool(instrs[i].meta.get("xfer"))
+        if (instrs[i].unit != "NVU" and not is_xfer) or end[i] <= t:
             continue
-        intervals.append((max(t, start[i]), end[i], _stall_key(instrs[i])))
+        key = _xfer_key(instrs[i]) if is_xfer else _stall_key(instrs[i])
+        intervals.append((max(t, start[i]), end[i], key))
         t = end[i]
     return intervals
 

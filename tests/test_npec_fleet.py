@@ -15,6 +15,11 @@ Five gates:
     crossings of C x E_r rows per remote;
   * Poisson determinism — `SyntheticRequests.arrival_cycles` is seeded,
     sorted, and rate-scaled;
+  * tensor parallelism — fleet-of-1 is the identity plan (bit-equal to
+    the lone engine), N in {2, 4} reproduce the replicate fleet's token
+    streams at strictly lower per-request latency with the all-reduce
+    itemized, and carved column shards reassemble to the unsharded
+    projection exactly (hypothesis property);
   * cycle regression — recomputing the fleet table reproduces
     results/npec_fleet_cycles.json exactly (cost-only: the record is
     pure cycle model, regenerate via `python -m benchmarks.run` if the
@@ -28,8 +33,9 @@ import pytest
 from repro import npec
 from repro.core.overlay import NPEHardware
 from repro.data.pipeline import SyntheticRequests
+from _hypothesis_compat import given, settings, st
 from repro.npec.fleet import (NPEFleet, partition_expert,
-                              partition_pipeline)
+                              partition_pipeline, partition_tensor)
 from repro.npec.runtime import NPEEngine
 
 HW = NPEHardware(vrwidth=1024)
@@ -411,6 +417,216 @@ def test_partition_prefill_decode_plan():
 
 
 # ---------------------------------------------------------------------------
+# Tensor parallelism (column-carved streams + cycle-charged all-reduce)
+# ---------------------------------------------------------------------------
+
+def _tensor_cfg():
+    """Smoke bert with 4 kv heads so N=4 divides (the stock smoke shrink
+    keeps 2 kv groups, which only divides across 2 overlays)."""
+    return dataclasses.replace(_smoke_cfg("bert_base"), num_kv_heads=4)
+
+
+def test_fleet_of_one_tensor_bit_equal_to_lone_engine():
+    """ISSUE acceptance: a tensor fleet of 1 is the identity plan —
+    same tokens, same per-request cycle stamps, same makespan as a lone
+    `NPEEngine.run()`, zero transfers."""
+    cfg = _smoke_cfg("bert_base")
+    lone = NPEEngine(cfg, HW, slots=2, capacity=24, max_new_tokens=6)
+    _submit_workload(lambda p, e: lone.submit(p, eos_id=e),
+                     vocab=cfg.vocab_size)
+    ls = lone.run()
+
+    fleet = NPEFleet(cfg, HW, overlays=1, shard="tensor", slots=2,
+                     capacity=24, max_new_tokens=6)
+    _submit_workload(lambda p, e: fleet.submit(p, eos_id=e),
+                     vocab=cfg.vocab_size)
+    fs = fleet.run()
+
+    assert fs.makespan_cycles == ls.total_cycles
+    assert fs.transfer_cycles == 0
+    lr = {r.rid: r for r in ls.requests}
+    fr = {r.rid: r for r in fs.requests}
+    assert set(lr) == set(fr)
+    for rid, lreq in lr.items():
+        freq = fr[rid]
+        assert freq.generated == lreq.generated
+        assert (freq.submit_cycle, freq.admit_cycle,
+                freq.first_token_cycle, freq.finish_cycle) == \
+               (lreq.submit_cycle, lreq.admit_cycle,
+                lreq.first_token_cycle, lreq.finish_cycle)
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_tensor_fleet_conserves_tokens_vs_replicate(n):
+    """ISSUE acceptance: the tensor fleet emits token streams identical
+    to the replicate fleet for the same workload — only cycles move."""
+    cfg = _tensor_cfg()
+
+    def run(shard):
+        fleet = NPEFleet(cfg, HW, overlays=n, shard=shard, slots=2,
+                         capacity=24, max_new_tokens=6)
+        _submit_workload(lambda p, e: fleet.submit(p, eos_id=e),
+                         vocab=cfg.vocab_size)
+        return fleet, fleet.run()
+
+    _, rep = run("replicate")
+    tfleet, ten = run("tensor")
+    assert ({r.rid: r.generated for r in ten.requests}
+            == {r.rid: r.generated for r in rep.requests})
+    assert sorted(r.rid for r in ten.requests) == list(range(8))
+    assert all(r.done for r in ten.requests)
+    assert ten.tokens == rep.tokens
+    assert ten.transfer_cycles > 0
+    assert rep.transfer_cycles == 0
+    for eng in tfleet.engines:
+        assert len(eng.pool) == 0
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_tensor_fleet_conservation(n):
+    """Every overlay's fleet clock is fully accounted: charged compute +
+    itemized transfers + idle == makespan, on every shard timeline."""
+    cfg = _tensor_cfg()
+    fleet = NPEFleet(cfg, HW, overlays=n, shard="tensor", slots=2,
+                     capacity=24, max_new_tokens=6)
+    _submit_workload(lambda p, e: fleet.submit(p, eos_id=e), n=12,
+                     vocab=cfg.vocab_size)
+    stats = fleet.run()
+
+    assert sorted(r.rid for r in stats.requests) == list(range(12))
+    assert all(r.done for r in stats.requests)
+    assert len(fleet.queue) == 0
+    make = stats.makespan_cycles
+    for tl in fleet.timelines:
+        compute, xfer = tl.busy - tl.xfer, tl.xfer
+        idle = make - tl.busy
+        assert compute > 0 and xfer > 0 and idle >= 0
+        assert compute + xfer + idle == make
+    assert stats.transfer_cycles == sum(tl.xfer for tl in fleet.timelines)
+
+
+def test_tensor_latency_drops_with_overlays():
+    """ISSUE acceptance at smoke scale: carving every projection across
+    N overlays makes each request strictly faster end to end."""
+    cfg = _tensor_cfg()
+    reqs = SyntheticRequests(cfg.vocab_size, max_prompt=12)
+    reports = {}
+    for n in (1, 2, 4):
+        fleet = NPEFleet(cfg, HW, overlays=n, shard="tensor", slots=2,
+                         capacity=24, max_new_tokens=6)
+        for i in range(4):
+            fleet.submit(reqs.request(i), eos_id=reqs.eos_id(i))
+        reports[n] = fleet.run().report()
+    assert (reports[4]["service_p50_ms"] < reports[2]["service_p50_ms"]
+            < reports[1]["service_p50_ms"])
+    assert (reports[4]["p50_ms"] < reports[2]["p50_ms"]
+            < reports[1]["p50_ms"])
+
+
+def test_partition_tensor_covers_heads_once_and_syncs():
+    """Per-head work lands on exactly one shard; every shard closes the
+    attention-output / FFN-down / logits boundaries with 2 x rows x
+    (n-1) itemized transfer rows; the critical shard beats the
+    monolithic stream."""
+    from repro.npec.fleet.partition import _HEAD_RE, _KV_RE
+    cfg = _smoke_cfg("bert_base")
+    compiled = npec.compile_decode(cfg, 24, HW, bits=16, batch=2)
+    n = 2
+    plan = partition_tensor(compiled, n)
+    assert plan.overlays == n and plan.rows == 2
+    # attn.out + ffn down per layer, plus the logits all-gather
+    assert plan.boundaries == 2 * cfg.num_layers + 1
+
+    def head_tags(instrs):
+        return sorted(i.tag for i in instrs
+                      if _HEAD_RE.search(i.tag) or _KV_RE.search(i.tag))
+
+    assert (sorted(t for p in plan.shards for t in head_tags(p.instrs))
+            == head_tags(compiled.instrs))
+    for p in plan.shards:
+        assert npec.transfer_cycles(p) == plan.transfer_rows_per_shard
+    assert plan.transfer_rows_per_shard == 2 * 2 * (n - 1) * plan.boundaries
+    mono = npec.schedule_for(compiled, "streaming")["total_cycles"]
+    crit = max(npec.schedule_for(p, "streaming")["total_cycles"]
+               for p in plan.shards)
+    assert crit < mono
+    # n=1 is the identity plan: the very same program, no boundaries
+    one = partition_tensor(compiled, 1)
+    assert one.shards[0] is compiled and one.boundaries == 0
+
+
+def test_tensor_rejects_indivisible_head_counts():
+    cfg = _smoke_cfg("bert_base")
+    compiled = npec.compile_decode(cfg, 24, HW, bits=16, batch=2)
+    with pytest.raises(ValueError, match="head"):
+        partition_tensor(compiled, 3)          # 4 heads across 3 overlays
+    with pytest.raises(ValueError):
+        partition_tensor(compiled, 0)
+    with pytest.raises(ValueError, match="divide"):
+        # the stock smoke shrink keeps 2 kv groups: 2 % 4 != 0
+        NPEFleet(cfg, HW, overlays=4, shard="tensor", slots=2,
+                 capacity=24, max_new_tokens=6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(1, 4),
+       st.integers(1, 12), st.sampled_from([2, 4]))
+def test_tensor_column_shards_reassemble(seed, rows, kmul, m, n):
+    """Property: the column shards `shard_tile` charges reassemble to
+    the unsharded projection exactly — concatenating the per-shard
+    column products gives the full product, and the k-split partial
+    sums all-reduce to it (integer matrices make float matmuls exact)."""
+    from repro.npec.lower import shard_tile
+    rng = np.random.default_rng(seed)
+    k = 2 * n * kmul
+    x = rng.integers(-8, 8, (rows, k)).astype(np.float64)
+    w = rng.integers(-8, 8, (k, m)).astype(np.float64)
+    full = x @ w
+    # column-parallel (axis="m"): balanced split, concat reassembles
+    cols = [shard_tile(HW, rows, k, m, 16, idx=i, of=n, axis="m")["m"]
+            for i in range(n)]
+    assert sum(cols) == m and max(cols) - min(cols) <= 1
+    off, parts = 0, []
+    for c in cols:
+        parts.append(x @ w[:, off:off + c])
+        off += c
+    assert np.array_equal(np.concatenate(parts, axis=1), full)
+    # row-parallel (axis="k"): the partial sums meet in an all-reduce
+    ks = [shard_tile(HW, rows, k, m, 16, idx=i, of=n, axis="k")["k"]
+          for i in range(n)]
+    assert ks == [k // n] * n
+    partials = [x[:, i * (k // n):(i + 1) * (k // n)]
+                @ w[i * (k // n):(i + 1) * (k // n), :] for i in range(n)]
+    assert np.array_equal(sum(partials), full)
+
+
+def test_tensor_latency_drops_in_record():
+    """ISSUE acceptance: at FULL bert_base scale the committed record
+    shows N=2 and N=4 strictly below the N=1 baseline on e2e latency,
+    decode-step cycles AND prefill cycles, with the all-reduce transfer
+    cycles itemized (nonzero, separate fields)."""
+    import json
+    from pathlib import Path
+    rec = json.loads((Path(__file__).parent.parent / "results" /
+                      "npec_tensor_cycles.json").read_text())
+    rows = {r["overlays"]: r for r in rec["rows"]}
+    base = rows[1]
+    assert base["transfer_cycles"] == 0
+    assert base["decode_allreduce_cycles"] == 0
+    for n in (2, 4):
+        r = rows[n]
+        assert r["p50_ms"] < base["p50_ms"]
+        assert r["service_p50_ms"] < base["service_p50_ms"]
+        assert r["decode_step_cycles"] < base["decode_step_cycles"]
+        assert r["prefill_cycles"] < base["prefill_cycles"]
+        assert r["decode_allreduce_cycles"] > 0
+        assert r["prefill_allreduce_cycles"] > 0
+        assert r["transfer_cycles"] > 0
+    assert rows[4]["p50_ms"] < rows[2]["p50_ms"]
+    assert rows[4]["decode_step_cycles"] < rows[2]["decode_step_cycles"]
+
+
+# ---------------------------------------------------------------------------
 # Determinism: same seed + config => byte-identical reports
 # ---------------------------------------------------------------------------
 
@@ -437,6 +653,7 @@ def _fleet_report_json(shard, n, cfg, **kw):
     ("pipeline", 2), ("pipeline", 4),
     ("expert", 1), ("expert", 2), ("expert", 4),
     ("prefill_decode", 2), ("prefill_decode", 4),
+    ("tensor", 1), ("tensor", 2), ("tensor", 4),
 ])
 def test_fleet_report_deterministic_across_runs(shard, n):
     """Same seed + config => byte-identical EngineStats/FleetStats
@@ -448,6 +665,8 @@ def test_fleet_report_deterministic_across_runs(shard, n):
         cfg = _smoke_cfg("bert_base")
         if shard == "pipeline":
             cfg = dataclasses.replace(cfg, num_layers=4)
+        if shard == "tensor":
+            cfg = dataclasses.replace(cfg, num_kv_heads=4)
         kw = dict(slots=2, capacity=24, max_new_tokens=6)
         if shard == "prefill_decode":
             kw.update(prefill_chunk=4, prefill_overlays=1)
@@ -463,3 +682,9 @@ def test_fleet_cycle_record_regression():
     from conftest import assert_cycle_record
     assert_cycle_record("npec_fleet_cycles.json", "npec_fleet_cycles/v1",
                         "npec_fleet")
+
+
+def test_tensor_cycle_record_regression():
+    from conftest import assert_cycle_record
+    assert_cycle_record("npec_tensor_cycles.json",
+                        "npec_tensor_cycles/v1", "npec_tensor")

@@ -2,9 +2,9 @@
 
 Five families:
 
-  * determinism — two identical runs (lone engine AND all four fleet
-    shards) export byte-identical Perfetto JSON: every timestamp is an
-    engine-clock cycle, never wall clock;
+  * determinism — two identical runs (lone engine AND every fleet
+    shard, tensor included) export byte-identical Perfetto JSON: every
+    timestamp is an engine-clock cycle, never wall clock;
   * opt-in invariance — running WITH a tracer changes no report: the
     cycle reports of traced and untraced runs are byte-identical, so
     `--trace` can never perturb the committed records;
@@ -36,7 +36,7 @@ from repro.npec.obs.profile import analyze
 
 HW = NPEHardware(vrwidth=1024)
 
-SHARDS = ("replicate", "pipeline", "expert", "prefill_decode")
+SHARDS = ("replicate", "pipeline", "expert", "prefill_decode", "tensor")
 
 
 def _smoke_cfg(name="bert_base"):
